@@ -1,0 +1,81 @@
+"""Shared helpers for the paper-table benchmarks.
+
+Each fig*.py module reproduces one paper artifact on synthetic data (DESIGN.md
+Sec. 8) at a reduced-but-faithful scale, prints a CSV, and returns a dict of
+headline numbers that ``run.py`` aggregates and asserts the paper's *relative*
+claims on (orderings/monotonicity, not absolute accuracies).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.optim.optimizers import adamw
+
+
+def train_classifier(
+    init_fn, apply_fn, q: QuantConfig, stream, steps: int = 60, lr: float = 5e-3,
+    seed: int = 0, penalty_fn=None, reg_lambda: float = 1e-3, init_params=None,
+    optimizer: str = "adamw",
+):
+    """Generic CE training loop for the vision/classifier benchmarks.
+
+    ``init_params``: start from these (e.g. requantized from a pre-trained
+    float model, the paper's App. B protocol) instead of a fresh init.
+    """
+    key = jax.random.PRNGKey(seed)
+    from repro.nn.module import unbox
+    from repro.optim.optimizers import sgdm
+
+    p = init_params if init_params is not None else unbox(init_fn(key, q))
+    opt = adamw() if optimizer == "adamw" else sgdm(momentum=0.9)
+    state = opt.init(p)
+
+    def loss_fn(p, x, y):
+        logits = apply_fn(p, x, q)
+        onehot = jax.nn.one_hot(y, logits.shape[-1])
+        ce = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+        if penalty_fn is not None:
+            ce = ce + reg_lambda * penalty_fn(p, q)
+        return ce
+
+    @jax.jit
+    def step(p, state, x, y):
+        g = jax.grad(loss_fn)(p, x, y)
+        return opt.update(g, state, p, lr)
+
+    for i in range(steps):
+        b = stream.batch(i)
+        p, state = step(p, state, jnp.asarray(b["x"]), jnp.asarray(b["y"]))
+    return p
+
+
+def accuracy(apply_fn, p, q, stream, batch_idx: int = 10_000) -> float:
+    b = stream.batch(batch_idx)
+    logits = apply_fn(p, jnp.asarray(b["x"]), q)
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(b["y"])))
+
+
+def time_call(fn, *args, repeats: int = 3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def requantized_init(init_fn, float_params, q: QuantConfig, seed: int = 0):
+    """Fresh quantized tree initialized from trained float weights (paper
+    App. B protocol: all QNNs start from converged float counterparts)."""
+    from repro.models.vision import requantize_from_float
+    from repro.nn.module import unbox
+
+    template = unbox(init_fn(jax.random.PRNGKey(seed), q))
+    return requantize_from_float(template, float_params, q)

@@ -1,0 +1,86 @@
+"""Paper Fig. 5: sparsity and relative accuracy vs accumulator width.
+
+Trains A2Q models at decreasing P (M=N fixed) and reports unstructured
+integer-weight sparsity + accuracy relative to the float baseline.  Claims
+validated: sparsity rises monotonically as P falls; relative accuracy stays
+near 1.0 until extreme P.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import accuracy, requantized_init, train_classifier
+from repro.configs.base import QuantConfig
+from repro.core.a2q import a2q_int_weights
+from repro.core.bounds import min_accumulator_bits_data_type
+from repro.data.synthetic import ImageClassStream
+from repro.models.vision import apply_mobilenet_v1, init_mobilenet_v1, vision_penalty
+
+
+def _model_sparsity(params, q: QuantConfig) -> float:
+    zeros = total = 0
+
+    def walk(node):
+        nonlocal zeros, total
+        if isinstance(node, dict):
+            if "v" in node and "t" in node:
+                qi, _ = a2q_int_weights(
+                    {"v": node["v"], "t": node["t"], "d": node["d"]},
+                    q.weight_bits, q.acc_bits, q.act_bits, False,
+                )
+                a = np.asarray(qi)
+                zeros += int((a == 0).sum())
+                total += a.size
+            else:
+                for v in node.values():
+                    walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return zeros / max(total, 1)
+
+
+def run(steps: int = 40, bits: int = 6) -> dict:
+    stream = ImageClassStream(global_batch=64, seed=0)
+    init = lambda k, q: init_mobilenet_v1(k, q, width=0.25)
+
+    # float reference
+    qf = QuantConfig(mode="none")
+    pf = train_classifier(init, apply_mobilenet_v1, qf, stream, steps=steps)
+    ref = accuracy(apply_mobilenet_v1, pf, qf, stream)
+
+    bound = min_accumulator_bits_data_type(256, bits, bits, False)
+    rows = []
+    print(f"float_acc={ref:.4f}  (data-type bound P={bound})")
+    print("P,sparsity,acc,relative")
+    for P in range(bound, bound - 8, -2):
+        q = QuantConfig(mode="a2q", weight_bits=bits, act_bits=bits, acc_bits=P)
+        p = train_classifier(init, apply_mobilenet_v1, q, stream, steps=steps,
+                             penalty_fn=vision_penalty, optimizer="sgdm", lr=1e-2,
+                             init_params=requantized_init(init, pf, q))
+        s = _model_sparsity(p, q)
+        acc = accuracy(apply_mobilenet_v1, p, q, stream)
+        rows.append(dict(P=P, sparsity=s, acc=acc, rel=acc / max(ref, 1e-9)))
+        print(f"{P},{s:.4f},{acc:.4f},{acc/max(ref,1e-9):.4f}")
+
+    sp = [r["sparsity"] for r in rows]
+    return {
+        "rows": rows,
+        "float_acc": ref,
+        "sparsity_monotone_up": all(b >= a - 0.02 for a, b in zip(sp, sp[1:])),
+        "max_sparsity": max(sp),
+        "rel_acc_at_P16_band": rows[0]["rel"],
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    a = ap.parse_args()
+    out = run(a.steps)
+    print({k: v for k, v in out.items() if k != "rows"})

@@ -1,0 +1,160 @@
+"""Paper Fig. 6/7: LUT-utilization vs accuracy under four HW-SW co-design
+settings (Sec. 5.3), using the analytical FINN cost model:
+
+  1. baseline QAT, fixed 32-bit accumulators,
+  2. baseline QAT, per-layer P from the data-type bound (Eq. 8),
+  3. baseline QAT, post-training minimization of P from weights (Eq. 13),
+  4. A2Q trained at target P.
+
+Plus the Fig. 7 compute/memory breakdown for the A2Q frontier.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import accuracy, requantized_init, train_classifier
+from repro.configs.base import QuantConfig
+from repro.core.a2q import a2q_int_weights
+from repro.core.bounds import (
+    min_accumulator_bits_data_type,
+    min_accumulator_bits_weights,
+)
+from repro.core.lut import LayerGeometry, model_luts
+from repro.core.quantizers import weight_qat_int
+from repro.data.synthetic import ImageClassStream
+from repro.models.vision import (
+    apply_mobilenet_v1,
+    init_mobilenet_v1,
+    layer_geometries,
+    vision_penalty,
+)
+
+
+def _geoms_with_P(params, q, policy: str):
+    """Per-layer geometries with the accumulator width set by the policy."""
+    geoms = layer_geometries(params, q)
+    out = []
+    for g in geoms:
+        if policy == "fixed32":
+            P = 32
+        elif policy == "dtype":
+            P = min_accumulator_bits_data_type(g.k, q.act_bits, q.weight_bits, False)
+        elif policy in ("ptm", "a2q"):
+            P = g.acc_bits  # filled by caller per layer below
+        out.append(LayerGeometry(**{**g.__dict__, "acc_bits": P}))
+    return out
+
+
+def _ptm_geoms(params, q):
+    """Post-training minimization: per-layer P from the trained weights' l1."""
+    geoms = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and "wq" in node:
+                qi, _ = weight_qat_int({"log2_scale": node["wq"]["log2_scale"]}, node["w"], q.weight_bits)
+                a = np.asarray(qi)
+                a2 = a.reshape(-1, a.shape[-1])
+                l1max = float(np.abs(a2).sum(0).max())
+                P = min_accumulator_bits_weights(l1max, q.act_bits, False)
+                geoms.append((a2.shape[0], a2.shape[1], P, float((a2 == 0).mean())))
+            else:
+                for v in node.values():
+                    walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return geoms
+
+
+def run(steps: int = 40) -> dict:
+    stream = ImageClassStream(global_batch=64, seed=0)
+    init = lambda k, q: init_mobilenet_v1(k, q, width=0.25)
+
+    # App. B: every QNN starts from a converged float model
+    p_float = train_classifier(init, apply_mobilenet_v1, QuantConfig(mode="none"),
+                               stream, steps=steps)
+
+    rows = []
+    print("setting,bits,P_policy,luts,acc")
+    for bits in (5, 6, 8):  # the paper's 5-8 bit design space (Sec. 5.1)
+        qb = QuantConfig(mode="qat", weight_bits=bits, act_bits=bits, acc_bits=32)
+        pb = train_classifier(init, apply_mobilenet_v1, qb, stream, steps=steps,
+                              init_params=requantized_init(init, p_float, qb))
+        acc_b = accuracy(apply_mobilenet_v1, pb, qb, stream)
+
+        # setting 1: fixed 32b
+        luts = model_luts(_geoms_with_P(pb, qb, "fixed32"))["total"]
+        rows.append(dict(setting="fixed32", bits=bits, luts=luts, acc=acc_b))
+        print(f"fixed32,{bits},32,{luts:.0f},{acc_b:.4f}")
+
+        # setting 2: per-layer data-type bound
+        luts = model_luts(_geoms_with_P(pb, qb, "dtype"))["total"]
+        rows.append(dict(setting="dtype", bits=bits, luts=luts, acc=acc_b))
+        print(f"dtype,{bits},bound,{luts:.0f},{acc_b:.4f}")
+
+        # setting 3: post-training minimization from trained weights (Eq. 13)
+        ptm = _ptm_geoms(pb, qb)
+        geoms = [
+            LayerGeometry(k=k, c_out=c, macs=k * c, weight_bits=bits, input_bits=bits,
+                          output_bits=bits, acc_bits=P, sparsity=sp)
+            for k, c, P, sp in ptm
+        ]
+        luts = model_luts(geoms)["total"]
+        rows.append(dict(setting="ptm", bits=bits, luts=luts, acc=acc_b))
+        print(f"ptm,{bits},weights,{luts:.0f},{acc_b:.4f}")
+
+        # setting 4: A2Q at reduced target P
+        bound = min_accumulator_bits_data_type(256, bits, bits, False)
+        for P in (bound - 2, bound - 4):
+            qa = QuantConfig(mode="a2q", weight_bits=bits, act_bits=bits, acc_bits=P)
+            pa = train_classifier(init, apply_mobilenet_v1, qa, stream, steps=steps,
+                                  penalty_fn=vision_penalty, optimizer="sgdm", lr=1e-2,
+                                  init_params=requantized_init(init, p_float, qa))
+            acc_a = accuracy(apply_mobilenet_v1, pa, qa, stream)
+            ga = layer_geometries(pa, qa)
+            luts = model_luts(ga)["total"]
+            breakdown = model_luts(ga)
+            rows.append(dict(setting="a2q", bits=bits, luts=luts, acc=acc_a,
+                             compute=breakdown["compute"],
+                             mem=breakdown["weight_mem"] + breakdown["threshold_mem"]))
+            print(f"a2q,{bits},{P},{luts:.0f},{acc_a:.4f}")
+
+    def frontier(setting):
+        pts = sorted(((r["luts"], r["acc"]) for r in rows if r["setting"] == setting))
+        return pts
+
+    # A2Q dominance: for the best baseline point, some A2Q point has <= LUTs
+    # and accuracy within noise
+    best = {}
+    for s in ("fixed32", "dtype", "ptm", "a2q"):
+        pts = frontier(s)
+        best[s] = pts
+    a2q_pts = best["a2q"]
+    dominated = all(
+        any(la <= lb * 1.02 and aa >= ab - 0.05 for la, aa in a2q_pts)
+        for lb, ab in best["fixed32"]
+    )
+    order_ok = (
+        min(l for l, _ in best["dtype"]) <= min(l for l, _ in best["fixed32"])
+        and min(l for l, _ in best["ptm"]) <= min(l for l, _ in best["dtype"]) * 1.05
+    )
+    return {
+        "rows": rows,
+        "a2q_dominates_fixed32": dominated,
+        "bound_ordering_ok": order_ok,
+        "min_luts": {s: min(l for l, _ in pts) for s, pts in best.items()},
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    a = ap.parse_args()
+    out = run(a.steps)
+    print({k: v for k, v in out.items() if k != "rows"})

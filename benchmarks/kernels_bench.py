@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks (interpret-mode wall time is NOT TPU-meaningful; the
+derived column is the oracle-vs-kernel agreement + the VMEM working-set bytes
+each BlockSpec claims, which is the structural number that matters off-TPU)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import ops, ref
+from repro.roofline import hw
+
+
+def _vmem_claim(*block_shapes_dtypes) -> int:
+    total = 0
+    for shape, dtype in block_shapes_dtypes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * jnp.dtype(dtype).itemsize
+    return total
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    rows = []
+    print("name,us_per_call,derived")
+
+    # int_matmul: VMEM claim for the (128, 128, 512) tiling
+    x = jnp.asarray(rng.integers(-128, 128, (256, 1024)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (1024, 256)), jnp.int8)
+    us = time_call(lambda: ops.int_matmul(x, w, block_m=128, block_n=128, block_k=512))
+    vm = _vmem_claim(((128, 512), jnp.int8), ((512, 128), jnp.int8), ((128, 128), jnp.int32))
+    ok = bool((ops.int_matmul(x, w) == ref.ref_int_matmul(x, w)).all())
+    print(f"int_matmul_256x1024x256,{us:.1f},vmem={vm}B fits={vm < hw.VMEM_BYTES} exact={ok}")
+    rows.append(dict(name="int_matmul", vmem=vm, ok=ok))
+
+    # int16 spill halves the accumulator scratch
+    vm16 = _vmem_claim(((128, 512), jnp.int8), ((512, 128), jnp.int8), ((128, 128), jnp.int16))
+    print(f"int_matmul_int16_spill,0.0,scratch {vm - vm16} bytes saved per tile")
+    rows.append(dict(name="int16_spill", saved=vm - vm16))
+
+    # a2q_quantize fused kernel
+    v = jnp.asarray(rng.normal(size=(2048, 512)), jnp.float32)
+    t = jnp.asarray(rng.normal(size=(512,)) + 3, jnp.float32)
+    d = jnp.asarray(rng.normal(size=(512,)) - 6, jnp.float32)
+    us = time_call(lambda: ops.a2q_quantize(v, t, d, weight_bits=8, acc_bits=16,
+                                            input_bits=8, input_signed=False))
+    vm = _vmem_claim(((512, 256), jnp.float32), ((1, 256), jnp.float32), ((512, 256), jnp.float32),
+                     ((512, 256), jnp.int8))
+    print(f"a2q_quantize_2048x512,{us:.1f},vmem={vm}B fits={vm < hw.VMEM_BYTES}")
+    rows.append(dict(name="a2q_quantize", vmem=vm))
+
+    # flash attention working set
+    q = jnp.asarray(rng.normal(size=(2, 4, 256, 64)), jnp.float32)
+    us = time_call(lambda: ops.flash_attention(q, q, q, block_q=64, block_k=64))
+    vm = _vmem_claim(((64, 64), jnp.float32), ((64, 64), jnp.float32), ((64, 64), jnp.float32),
+                     ((64, 1), jnp.float32), ((64, 1), jnp.float32), ((64, 64), jnp.float32))
+    print(f"flash_attention_256,{us:.1f},vmem={vm}B (vs dense scores {256*256*4}B/row-block)")
+    rows.append(dict(name="flash", vmem=vm))
+
+    # rwkv6 scan state residency
+    r = jnp.asarray(rng.normal(size=(4, 64, 64)), jnp.float32)
+    wdecay = jnp.asarray(rng.uniform(0.9, 0.999, size=(4, 64, 64)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    us = time_call(
+        lambda: ops.rwkv6_scan(r[:, None].reshape(1, 4, 64, 64), r.reshape(1, 4, 64, 64),
+                               r.reshape(1, 4, 64, 64), wdecay.reshape(1, 4, 64, 64), u, chunk=16)
+    )
+    vm = _vmem_claim(((64, 64), jnp.float32))
+    print(f"rwkv6_scan_T64,{us:.1f},state_vmem={vm}B O(1)-in-T")
+    rows.append(dict(name="rwkv6", vmem=vm))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints each module's CSV, then a claims summary asserting the paper's
+*relative* claims hold on the synthetic stand-in data (DESIGN.md Sec. 8):
+
+  Fig 2: wraparound collapses below the bound; A2Q holds accuracy; overflow
+         rate grows as P shrinks; A2Q overflow events == 0.
+  Fig 3: the weight-norm bound is always at least as tight as the data-type
+         bound.
+  Fig 4: A2Q extends the accumulator Pareto frontier left of what baseline
+         QAT can reach, and dominates it.
+  Fig 5: sparsity rises monotonically as P falls.
+  Fig 6: LUT ordering fixed32 >= dtype-bound >= PTM; A2Q dominates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer training steps")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    steps = 25 if args.fast else 40
+    fig2_steps = 40 if args.fast else 60
+
+    from benchmarks import bounds_table, fig2_overflow, fig4_pareto, fig5_sparsity, fig6_resources, kernels_bench
+
+    t0 = time.time()
+    results = {}
+    print("=" * 72)
+    print("fig2_overflow (paper Fig. 2 / App. A)")
+    print("=" * 72)
+    results["fig2"] = fig2_overflow.run(steps=fig2_steps, reorder=True)
+
+    print("=" * 72)
+    print("bounds_table (paper Fig. 3)")
+    print("=" * 72)
+    results["fig3"] = bounds_table.run(samples=300 if args.fast else 1000)
+
+    print("=" * 72)
+    print("fig4_pareto (paper Fig. 4)")
+    print("=" * 72)
+    results["fig4"] = fig4_pareto.run(steps=steps)
+
+    print("=" * 72)
+    print("fig5_sparsity (paper Fig. 5)")
+    print("=" * 72)
+    results["fig5"] = fig5_sparsity.run(steps=steps)
+
+    print("=" * 72)
+    print("fig6_resources (paper Fig. 6/7)")
+    print("=" * 72)
+    results["fig6"] = fig6_resources.run(steps=steps)
+
+    print("=" * 72)
+    print("kernel microbenches")
+    print("=" * 72)
+    results["kernels"] = kernels_bench.run()
+
+    claims = {
+        "fig2_wrap_collapses": results["fig2"]["wrap_collapses"],
+        "fig2_a2q_holds_accuracy": results["fig2"]["a2q_holds"],
+        "fig2_a2q_beats_wrap_at_low_P": results["fig2"]["a2q_beats_wrap_at_low_P"],
+        "fig2_reorder_nondeterministic_under_saturation": not results["fig2"]["reorder_audit"]["order_invariant"],
+        "fig3_weight_bound_tighter": results["fig3"]["weight_bound_always_tighter"],
+        "fig4_a2q_extends_pareto": results["fig4"]["a2q_extends_pareto_left"],
+        "fig4_a2q_dominates": results["fig4"]["a2q_dominates"],
+        "fig5_sparsity_monotone": results["fig5"]["sparsity_monotone_up"],
+        "fig6_bound_ordering": results["fig6"]["bound_ordering_ok"],
+        "fig6_a2q_dominates_fixed32": results["fig6"]["a2q_dominates_fixed32"],
+    }
+    print("=" * 72)
+    print("PAPER CLAIMS SUMMARY")
+    print("=" * 72)
+    failed = []
+    for k, v in claims.items():
+        print(f"{'PASS' if v else 'FAIL'}  {k}")
+        if not v:
+            failed.append(k)
+    print(f"total {time.time()-t0:.0f}s")
+    if args.json_out:
+        slim = {k: {kk: vv for kk, vv in v.items() if kk != "rows"} for k, v in results.items()}
+        with open(args.json_out, "w") as f:
+            json.dump({"claims": claims, "results": slim}, f, indent=1, default=str)
+    if failed:
+        print(f"FAILED claims: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,14 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ArchConfig,
+    AttnConfig,
+    FrontendConfig,
+    MoEConfig,
+    QuantConfig,
+    SSMConfig,
+    ShapeSpec,
+    StackConfig,
+    applicable_shapes,
+    input_specs,
+)
+from repro.configs.registry import ARCH_NAMES, get_arch, reduced  # noqa: F401

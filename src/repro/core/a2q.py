@@ -1,0 +1,172 @@
+"""A2Q: accumulator-aware quantization (paper Section 4, Eq. 16-23).
+
+The weight quantizer is reparameterized with l1 weight normalization::
+
+    w_i = g_i * v_i / ||v_i||_1        (per output channel i, Eq. 17)
+
+with exponential parameterizations ``s = 2**d`` (scale) and ``g = 2**min(T, t)``
+(norm), where ``d`` and ``t`` are learned log-scale parameters and
+
+    T = 1_signed(x) + log2(2**(P-1) - 1) + d - N                      (Eq. 23)
+
+caps the learned norm so the *integer* weights provably satisfy the per-channel
+l1 budget (Eq. 15)::
+
+    ||w_int||_1 <= (2**(P-1) - 1) * 2**(1_signed(x) - N)
+
+Rounding is toward zero (truncation) so rounding can never push the integer l1
+norm past the budget; clipping can only shrink magnitudes further.  Hence every
+dot product against N-bit inputs — including every intermediate partial sum, in
+any order — fits a P-bit signed accumulator.  ``tests/test_a2q.py`` proves this
+property with hypothesis + the bit-exact integer simulator.
+
+The regularizer ``L_reg = sum_l sum_i max(t_i - T_i, 0)`` keeps ``t`` from
+getting stuck above the cap (paper Sec. 4.1); weight it by lambda=1e-3 as in
+Appendix B.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.bounds import int_range
+from repro.core.quantizers import ste_round_to_zero
+
+__all__ = [
+    "a2q_norm_cap",
+    "init_a2q",
+    "apply_a2q",
+    "a2q_int_weights",
+    "a2q_penalty",
+    "a2q_channel_l1",
+]
+
+_EPS = 1e-12
+
+
+def a2q_norm_cap(d: jnp.ndarray, acc_bits: int, input_bits: int, input_signed: bool) -> jnp.ndarray:
+    """Eq. 23: ``T = 1_signed(x) + log2(2**(P-1) - 1) + d - N`` (per channel)."""
+    log2_amax = jnp.log2(jnp.asarray(2.0 ** (acc_bits - 1) - 1.0, dtype=d.dtype))
+    return int(input_signed) + log2_amax + d - input_bits
+
+
+def _channel_reduce(w: jnp.ndarray, op) -> jnp.ndarray:
+    axes = tuple(range(w.ndim - 1))
+    return op(w, axis=axes)
+
+
+def init_a2q(
+    w: jnp.ndarray,
+    bits: int,
+    acc_bits: int,
+    input_bits: int,
+    input_signed: bool,
+) -> dict:
+    """Initialize (v, t, d) from a float weight tensor.
+
+    Convention: the *last* axis of ``w`` is the output-channel axis (matmul
+    weights are stored ``(K, C_out)``; convs ``(kh, kw, C_in, C_out)``), so each
+    output channel — each accumulator — is a column.
+
+    * ``v`` starts at the float weights (direction) — *concentrated* when the
+      integer budget is tighter than the fan-in (see below),
+    * ``d`` = log2(max-abs / (2**(M-1)-1)) as in baseline QAT max-abs calibration,
+    * ``t`` = log2(||w||_1) per channel, pre-clamped to the cap ``T`` so the
+      budget holds from step zero.
+
+    Concentration init (ours, beyond the paper): the Eq. 15 budget allows at
+    most ``B = (2**(P-1)-1) * 2**(1_signed-N)`` integer units of l1 per
+    channel, so when ``B < K`` at most ``floor(B)`` weights can be nonzero at
+    all.  A diffuse init spreads ``g`` so thin that *every* weight truncates
+    to zero and the layer is born dead (round-to-zero never recovers fast —
+    the paper's Sec. 6 rounding caveat).  Keeping only the top-``floor(B)``
+    magnitudes per channel at init matches the representable set exactly and
+    keeps the layer alive at aggressive (P, N, K) combinations.
+    """
+    pmax = float(2 ** (bits - 1) - 1)
+    K = int(np.prod(w.shape[:-1]))
+    budget = (2.0 ** (acc_bits - 1) - 1.0) * 2.0 ** (int(input_signed) - input_bits)
+    m = int(budget)
+    if 0 < m < K:
+        flat = jnp.abs(w.reshape(K, w.shape[-1]))
+        kth = -jnp.sort(-flat, axis=0)[m - 1]  # m-th largest |w| per channel
+        keep = flat >= jnp.maximum(kth, 1e-12)[None, :]
+        w = (w.reshape(K, -1) * keep).reshape(w.shape)
+    absmax = jnp.maximum(_channel_reduce(jnp.abs(w), jnp.max), 1e-8)
+    l1 = jnp.maximum(_channel_reduce(jnp.abs(w), jnp.sum), 1e-8)
+    d = jnp.log2(absmax / pmax).astype(jnp.float32)
+    T = a2q_norm_cap(d, acc_bits, input_bits, input_signed)
+    t = jnp.minimum(jnp.log2(l1).astype(jnp.float32), T)
+    return {"v": w.astype(jnp.float32), "t": t, "d": d}
+
+
+def _effective_gs(params: dict, acc_bits: int, input_bits: int, input_signed: bool):
+    """(g/s ratio, s) with the norm cap applied — shared by train + int paths."""
+    d = params["d"]
+    t = params["t"]
+    T = a2q_norm_cap(d, acc_bits, input_bits, input_signed)
+    t_eff = jnp.minimum(t, T)  # g = 2**min(t, T)   (Eq. 22)
+    s = jnp.exp2(d)
+    g_over_s = jnp.exp2(t_eff - d)  # computed in log space: exact powers of 2
+    return g_over_s, s
+
+
+def apply_a2q(
+    params: dict,
+    bits: int,
+    acc_bits: int,
+    input_bits: int,
+    input_signed: bool,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Eq. 20: ``q(w; s) = clip(rtz(g/s * v/||v||_1); n, p) * s`` (fake-quant).
+
+    Returns the dequantized (float) weights used by the training graph.  STE
+    through rtz, clipped-STE through clip, gradients reach v, t, d.
+    """
+    v = params["v"]
+    n, p = int_range(bits, signed=True)
+    g_over_s, s = _effective_gs(params, acc_bits, input_bits, input_signed)
+    l1_v = jnp.maximum(_channel_reduce(jnp.abs(v), jnp.sum), _EPS)
+    w_scaled = g_over_s * v / l1_v
+    q = jnp.clip(ste_round_to_zero(w_scaled), n, p)
+    return (q * s).astype(dtype)
+
+
+def a2q_int_weights(
+    params: dict,
+    bits: int,
+    acc_bits: int,
+    input_bits: int,
+    input_signed: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(integer weights, per-channel scale) — the deployable artifacts.
+
+    ``||w_int||_1 <= g/s <= (2**(P-1)-1) * 2**(1_signed - N)`` by construction.
+    """
+    v = params["v"]
+    n, p = int_range(bits, signed=True)
+    g_over_s, s = _effective_gs(params, acc_bits, input_bits, input_signed)
+    l1_v = jnp.maximum(_channel_reduce(jnp.abs(v), jnp.sum), _EPS)
+    q = jnp.clip(jnp.trunc(g_over_s * v / l1_v), n, p)
+    return q, s
+
+
+def a2q_penalty(params: dict, acc_bits: int, input_bits: int, input_signed: bool) -> jnp.ndarray:
+    """Per-layer regularizer ``R_l = sum_i max(t_i - T_i, 0)`` (Sec. 4.1)."""
+    T = a2q_norm_cap(params["d"], acc_bits, input_bits, input_signed)
+    return jnp.sum(jnp.maximum(params["t"] - T, 0.0))
+
+
+def a2q_channel_l1(
+    params: dict,
+    bits: int,
+    acc_bits: int,
+    input_bits: int,
+    input_signed: bool,
+) -> jnp.ndarray:
+    """Per-channel l1 norm of the *integer* weights (for audits / fig5)."""
+    q, _ = a2q_int_weights(params, bits, acc_bits, input_bits, input_signed)
+    return _channel_reduce(jnp.abs(q), jnp.sum)

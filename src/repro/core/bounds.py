@@ -1,0 +1,148 @@
+"""Accumulator bit-width bounds from the A2Q paper (Section 3).
+
+Two lower bounds on the signed accumulator bit width ``P`` required to
+guarantee that the dot product ``y = sum_i x_i * w_i`` — *including every
+intermediate partial sum, in any accumulation order* — fits without overflow:
+
+* **Data-type bound** (Eq. 8-10): uses only the bit widths ``(K, N, M)``.
+* **Weight-norm bound** (Eq. 12-14): uses the frozen weights' l1 norm —
+  strictly tighter, and the bound A2Q inverts into a training constraint.
+
+Both are exact transcriptions of the paper's equations.  All functions work on
+python scalars, numpy arrays, and jnp arrays (they only use ``log2``/``ceil``
+style primitives), so they are usable inside jitted training code *and* in
+offline design-space exploration (benchmarks/fig3-style tables).
+
+Conventions (paper Section 2.1):
+  signed integers of bit width b:  n = -2**(b-1),  p = 2**(b-1) - 1
+  unsigned integers of bit width b: n = 0,          p = 2**b - 1
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+Arrayish = Union[float, int, np.ndarray, jnp.ndarray]
+
+__all__ = [
+    "int_range",
+    "phi",
+    "alpha_term",
+    "beta_term",
+    "data_type_bound",
+    "weight_norm_bound",
+    "l1_budget",
+    "min_accumulator_bits_data_type",
+    "min_accumulator_bits_weights",
+]
+
+
+def int_range(bits: int, signed: bool) -> tuple[int, int]:
+    """(n, p) clipping range for a ``bits``-wide integer (paper Sec. 2.1)."""
+    if bits <= 0:
+        raise ValueError(f"bit width must be positive, got {bits}")
+    if signed:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+def phi(x: Arrayish):
+    """``phi(a) = log2(1 + 2**-a)`` — Eq. 10 / Eq. 14 correction term.
+
+    Uses log1p for numerical stability at large ``a`` (2**-a underflows to 0,
+    log1p(0) = 0 which is the correct limit).
+    """
+    xn = jnp.asarray(x, dtype=jnp.float64) if _wants_jnp(x) else np.asarray(x, dtype=np.float64)
+    mod = jnp if _wants_jnp(x) else np
+    return mod.log1p(mod.exp2(-xn)) / math.log(2.0)
+
+
+def _wants_jnp(x) -> bool:
+    return isinstance(x, jnp.ndarray) and not isinstance(x, np.ndarray)
+
+
+def alpha_term(K: Arrayish, N: int, M: int, signed_input: bool):
+    """Eq. 9: ``alpha = log2(K) + N + M - 1 - 1_signed(x)``."""
+    mod = jnp if _wants_jnp(K) else np
+    return mod.log2(mod.asarray(K, dtype=mod.float64)) + N + M - 1 - int(signed_input)
+
+
+def beta_term(l1_norm: Arrayish, N: int, signed_input: bool):
+    """Eq. 13: ``beta = log2(||w||_1) + N - 1_signed(x)``."""
+    mod = jnp if _wants_jnp(l1_norm) else np
+    l1 = mod.asarray(l1_norm, dtype=mod.float64)
+    return mod.log2(l1) + N - int(signed_input)
+
+
+def data_type_bound(K: Arrayish, N: int, M: int, signed_input: bool):
+    """Eq. 8: real-valued lower bound ``P >= alpha + phi(alpha) + 1``.
+
+    Args:
+      K: dot-product length (may be an array for vectorized tables).
+      N: input (activation) bit width.
+      M: weight bit width.
+      signed_input: whether the inputs are signed integers.
+    """
+    a = alpha_term(K, N, M, signed_input)
+    return a + phi(a) + 1.0
+
+
+def weight_norm_bound(l1_norm: Arrayish, N: int, signed_input: bool):
+    """Eq. 12: real-valued lower bound ``P >= beta + phi(beta) + 1``.
+
+    ``l1_norm`` is the l1 norm of the *integer* weights of one output channel
+    (i.e. ``||w_int||_1``; if weights are stored dequantized, divide by the
+    channel scale first).
+    """
+    b = beta_term(l1_norm, N, signed_input)
+    return b + phi(b) + 1.0
+
+
+# At an exact power-of-two boundary (e.g. ||w||_1 == the Eq. 15 budget) the
+# real-valued bound equals the integer P exactly; float64 rounding can land
+# epsilon above it and ceil one bit too high.
+_CEIL_EPS = 1e-9
+
+
+def min_accumulator_bits_data_type(K: int, N: int, M: int, signed_input: bool) -> int:
+    """Smallest integer P satisfying the data-type bound (Eq. 8)."""
+    return int(math.ceil(float(data_type_bound(K, N, M, signed_input)) - _CEIL_EPS))
+
+
+def min_accumulator_bits_weights(l1_norm: float, N: int, signed_input: bool) -> int:
+    """Smallest integer P satisfying the weight-norm bound (Eq. 12).
+
+    A zero-l1 channel (fully sparse) still needs the minimum signed register.
+    """
+    if l1_norm <= 0:
+        return 2  # a signed accumulator cannot be narrower than 2 bits
+    return max(2, int(math.ceil(float(weight_norm_bound(l1_norm, N, signed_input)) - _CEIL_EPS)))
+
+
+def l1_budget(P: int, N: int, signed_input: bool):
+    """Eq. 15: per-channel budget ``||w||_1 <= (2**(P-1) - 1) * 2**(1_signed - N)``.
+
+    This is the *inverse* of the weight-norm bound: the largest integer-weight
+    l1 norm (scaled by the weight scale ``s`` if weights are dequantized) that
+    a ``P``-bit signed accumulator can absorb for ``N``-bit inputs.
+
+    Returned as a float (it can be fractional for unsigned inputs with N > 1).
+    """
+    if P < 2:
+        raise ValueError(f"accumulator width must be >= 2 bits, got P={P}")
+    return float(2 ** (P - 1) - 1) * 2.0 ** (int(signed_input) - N)
+
+
+def verify_no_overflow(weights_int: np.ndarray, N: int, signed_input: bool, P: int) -> bool:
+    """Check Eq. 11 for a (C_out, K) integer weight matrix: True iff a P-bit
+    signed accumulator provably cannot overflow for *any* N-bit input."""
+    w = np.asarray(weights_int, dtype=np.float64)
+    if w.ndim == 1:
+        w = w[None, :]
+    l1 = np.abs(w).sum(axis=-1)
+    worst = l1 * 2.0 ** (N - int(signed_input))
+    return bool(np.all(worst <= 2 ** (P - 1) - 1))

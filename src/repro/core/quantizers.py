@@ -1,0 +1,135 @@
+"""Baseline quantization-aware-training (QAT) operators — paper Section 2.1.
+
+Implements the standard uniform affine quantize/dequantize pipeline used by the
+paper's *baseline* QAT algorithm (the thing A2Q is compared against), plus the
+shared primitives A2Q builds on:
+
+* straight-through-estimator rounding (half-way and round-toward-zero),
+* per-channel / per-tensor scales, exponentially parameterized ``s = 2**d``
+  with ``d`` learned by SGD (paper Sec. 4.1, following Jain et al.),
+* weight quantizers with ``z = 0`` (paper convention), activation quantizers
+  signed or unsigned depending on the preceding nonlinearity.
+
+Everything is a pure function over explicit parameter pytrees so it composes
+with pjit/shard_map and ``jax.lax.scan`` over layers.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bounds import int_range
+
+RoundMode = Literal["nearest", "to_zero"]
+
+__all__ = [
+    "ste_round",
+    "ste_round_to_zero",
+    "fake_quant",
+    "init_weight_qat",
+    "apply_weight_qat",
+    "weight_qat_int",
+    "init_act_quant",
+    "apply_act_quant",
+    "act_quant_int",
+]
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Half-way rounding with a straight-through gradient (grad == 1)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def ste_round_to_zero(x: jnp.ndarray) -> jnp.ndarray:
+    """Round toward zero (truncate) with a straight-through gradient.
+
+    A2Q's rounding mode: truncation can only *shrink* magnitudes, so the
+    integer l1 norm can never round upward past the accumulator budget
+    (paper Sec. 4.1, footnote 2).
+    """
+    return x + jax.lax.stop_gradient(jnp.trunc(x) - x)
+
+
+_ROUND = {"nearest": ste_round, "to_zero": ste_round_to_zero}
+
+
+def fake_quant(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int,
+    signed: bool,
+    round_mode: RoundMode = "nearest",
+) -> jnp.ndarray:
+    """quantize (Eq. 1, z=0) then dequantize (Eq. 2): clip(round(x/s)) * s.
+
+    Gradients: STE through the rounding, clipped-STE through the clip (zero
+    outside the representable range), and LSQ-style gradients w.r.t. ``scale``
+    through both the division and the final multiply.
+    """
+    n, p = int_range(bits, signed)
+    q = jnp.clip(_ROUND[round_mode](x / scale), n, p)
+    return q * scale
+
+
+# ---------------------------------------------------------------------------
+# Weight quantizer (per-channel, z = 0, learned log2 scale)
+# ---------------------------------------------------------------------------
+
+
+def _channel_reduce(w: jnp.ndarray, op) -> jnp.ndarray:
+    """Reduce every axis except the last (output-channel) axis."""
+    axes = tuple(range(w.ndim - 1))
+    return op(w, axis=axes)
+
+
+def init_weight_qat(w: jnp.ndarray, bits: int, per_channel: bool = True) -> dict:
+    """Calibrate the learned log2-scale from the float weights (max-abs init)."""
+    _, p = int_range(bits, signed=True)
+    if per_channel:
+        absmax = _channel_reduce(jnp.abs(w), jnp.max)
+    else:
+        absmax = jnp.max(jnp.abs(w))
+    absmax = jnp.maximum(absmax, 1e-8)
+    return {"log2_scale": jnp.log2(absmax / p).astype(jnp.float32)}
+
+
+def apply_weight_qat(params: dict, w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quantized weights (float domain). Weights are always signed, z=0."""
+    scale = jnp.exp2(params["log2_scale"].astype(w.dtype))
+    return fake_quant(w, scale, bits, signed=True, round_mode="nearest")
+
+
+def weight_qat_int(params: dict, w: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(integer weights, per-channel scale) — the inference-time artifacts."""
+    scale = jnp.exp2(params["log2_scale"].astype(w.dtype))
+    n, p = int_range(bits, signed=True)
+    q = jnp.clip(jnp.round(w / scale), n, p)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Activation quantizer (per-tensor, learned log2 scale)
+# ---------------------------------------------------------------------------
+
+
+def init_act_quant(bits: int, signed: bool, init_absmax: float = 6.0) -> dict:
+    """Per-tensor learned log2 scale. ``init_absmax`` approximates the dynamic
+    range after the preceding nonlinearity (6.0 suits ReLU-family nets)."""
+    _, p = int_range(bits, signed)
+    return {"log2_scale": jnp.asarray(jnp.log2(init_absmax / p), dtype=jnp.float32)}
+
+
+def apply_act_quant(params: dict, x: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    scale = jnp.exp2(params["log2_scale"].astype(x.dtype))
+    return fake_quant(x, scale, bits, signed=signed, round_mode="nearest")
+
+
+def act_quant_int(params: dict, x: jnp.ndarray, bits: int, signed: bool) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(integer activations, scale) for integer-exact inference simulation."""
+    scale = jnp.exp2(params["log2_scale"].astype(x.dtype))
+    n, p = int_range(bits, signed)
+    q = jnp.clip(jnp.round(x / scale), n, p)
+    return q, scale

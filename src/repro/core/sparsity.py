@@ -1,0 +1,60 @@
+"""Weight-sparsity accounting (paper Sec. 5.2.1 / Fig. 5).
+
+A2Q's l1 budget tightens exponentially as the accumulator width P shrinks
+(Eq. 15/18/23), which drives unstructured sparsity in the *integer* weights —
+the quantity that matters for deployment (zero integer weights are skippable
+MACs and compressible memory).  These helpers measure it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["tensor_sparsity", "tree_sparsity", "pack_sparse_count"]
+
+
+def tensor_sparsity(w_int: jnp.ndarray) -> float:
+    """Fraction of exactly-zero entries in an integer weight tensor."""
+    w = np.asarray(w_int)
+    if w.size == 0:
+        return 0.0
+    return float(np.mean(w == 0))
+
+
+def tree_sparsity(int_weight_tree) -> dict:
+    """Aggregate sparsity over a pytree of integer weight tensors.
+
+    Returns overall sparsity plus per-leaf breakdown keyed by tree path.
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(int_weight_tree)[0]
+    per_leaf = {}
+    zeros = 0
+    total = 0
+    for path, leaf in leaves_with_paths:
+        leaf = np.asarray(leaf)
+        name = jax.tree_util.keystr(path)
+        z = int(np.sum(leaf == 0))
+        per_leaf[name] = z / max(leaf.size, 1)
+        zeros += z
+        total += leaf.size
+    return {"overall": zeros / max(total, 1), "per_leaf": per_leaf, "params": total}
+
+
+def pack_sparse_count(w_int: np.ndarray) -> dict:
+    """Size accounting for a CSR-style packing of an integer weight matrix —
+    the memory-roofline payoff of A2Q sparsity (Sec. 6 'Discussion')."""
+    w = np.asarray(w_int)
+    nnz = int(np.count_nonzero(w))
+    dense_bits = w.size * 8  # int8 storage
+    # values (8b) + column indices (16b suffices for K <= 65536) + row pointers
+    packed_bits = nnz * (8 + 16) + (w.shape[0] + 1 if w.ndim > 1 else 2) * 32
+    return {
+        "nnz": nnz,
+        "dense_bytes": dense_bits // 8,
+        "packed_bytes": packed_bits // 8,
+        "compression": dense_bits / max(packed_bits, 1),
+    }

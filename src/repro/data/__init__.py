@@ -1,0 +1,1 @@
+from repro.data.synthetic import BinaryMnistStream, ImageClassStream, SuperResStream, TokenStream, shard  # noqa: F401

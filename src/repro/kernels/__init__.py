@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots, with jit'd
+wrappers (ops.py) and pure-jnp oracles (ref.py).  Layers import from ops."""
+
+from repro.kernels.ops import a2q_quantize, flash_attention, int_matmul, rwkv6_scan  # noqa: F401

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: tiled int8 x int8 -> int32 matmul with accumulator
+bit-width emulation and an A2Q-enabled int16 partial-sum spill path.
+
+TPU adaptation of the paper's FPGA payoff (DESIGN.md Sec. 2): on FINN
+accelerators a small accumulator shrinks the adder/register; on TPU the MXU
+datapath is fixed (int8 x int8 -> int32), but the A2Q guarantee that *every*
+partial sum fits ``P`` bits unlocks:
+
+* ``spill_dtype=int16`` — when P <= 16, the carried inter-K-tile partial sums
+  are provably representable in int16, so the VMEM accumulator scratch (and any
+  HBM spill of partial sums in very-large-K matmuls) is half-width.  The cast
+  is lossless *because of* the A2Q bound — this is the kernel-level beyond-FPGA
+  payoff of the paper's method.
+* ``mode='wrap' | 'saturate'`` — exact emulation of a P-bit accumulator, used
+  by the overflow benchmarks (Fig. 2) and the bit-exactness tests against the
+  numpy simulator.
+
+Grid: ``(M/bm, N/bn, K/bk)`` with K innermost (sequential on TPU); the
+accumulator lives in VMEM scratch across K steps.  Per-tile dots use the MXU
+via ``jax.lax.dot_general(..., preferred_element_type=int32)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["int_matmul_kernel", "int_matmul_pallas"]
+
+
+def _wrap_bits_i32(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits >= 32:
+        return v
+    shift = 32 - bits
+    return (v << shift) >> shift
+
+
+def _saturate_bits_i32(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits >= 32:
+        return v
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return jnp.clip(v, lo, hi)
+
+
+def int_matmul_kernel(
+    x_ref,
+    w_ref,
+    o_ref,
+    acc_ref,
+    *,
+    k_steps: int,
+    acc_bits: int,
+    mode: str,
+):
+    """Kernel body. acc_ref dtype is int32 or int16 (the spill path)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tile = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    carried = acc_ref[...].astype(jnp.int32)
+    total = carried + tile
+    if mode == "wrap":
+        total = _wrap_bits_i32(total, acc_bits)
+    elif mode == "saturate":
+        total = _saturate_bits_i32(total, acc_bits)
+    elif mode != "exact":
+        raise ValueError(f"unknown mode {mode!r}")
+    # Lossless by the A2Q bound when acc_ref is int16 (P <= 16): every carried
+    # partial sum is guaranteed to fit the narrow register.
+    acc_ref[...] = total.astype(acc_ref.dtype)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(jnp.int32)
+
+
+def int_matmul_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    acc_bits: int = 32,
+    mode: str = "exact",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    spill_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled integer matmul.  Inputs must already be padded to block multiples
+    (the public wrapper in ``ops.py`` handles padding/slicing and defaults).
+
+    ``spill_dtype=jnp.int16`` requires ``acc_bits <= 16`` — the A2Q guarantee
+    is what makes the narrow carry lossless.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (K, K2)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        f"unpadded shapes M={M} N={N} K={K} for blocks {(block_m, block_n, block_k)}"
+    )
+    if spill_dtype is None:
+        spill_dtype = jnp.int32
+    if jnp.dtype(spill_dtype) == jnp.dtype(jnp.int16) and acc_bits > 16:
+        raise ValueError("int16 partial-sum spill is only sound when acc_bits <= 16 (A2Q bound)")
+
+    k_steps = K // block_k
+    grid = (M // block_m, N // block_n, k_steps)
+    kernel = functools.partial(
+        int_matmul_kernel, k_steps=k_steps, acc_bits=acc_bits, mode=mode
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), spill_dtype)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,193 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op handles padding to block multiples, head folding, dtype plumbing, and
+an ``interpret`` default (True off-TPU so the kernels execute via the Pallas
+interpreter on CPU; on TPU they compile to Mosaic).  Layers call these — never
+``pallas_call`` directly — and every op has a pure-jnp oracle in ``ref.py``
+that the test suite sweeps against.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.a2q_quantize import a2q_quantize_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.int_matmul import int_matmul_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+__all__ = ["int_matmul", "a2q_quantize", "flash_attention", "rwkv6_scan"]
+
+
+def _default_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, to: int, value=0):
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def int_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    acc_bits: int = 32,
+    mode: str = "exact",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    spill_int16: bool = False,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """int8 x int8 -> int32 matmul ``(M, K) @ (K, N)`` with P-bit accumulator
+    emulation.  Zero padding is sound for all modes (adding zero then wrapping
+    or saturating an in-range value is the identity)."""
+    M, K = x.shape
+    _, N = w.shape
+    bm = min(block_m, _round_up(M, 8))
+    bn = min(block_n, _round_up(N, 128))
+    bk = min(block_k, _round_up(K, 128))
+    xp = _pad_axis(_pad_axis(x, 0, _round_up(M, bm)), 1, _round_up(K, bk))
+    wp = _pad_axis(_pad_axis(w, 0, _round_up(K, bk)), 1, _round_up(N, bn))
+    out = int_matmul_pallas(
+        xp,
+        wp,
+        acc_bits=acc_bits,
+        mode=mode,
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        spill_dtype=jnp.int16 if spill_int16 else jnp.int32,
+        interpret=_default_interpret(interpret),
+    )
+    return out[:M, :N]
+
+
+def a2q_quantize(
+    v: jnp.ndarray,
+    t: jnp.ndarray,
+    d: jnp.ndarray,
+    *,
+    weight_bits: int,
+    acc_bits: int,
+    input_bits: int,
+    input_signed: bool,
+    block_k: int = 512,
+    block_c: int = 256,
+    interpret: Optional[bool] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused A2Q quantizer for a ``(K, C)`` weight matrix with per-channel
+    ``t``/``d`` of shape ``(C,)``.  Returns (dequantized fp32, int8 weights).
+
+    K padding uses v=0 (adds nothing to the l1 norm); C padding uses t=d=0
+    (garbage channels sliced off).
+    """
+    K, C = v.shape
+    bk = min(block_k, _round_up(K, 8))
+    bc = min(block_c, _round_up(C, 128))
+    Kp, Cp = _round_up(K, bk), _round_up(C, bc)
+    vp = _pad_axis(_pad_axis(v, 0, Kp), 1, Cp)
+    tp = _pad_axis(t.reshape(1, C), 1, Cp)
+    dp = _pad_axis(d.reshape(1, C), 1, Cp)
+    deq, q = a2q_quantize_pallas(
+        vp,
+        tp,
+        dp,
+        weight_bits=weight_bits,
+        acc_bits=acc_bits,
+        input_bits=input_bits,
+        input_signed=input_signed,
+        block_k=bk,
+        block_c=bc,
+        interpret=_default_interpret(interpret),
+    )
+    return deq[:K, :C], q[:K, :C]
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Blocked attention over ``(B, H, T, D)`` tensors (KV heads already
+    repeated to H by the GQA layer).  Pads T axes to block multiples."""
+    B, H, Tq, D = q.shape
+    Tk = k.shape[2]
+    bq = min(block_q, _round_up(Tq, 8))
+    bk = min(block_k, _round_up(Tk, 8))
+    qf = q.reshape(B * H, Tq, D)
+    kf = k.reshape(B * H, Tk, D)
+    vf = v.reshape(B * H, Tk, D)
+    qf = _pad_axis(qf, 1, _round_up(Tq, bq))
+    kf = _pad_axis(kf, 1, _round_up(Tk, bk))
+    vf = _pad_axis(vf, 1, _round_up(Tk, bk))
+    out = flash_attention_pallas(
+        qf,
+        kf,
+        vf,
+        causal=causal,
+        window=window,
+        scale=scale,
+        true_q=Tq,
+        true_k=Tk,
+        block_q=bq,
+        block_k=bk,
+        interpret=_default_interpret(interpret),
+    )
+    return out[:, :Tq].reshape(B, H, Tq, D)
+
+
+def rwkv6_scan(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    initial_state: Optional[jnp.ndarray] = None,
+    *,
+    chunk: int = 64,
+    interpret: Optional[bool] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV-6 scan over ``(B, H, T, Dk/Dv)`` tensors with per-head bonus
+    ``u (H, Dk)``.  Pads T with no-op steps (k=0 so kv=0, w=1 so S unchanged)."""
+    B, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+    ct = min(chunk, _round_up(T, 8))
+    Tp = _round_up(T, ct)
+    fold = lambda x: x.reshape(B * H, *x.shape[2:])
+    rp = _pad_axis(fold(r), 1, Tp)
+    kp = _pad_axis(fold(k), 1, Tp)
+    vp = _pad_axis(fold(v), 1, Tp)
+    wp = _pad_axis(fold(w), 1, Tp, value=1)
+    uf = jnp.broadcast_to(u[None], (B, H, Dk)).reshape(B * H, Dk)
+    if initial_state is not None:
+        s0 = initial_state.reshape(B * H, Dk, Dv)
+    else:
+        s0 = None
+    y, sT = rwkv6_scan_pallas(
+        rp, kp, vp, wp, uf, s0, chunk=ct, interpret=_default_interpret(interpret)
+    )
+    return y[:, :T].reshape(B, H, T, Dv), sT.reshape(B, H, Dk, Dv)

@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function defines the *semantics* a kernel must match bit-for-bit
+(integer kernels) or to float tolerance (attention / scan kernels).  The
+oracles are also the CPU/dry-run execution path for the layers that use them —
+kernels are the TPU fast path, refs are the portable truth.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "wrap_bits",
+    "saturate_bits",
+    "ref_int_matmul",
+    "ref_a2q_quantize",
+    "ref_flash_attention",
+    "ref_rwkv6",
+]
+
+
+def wrap_bits(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Two's-complement wrap of int32 values into a ``bits``-wide register."""
+    if bits >= 32:
+        return v
+    shift = 32 - bits
+    return (v << shift) >> shift  # arithmetic shift sign-extends
+
+
+def saturate_bits(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits >= 32:
+        return v
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return jnp.clip(v, lo, hi)
+
+
+def ref_int_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    acc_bits: int = 32,
+    mode: str = "exact",
+    block_k: Optional[int] = None,
+) -> jnp.ndarray:
+    """Integer matmul ``(M, K) @ (K, N) -> int32`` with accumulator emulation.
+
+    Semantics the Pallas kernel implements:
+      * ``exact``    — wide (int32) accumulation.
+      * ``wrap``     — P-bit two's-complement wraparound.  Wraparound is
+        associative, so tiling order is irrelevant and the reference applies a
+        single wrap to the exact result.
+      * ``saturate`` — P-bit saturation applied *after each K-tile of size
+        ``block_k``*, sequentially in tile order.  Saturation is order
+        dependent; the reference replays the kernel's exact tile schedule.
+    """
+    x32 = x.astype(jnp.int32)
+    w32 = w.astype(jnp.int32)
+    if mode == "exact":
+        return x32 @ w32
+    if mode == "wrap":
+        return wrap_bits(x32 @ w32, acc_bits)
+    if mode == "saturate":
+        K = x.shape[-1]
+        bk = block_k or K
+        n_blocks = -(-K // bk)
+        acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+        for b in range(n_blocks):
+            lo = b * bk
+            hi = min(lo + bk, K)
+            acc = saturate_bits(acc + x32[:, lo:hi] @ w32[lo:hi, :], acc_bits)
+        return acc
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def ref_a2q_quantize(
+    v: jnp.ndarray,
+    t: jnp.ndarray,
+    d: jnp.ndarray,
+    weight_bits: int,
+    acc_bits: int,
+    input_bits: int,
+    input_signed: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused A2Q weight quantizer on a ``(K, C)`` matrix.
+
+    Returns (dequantized float32 weights, integer weights as int32).  Matches
+    ``core.a2q.apply_a2q`` / ``a2q_int_weights`` exactly (no STE — this is the
+    inference-side op; the training graph wraps it with STE at a higher level).
+    """
+    n = -(2 ** (weight_bits - 1))
+    p = 2 ** (weight_bits - 1) - 1
+    log2_amax = jnp.log2(jnp.asarray(2.0 ** (acc_bits - 1) - 1.0, v.dtype))
+    T = int(input_signed) + log2_amax + d - input_bits
+    t_eff = jnp.minimum(t, T)
+    g_over_s = jnp.exp2(t_eff - d)
+    s = jnp.exp2(d)
+    l1 = jnp.maximum(jnp.sum(jnp.abs(v), axis=0), 1e-12)
+    q = jnp.clip(jnp.trunc(g_over_s[None, :] * v / l1[None, :]), n, p)
+    return (q * s[None, :]).astype(jnp.float32), q.astype(jnp.int32)
+
+
+def ref_flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Dense softmax attention oracle.
+
+    Shapes: q ``(B, H, Tq, Dh)``, k/v ``(B, H, Tk, Dh)`` (GQA repeat happens in
+    the layer above).  ``window``: sliding-window width — position i attends to
+    ``[i - window + 1, i]`` (None = full causal).  fp32 softmax arithmetic.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, k.astype(jnp.float32))
+    Tq, Tk = q.shape[-2], k.shape[-2]
+    qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)  # align ends (decode: Tq < Tk)
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_rwkv6(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV-6 (Finch) linear-attention recurrence, naive scan oracle.
+
+    Shapes (single head folded into batch): r/k/w ``(B, T, Dk)``, v
+    ``(B, T, Dv)``, u ``(Dk,)`` bonus, state ``(B, Dk, Dv)``.
+
+    Per step (data-dependent per-channel decay ``w_t`` in (0, 1)):
+        y_t = r_t @ (S + (u * k_t) v_t^T)
+        S   = diag(w_t) S + k_t v_t^T
+    Returns (y ``(B, T, Dv)``, final state).
+    """
+    B, T, Dk = r.shape
+    Dv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, Dk, Dv), jnp.float32)
+
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B, Dk), (B, Dk), (B, Dv), (B, Dk)
+        kv = k_t[:, :, None] * v_t[:, None, :]  # (B, Dk, Dv)
+        y = jnp.einsum("bk,bkv->bv", r_t, S + u[None, :, None] * kv)
+        S = w_t[:, :, None] * S + kv
+        return S, y
+
+    xs = (
+        r.swapaxes(0, 1).astype(jnp.float32),
+        k.swapaxes(0, 1).astype(jnp.float32),
+        v.swapaxes(0, 1).astype(jnp.float32),
+        w.swapaxes(0, 1).astype(jnp.float32),
+    )
+    S, ys = jax.lax.scan(step, initial_state, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), S

@@ -1,0 +1,110 @@
+"""Training launcher CLI.
+
+Runs a real training loop on whatever devices exist: on this CPU container it
+drives reduced configs end-to-end (examples + integration tests); on a TPU
+fleet the same entrypoint builds the production mesh and shards state/batches
+with the exact same code paths the dry-run compiles.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+Elastic restart: rerun the same command after changing the device fleet; the
+mesh planner re-plans and the checkpoint re-shards onto the new mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.data.synthetic import TokenStream
+from repro.dist.sharding import ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import Runtime, init_lm
+from repro.models.steps import build_train_step
+from repro.nn.module import unbox
+from repro.optim.optimizers import adamw, adafactor, sgdm
+from repro.optim.schedules import cosine_with_warmup
+from repro.train.elastic import StragglerWatchdog, plan_mesh
+from repro.train.trainer import Trainer
+
+_OPTS = {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="CPU-runnable reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", choices=sorted(_OPTS), default="adamw")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["auto", "none"], default="auto")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = reduced(arch)
+
+    mesh = None
+    rules = None
+    if args.mesh == "auto" and jax.device_count() > 1:
+        plan = plan_mesh(jax.device_count(), model_divisors=[s.attn.heads for s in arch.stacks if s.attn])
+        mesh = jax.make_mesh(plan["shape"], plan["axes"])
+        rules = ShardingRules.default(mesh, arch)
+        print(f"mesh: {dict(zip(plan['axes'], plan['shape']))}")
+    ep_axis = "model" if (mesh is not None and any(s.moe for s in arch.stacks)) else None
+    rt = Runtime(mesh=mesh, ep_axis=ep_axis, rules=rules)
+
+    key = jax.random.PRNGKey(args.seed)
+    boxed = init_lm(key, arch)
+    params = unbox(boxed)
+    optimizer = _OPTS[args.optimizer]()
+    state = {"params": params, "opt_state": optimizer.init(params), "step": jnp.zeros((), jnp.int32)}
+
+    sched = cosine_with_warmup(args.lr, warmup=max(args.steps // 20, 1), total=args.steps)
+    step_fn = build_train_step(arch, optimizer, rt, lr_schedule=sched)
+
+    stream = TokenStream(vocab=arch.vocab, seq_len=args.seq, global_batch=args.batch, seed=args.seed)
+    trainer = Trainer(
+        step_fn,
+        stream.batch,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        watchdog=StragglerWatchdog(),
+    )
+    state, start = trainer.maybe_restore(state)
+    if start:
+        print(f"resumed from step {start}")
+    from repro.train.checkpoint import install_signal_handler
+
+    if args.ckpt_dir:
+        install_signal_handler(trainer.emergency_save)
+
+    result = trainer.run(state, args.steps, start_step=start)
+    for rec in result.history[:3] + result.history[-3:]:
+        print({k: round(v, 4) if isinstance(v, float) else v for k, v in rec.items()})
+    if result.straggler_events:
+        print(f"straggler events: {len(result.straggler_events)}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(result.history, f, indent=1)
+    first, last = result.history[0]["loss"], result.history[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.lm import apply_lm, init_cache, init_lm, lm_loss, Runtime  # noqa: F401

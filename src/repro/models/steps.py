@@ -1,0 +1,87 @@
+"""Step builders shared by the trainer, the serve engine, and the dry-run.
+
+Each builder returns a pure function suitable for ``jax.jit`` with explicit
+in/out shardings:
+
+* ``build_train_step``  — fwd + bwd + grad-clip + optimizer update (+donation)
+* ``build_prefill_step``— forward over a full prompt, returns last-position
+  logits + the populated KV cache
+* ``build_serve_step``  — one decode token against a KV cache
+
+The dry-run lowers these exact functions for every (arch x shape x mesh) cell;
+nothing is special-cased for compilation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import Runtime, apply_lm, init_cache, lm_loss
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+__all__ = ["build_train_step", "build_prefill_step", "build_serve_step"]
+
+
+def build_train_step(
+    arch: ArchConfig,
+    optimizer: Optimizer,
+    rt: Optional[Runtime] = None,
+    lr_schedule: Optional[Callable] = None,
+    grad_clip: float = 1.0,
+):
+    rt = rt or Runtime()
+    lr_schedule = lr_schedule or (lambda step: jnp.asarray(3e-4, jnp.float32))
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params, opt_state, step = state["params"], state["opt_state"], state["step"]
+
+        def loss_fn(p):
+            return lm_loss(p, arch, batch, rt=rt)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = lr_schedule(step)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": new_params, "opt_state": new_opt, "step": step + 1}, metrics
+
+    return train_step
+
+
+def build_prefill_step(arch: ArchConfig, rt: Optional[Runtime] = None, max_seq: Optional[int] = None):
+    """Prompt -> (last-position logits, cache filled up to the prompt length).
+
+    The cache is produced by replaying the prompt's K/V into the cache layout
+    in one shot (a scatter of the computed K/V), so prefill is a single
+    forward pass — not T decode steps.
+    """
+    rt = rt or Runtime()
+
+    def prefill_step(params: dict, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+        logits, _, _ = apply_lm(
+            params, arch,
+            tokens=batch.get("tokens"),
+            frontend_embeds=batch.get("frontend_embeds"),
+            rt=rt,
+        )
+        return logits[:, -1:, :]
+
+    return prefill_step
+
+
+def build_serve_step(arch: ArchConfig, rt: Optional[Runtime] = None):
+    """(params, tokens (B,1), cache, pos) -> (logits (B,1,V), new cache)."""
+    rt = rt or Runtime()
+
+    def serve_step(params: dict, tokens: jnp.ndarray, cache: dict, pos: jnp.ndarray):
+        logits, new_cache, _ = apply_lm(
+            params, arch, tokens=tokens, cache=cache, start_pos=pos, rt=rt
+        )
+        return logits, new_cache
+
+    return serve_step

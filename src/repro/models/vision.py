@@ -1,0 +1,309 @@
+"""The paper's four benchmark networks (Sec. 5.1, App. B), in JAX with
+QuantConv/QuantLinear so baseline-QAT and A2Q train exactly as in the paper:
+
+* MobileNetV1 (CIFAR10 variant: stride-2 first conv, stride-2 final pool)
+* ResNet18    (CIFAR10 variant: 3x3 s1 stem, no maxpool, conv shortcuts)
+* ESPCN       (3x SISR, sub-pixel conv replaced by NNRC as in App. B.2)
+* UNet        (3 enc/3 dec, NNRC upsampling, adds instead of concats)
+
+All hidden activations are ReLU -> unsigned activation quantizers; first/last
+layers stay 8-bit (App. B).  These models feed benchmarks/fig4-fig6 and the
+LUT co-design study; layer geometries for the cost model come from
+``layer_geometries``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core.lut import LayerGeometry
+from repro.nn.linear import apply_conv, apply_linear, init_conv, init_linear
+from repro.nn.module import box, unbox
+from repro.nn.transformer import tree_a2q_penalty
+
+__all__ = [
+    "init_mobilenet_v1",
+    "apply_mobilenet_v1",
+    "init_resnet18",
+    "apply_resnet18",
+    "init_espcn",
+    "apply_espcn",
+    "init_unet",
+    "apply_unet",
+    "init_linear_classifier",
+    "apply_linear_classifier",
+    "vision_penalty",
+    "VISION_MODELS",
+]
+
+relu = jax.nn.relu
+
+
+def _bn_init(c):
+    return {"scale": box(jnp.ones((c,), jnp.float32), (None,)),
+            "bias": box(jnp.zeros((c,), jnp.float32), (None,))}
+
+
+def _bn(p, x):
+    """Batch-stat normalization + affine.  Batch statistics keep the quantized
+    activation distributions in range through depth (QAT needs this — fixed
+    affine drifts below the act-quant step and the net dies at init).  FINN
+    absorbs the affine into threshold logic at deploy time (App. C)."""
+    mu = x.mean(axis=(0, 1, 2))
+    var = x.var(axis=(0, 1, 2))
+    xn = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xn * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# 1-layer binary-MNIST classifier (Fig. 2 / App. A motivating example)
+# ---------------------------------------------------------------------------
+
+
+def init_linear_classifier(key, q: QuantConfig, d_in: int = 784, n_out: int = 2) -> dict:
+    # K=784, 1-bit unsigned inputs, 8-bit weights: the paper's exact setup.
+    # act_absmax=1: the inputs are already {0,1}, the 1-bit quantizer is identity.
+    return {"fc": init_linear(key, d_in, n_out, q, axes=(None, None), input_signed=False,
+                              use_bias=False, act_absmax=1.0)}
+
+
+def apply_linear_classifier(params, x, q: QuantConfig):
+    return apply_linear(params["fc"], x, q, input_signed=False, compute_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1 (App. B.1)
+# ---------------------------------------------------------------------------
+
+# (depthwise stride) for each of the 13 separable blocks, CIFAR variant
+_MBN_CFG = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+            (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2), (1024, 1)]
+
+
+def init_mobilenet_v1(key, q: QuantConfig, n_classes: int = 10, width: float = 1.0) -> dict:
+    ks = iter(jax.random.split(key, 64))
+    w = lambda c: max(int(c * width), 8)
+    p: dict = {"stem": init_conv(next(ks), 3, w(32), (3, 3), q, boundary=True),
+               "stem_bn": _bn_init(w(32)), "blocks": []}
+    c_in = w(32)
+    for c_out, stride in _MBN_CFG:
+        c_out = w(c_out)
+        p["blocks"].append({
+            "dw": init_conv(next(ks), c_in, c_in, (3, 3), q, groups=c_in),
+            "dw_bn": _bn_init(c_in),
+            "pw": init_conv(next(ks), c_in, c_out, (1, 1), q),
+            "pw_bn": _bn_init(c_out),
+        })
+        c_in = c_out
+    p["head"] = init_linear(next(ks), c_in, n_classes, q, axes=(None, None),
+                            boundary=True, input_signed=False, use_bias=True)
+    return p
+
+
+def apply_mobilenet_v1(params, x, q: QuantConfig):
+    x = relu(_bn(params["stem_bn"], apply_conv(params["stem"], x, q, stride=(2, 2), boundary=True)))
+    for b, (_, stride) in zip(params["blocks"], _MBN_CFG):
+        x = relu(_bn(b["dw_bn"], apply_conv(b["dw"], x, q, stride=(stride, stride), groups=x.shape[-1])))
+        x = relu(_bn(b["pw_bn"], apply_conv(b["pw"], x, q)))
+    x = jnp.mean(x, axis=(1, 2))  # stride-2 global pool on 32x32 ends at 1x1
+    return apply_linear(params["head"], x, q, boundary=True, input_signed=False,
+                        compute_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ResNet18 (App. B.1: 3x3 s1 stem, conv shortcuts)
+# ---------------------------------------------------------------------------
+
+
+_RESNET_STRIDES = (1, 1, 2, 1, 2, 1, 2, 1)  # first block of groups 2-4 downsamples
+
+
+def _init_basic(ks, c_in, c_out, q):
+    return {
+        "c1": init_conv(next(ks), c_in, c_out, (3, 3), q), "bn1": _bn_init(c_out),
+        "c2": init_conv(next(ks), c_out, c_out, (3, 3), q), "bn2": _bn_init(c_out),
+        "sc": init_conv(next(ks), c_in, c_out, (1, 1), q), "bn_sc": _bn_init(c_out),
+    }
+
+
+def init_resnet18(key, q: QuantConfig, n_classes: int = 10, width: float = 1.0) -> dict:
+    ks = iter(jax.random.split(key, 64))
+    w = lambda c: max(int(c * width), 8)
+    p = {"stem": init_conv(next(ks), 3, w(64), (3, 3), q, boundary=True),
+         "stem_bn": _bn_init(w(64)), "blocks": []}
+    c_in = w(64)
+    for c_out, blocks in [(w(64), 2), (w(128), 2), (w(256), 2), (w(512), 2)]:
+        for i in range(blocks):
+            p["blocks"].append(_init_basic(ks, c_in, c_out, q))
+            c_in = c_out
+    p["head"] = init_linear(next(ks), c_in, n_classes, q, axes=(None, None),
+                            boundary=True, input_signed=False, use_bias=True)
+    return p
+
+
+def apply_resnet18(params, x, q: QuantConfig):
+    x = relu(_bn(params["stem_bn"], apply_conv(params["stem"], x, q, boundary=True)))
+    for b, stride in zip(params["blocks"], _RESNET_STRIDES):
+        s = (stride, stride)
+        h = relu(_bn(b["bn1"], apply_conv(b["c1"], x, q, stride=s)))
+        h = _bn(b["bn2"], apply_conv(b["c2"], h, q))
+        sc = _bn(b["bn_sc"], apply_conv(b["sc"], x, q, stride=s))
+        x = relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return apply_linear(params["head"], x, q, boundary=True, input_signed=False,
+                        compute_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ESPCN / UNet (App. B.2) — NNRC = nearest-neighbor resize + conv
+# ---------------------------------------------------------------------------
+
+
+def _nn_resize(x, factor: int):
+    B, H, W, C = x.shape
+    return jax.image.resize(x, (B, H * factor, W * factor, C), method="nearest")
+
+
+def init_espcn(key, q: QuantConfig, upscale: int = 3) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "c1": init_conv(next(ks), 1, 64, (5, 5), q, boundary=True),
+        "c2": init_conv(next(ks), 64, 64, (3, 3), q),
+        "c3": init_conv(next(ks), 64, 32, (3, 3), q),
+        "out": init_conv(next(ks), 32, 1, (3, 3), q, boundary=True),
+    }
+
+
+def apply_espcn(params, x, q: QuantConfig, upscale: int = 3):
+    x = relu(apply_conv(params["c1"], x, q, boundary=True))
+    x = relu(apply_conv(params["c2"], x, q))
+    x = relu(apply_conv(params["c3"], x, q))
+    x = _nn_resize(x, upscale)
+    return apply_conv(params["out"], x, q, boundary=True)
+
+
+def init_unet(key, q: QuantConfig, base: int = 32, upscale: int = 3) -> dict:
+    ks = iter(jax.random.split(key, 32))
+    c = [base, base * 2, base * 4]
+    p = {"stem": init_conv(next(ks), 1, c[0], (3, 3), q, boundary=True), "enc": [], "dec": []}
+    for cin, cout in [(c[0], c[1]), (c[1], c[2]), (c[2], c[2])]:
+        p["enc"].append({"c1": init_conv(next(ks), cin, cout, (3, 3), q),
+                         "c2": init_conv(next(ks), cout, cout, (3, 3), q)})
+    # decoder outputs must match the skip channels: skips are (c0, c1, c2)
+    for cin, cout in [(c[2], c[2]), (c[2], c[1]), (c[1], c[0])]:
+        p["dec"].append({"c1": init_conv(next(ks), cin, cout, (3, 3), q),
+                         "c2": init_conv(next(ks), cout, cout, (3, 3), q)})
+    p["up"] = init_conv(next(ks), c[0], c[0], (3, 3), q)
+    p["out"] = init_conv(next(ks), c[0], 1, (3, 3), q, boundary=True)
+    return p
+
+
+def apply_unet(params, x, q: QuantConfig, upscale: int = 3):
+    x = relu(apply_conv(params["stem"], x, q, boundary=True))
+    skips = []
+    for e in params["enc"]:
+        skips.append(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+        x = relu(apply_conv(e["c1"], x, q))
+        x = relu(apply_conv(e["c2"], x, q))
+    for d, skip in zip(params["dec"], reversed(skips)):
+        x = _nn_resize(x, 2)
+        x = relu(apply_conv(d["c1"], x, q))
+        x = relu(apply_conv(d["c2"], x, q))
+        x = x + skip  # adds instead of concats (App. B.2)
+    x = _nn_resize(x, upscale)
+    x = relu(apply_conv(params["up"], x, q))
+    return apply_conv(params["out"], x, q, boundary=True)
+
+
+def vision_penalty(params, q: QuantConfig) -> jnp.ndarray:
+    return tree_a2q_penalty(params, q)
+
+
+def requantize_from_float(quant_tree, float_tree, q: QuantConfig):
+    """Initialize a quantized model from trained float weights (paper App. B:
+    'We initialize all models from floating-point counterparts pre-trained to
+    convergence').  Walks the freshly-initialized quantized tree (which has
+    the right aq/structure) and replaces every weight-derived leaf group with
+    one calibrated from the float model's trained ``w``."""
+    from repro.core.a2q import init_a2q
+    from repro.core.quantizers import init_weight_qat
+
+    def walk(qt, ft):
+        if isinstance(qt, dict):
+            if "v" in qt and "t" in qt and "d" in qt:
+                a = init_a2q(ft["w"], q.weight_bits, q.acc_bits, q.act_bits, False)
+                out = {**qt, **a}
+                if "b" in ft:
+                    out["b"] = ft["b"]
+                return out
+            if "w" in qt and "wq" in qt:
+                wq = init_weight_qat(ft["w"], q.weight_bits)
+                out = {**qt, "w": ft["w"], "wq": {"log2_scale": wq["log2_scale"]}}
+                if "b" in ft:
+                    out["b"] = ft["b"]
+                return out
+            return {k: walk(v, ft[k]) for k, v in qt.items()}
+        if isinstance(qt, list):
+            return [walk(a, b) for a, b in zip(qt, ft)]
+        # plain leaves (bn scales, biases) copy the trained float values
+        return ft if ft is not None else qt
+
+    return walk(quant_tree, float_tree)
+
+
+VISION_MODELS = {
+    "mobilenetv1": (init_mobilenet_v1, apply_mobilenet_v1),
+    "resnet18": (init_resnet18, apply_resnet18),
+    "espcn": (init_espcn, apply_espcn),
+    "unet": (init_unet, apply_unet),
+}
+
+
+def layer_geometries(params, q: QuantConfig, input_hw: tuple[int, int] = (32, 32)) -> list[LayerGeometry]:
+    """Rough per-layer geometry extraction for the LUT cost model: walks conv/
+    linear param subtrees, derives (K, C_out, MACs) from weight shapes.  MAC
+    spatial factors assume the CIFAR/BSD pipeline resolution."""
+    from repro.core.a2q import a2q_int_weights
+    import numpy as np
+
+    geoms = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            keyset = set(node.keys())
+            if ("v" in keyset and "t" in keyset) or "w" in keyset:
+                wshape = (node["v"] if "v" in node else node["w"]).shape
+                if len(wshape) == 4:
+                    kh, kw, ci, co = wshape
+                    k = kh * kw * ci
+                    spatial = input_hw[0] * input_hw[1]
+                else:
+                    k, co = wshape
+                    spatial = 1
+                sparsity = 0.0
+                if "v" in node:
+                    qi, _ = a2q_int_weights(
+                        {"v": node["v"], "t": node["t"], "d": node["d"]},
+                        q.weight_bits, q.acc_bits, q.act_bits, False,
+                    )
+                    sparsity = float(np.mean(np.asarray(qi) == 0))
+                geoms.append(LayerGeometry(
+                    k=int(k), c_out=int(co), macs=int(k * co * spatial),
+                    weight_bits=q.weight_bits, input_bits=q.act_bits,
+                    output_bits=q.act_bits, acc_bits=q.acc_bits, sparsity=sparsity,
+                ))
+            else:
+                for v in node.values():
+                    walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return geoms

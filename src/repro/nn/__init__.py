@@ -1,0 +1,2 @@
+"""Functional layer zoo: boxed param pytrees, quantized linears/convs,
+attention (GQA/MLA/SWA/chunked-local), SSM mixers, MoE, scanned stacks."""

@@ -1,0 +1,340 @@
+"""Attention layers: GQA (+RoPE/NoPE, sliding-window, chunked-local) and MLA.
+
+All projections are QuantLinear instances, so A2Q attaches to q/k/v/o (and the
+MLA down/up projections) exactly as to any other matmul (DESIGN.md Sec. 5).
+
+The softmax path is the memory-bounded *query-chunked* jnp implementation —
+``lax.map`` over query blocks keeps the live score buffer at
+``(B, tc, H, S)`` — which is both the CPU/dry-run execution path and the
+oracle for the Pallas flash kernel (``kernels/flash_attention.py``, the TPU
+fast path).
+
+KV caches:
+* full      — ``(B, S_max, KV, Dh)``, decode writes at ``pos``;
+* ring      — ``(B, W, KV, Dh)`` for sliding-window / chunked-local layers;
+  slot ``pos % W`` plus an explicit per-slot absolute-position array, so a
+  500k-token decode holds only W entries (this is what makes h2o-danube /
+  hymba / llama4-local long-context cells runnable);
+* MLA       — compressed latent ``(B, S_max, kv_lora)`` + shared rope key.
+
+Masking is always computed from *absolute* positions (slot positions for ring
+caches), so full/ring/decode paths share one `_sdpa`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig, QuantConfig
+from repro.nn.embedding import apply_rope
+from repro.nn.linear import apply_linear, init_linear, linear_penalty
+from repro.nn.norms import apply_norm, init_norm
+
+__all__ = [
+    "init_attention",
+    "apply_attention",
+    "init_attn_cache",
+    "attention_penalty",
+]
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with absolute-position masking, grouped KV heads,
+# and query chunking.
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(
+    q: jnp.ndarray,  # (B, T, H, Dh)
+    k: jnp.ndarray,  # (B, S, KV, Dh)
+    v: jnp.ndarray,  # (B, S, KV, Dv)
+    qpos: jnp.ndarray,  # (B, T) absolute positions
+    kpos: jnp.ndarray,  # (B, S) absolute positions, -1 = empty slot
+    *,
+    causal: bool,
+    window: Optional[int],
+    chunk: Optional[int],
+    q_chunk: int,
+) -> jnp.ndarray:
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]  # may differ from Dh (MLA: nope+rope query vs v_head_dim)
+    G = H // KV
+    scale = Dh**-0.5
+
+    def block(q_c: jnp.ndarray, qpos_c: jnp.ndarray) -> jnp.ndarray:
+        # q_c (B, tc, KV, G, Dh); qpos_c (B, tc)
+        s = jnp.einsum(
+            "btkgd,bskd->btkgs",
+            q_c.astype(jnp.float32) * scale,
+            k.astype(jnp.float32),
+        )
+        qp = qpos_c[:, :, None]  # (B, tc, 1)
+        kp = kpos[:, None, :]  # (B, 1, S)
+        mask = kp >= 0
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        if chunk is not None:
+            mask &= (kp // chunk) == (qp // chunk)
+        m4 = mask[:, :, None, None, :]
+        s = jnp.where(m4, s, _NEG)
+        s_max = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - s_max)
+        p = jnp.where(m4, p, 0.0)
+        denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        o = jnp.einsum("btkgs,bskd->btkgd", p / denom, v.astype(jnp.float32))
+        return o
+
+    qg = q.reshape(B, T, KV, G, Dh)
+    if T <= q_chunk:
+        out = block(qg, qpos)
+    else:
+        nc, rem = divmod(T, q_chunk)
+        Tm = nc * q_chunk
+        q_blocks = qg[:, :Tm].reshape(B, nc, q_chunk, KV, G, Dh).swapaxes(0, 1)
+        p_blocks = qpos[:, :Tm].reshape(B, nc, q_chunk).swapaxes(0, 1)
+        out = jax.lax.map(lambda args: block(*args), (q_blocks, p_blocks))
+        out = out.swapaxes(0, 1).reshape(B, Tm, KV, G, Dv)
+        if rem:
+            out = jnp.concatenate([out, block(qg[:, Tm:], qpos[:, Tm:])], axis=1)
+    return out.reshape(B, T, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+
+def _init_gqa(key, d_model: int, a: AttnConfig, q: QuantConfig, use_bias: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    HD, KD = a.heads * a.head_dim, a.kv_heads * a.head_dim
+    return {
+        "wq": init_linear(ks[0], d_model, HD, q, axes=("embed", "heads"), use_bias=use_bias),
+        "wk": init_linear(ks[1], d_model, KD, q, axes=("embed", "kv_heads"), use_bias=use_bias),
+        "wv": init_linear(ks[2], d_model, KD, q, axes=("embed", "kv_heads"), use_bias=use_bias),
+        "wo": init_linear(ks[3], HD, d_model, q, axes=("heads", "embed"), use_bias=use_bias),
+    }
+
+
+def _init_mla(key, d_model: int, a: AttnConfig, q: QuantConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    qh = a.qk_nope_dim + a.qk_rope_dim
+    return {
+        "wq_a": init_linear(ks[0], d_model, a.q_lora_rank, q, axes=("embed", None)),
+        "q_norm": init_norm(a.q_lora_rank, "rmsnorm", axis_name=None),
+        "wq_b": init_linear(ks[1], a.q_lora_rank, a.heads * qh, q, axes=(None, "heads")),
+        "wkv_a": init_linear(
+            ks[2], d_model, a.kv_lora_rank + a.qk_rope_dim, q, axes=("embed", None)
+        ),
+        "kv_norm": init_norm(a.kv_lora_rank, "rmsnorm", axis_name=None),
+        "wkv_b": init_linear(
+            ks[3], a.kv_lora_rank, a.heads * (a.qk_nope_dim + a.v_head_dim), q,
+            axes=(None, "heads"),
+        ),
+        "wo": init_linear(ks[4], a.heads * a.v_head_dim, d_model, q, axes=("heads", "embed")),
+    }
+
+
+def init_attention(key, d_model: int, a: AttnConfig, q: QuantConfig, use_bias: bool = False) -> dict:
+    if a.kind == "mla":
+        return _init_mla(key, d_model, a, q)
+    return _init_gqa(key, d_model, a, q, use_bias)
+
+
+def init_attn_cache(
+    batch: int, a: AttnConfig, max_seq: int, dtype=jnp.bfloat16
+) -> dict:
+    """Allocate the decode cache for one layer of this attention kind."""
+    if a.kind == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_seq, a.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_seq, a.qk_rope_dim), dtype),
+            "kpos": jnp.full((batch, max_seq), -1, jnp.int32),
+        }
+    slots = max_seq
+    ring = a.window or a.chunk
+    if ring is not None:
+        slots = min(ring, max_seq)
+    return {
+        "k": jnp.zeros((batch, slots, a.kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((batch, slots, a.kv_heads, a.head_dim), dtype),
+        "kpos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def _write_cache(cache: dict, updates: dict, pos: jnp.ndarray, ring: bool) -> dict:
+    """Write one decode step (T=1) into the cache.
+
+    ``pos`` may be a scalar or a per-row ``(B,)`` vector — the serve engine's
+    continuous batching advances slots at different positions, so writes are
+    vmapped per batch row.
+    """
+    new = dict(cache)
+    B, slots = cache["kpos"].shape
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    slot = pos_vec % slots if ring else pos_vec
+
+    def write_row(c_row, u_row, s):
+        start = (s,) + (0,) * (c_row.ndim - 1)
+        return jax.lax.dynamic_update_slice(c_row, u_row, start)
+
+    for name, val in updates.items():  # val (B, 1, ...)
+        new[name] = jax.vmap(write_row)(cache[name], val.astype(cache[name].dtype), slot)
+    posu = pos_vec[:, None]
+    new["kpos"] = jax.vmap(write_row)(cache["kpos"], posu, slot)
+    return new
+
+
+def apply_attention(
+    params: dict,
+    x: jnp.ndarray,
+    a: AttnConfig,
+    q: QuantConfig,
+    positions: jnp.ndarray,  # (B, T) absolute
+    cache: Optional[dict] = None,
+    *,
+    q_chunk: int = 256,
+    compute_dtype=jnp.bfloat16,
+    mla_absorb: bool = False,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """Returns (output, updated cache).  ``cache`` given => decode (T == 1)."""
+    if a.kind == "mla":
+        return _apply_mla(
+            params, x, a, q, positions, cache,
+            q_chunk=q_chunk, compute_dtype=compute_dtype, absorb=mla_absorb,
+        )
+    B, T, D = x.shape
+    H, KV, Dh = a.heads, a.kv_heads, a.head_dim
+    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    qh = lin(params["wq"], x=x).reshape(B, T, H, Dh)
+    kh = lin(params["wk"], x=x).reshape(B, T, KV, Dh)
+    vh = lin(params["wv"], x=x).reshape(B, T, KV, Dh)
+    if a.rope_theta is not None:
+        qh = apply_rope(qh, positions, a.rope_theta)
+        kh = apply_rope(kh, positions, a.rope_theta)
+
+    if cache is None:
+        kpos = jnp.where(jnp.ones((B, T), bool), positions, -1)
+        out = _sdpa(
+            qh, kh, vh, positions, kpos,
+            causal=a.causal, window=a.window, chunk=a.chunk, q_chunk=q_chunk,
+        )
+        new_cache = None
+    else:
+        ring = (a.window or a.chunk) is not None
+        new_cache = _write_cache(cache, {"k": kh, "v": vh}, positions[:, 0], ring)
+        out = _sdpa(
+            qh, new_cache["k"], new_cache["v"], positions, new_cache["kpos"],
+            causal=a.causal, window=a.window, chunk=a.chunk, q_chunk=q_chunk,
+        )
+    out = out.reshape(B, T, H * Dh)
+    return lin(params["wo"], x=out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): low-rank compressed q and kv, shared rope key.
+# ---------------------------------------------------------------------------
+
+
+def _apply_mla(
+    params: dict,
+    x: jnp.ndarray,
+    a: AttnConfig,
+    q: QuantConfig,
+    positions: jnp.ndarray,
+    cache: Optional[dict],
+    *,
+    q_chunk: int,
+    compute_dtype,
+    absorb: bool,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    B, T, D = x.shape
+    H = a.heads
+    nope, rope, vd = a.qk_nope_dim, a.qk_rope_dim, a.v_head_dim
+    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+
+    cq = apply_norm(params["q_norm"], lin(params["wq_a"], x=x))
+    qh = lin(params["wq_b"], x=cq).reshape(B, T, H, nope + rope)
+    q_nope, q_pe = qh[..., :nope], qh[..., nope:]
+    q_pe = apply_rope(q_pe, positions, a.rope_theta or 10000.0)
+
+    kv_a = lin(params["wkv_a"], x=x)
+    ckv = apply_norm(params["kv_norm"], kv_a[..., : a.kv_lora_rank])
+    kpe = kv_a[..., a.kv_lora_rank :].reshape(B, T, 1, rope)
+    kpe = apply_rope(kpe, positions, a.rope_theta or 10000.0).reshape(B, T, rope)
+
+    if cache is not None:
+        cache = _write_cache(cache, {"ckv": ckv, "kpe": kpe}, positions[:, 0], ring=False)
+        ckv_all, kpe_all, kpos = cache["ckv"], cache["kpe"], cache["kpos"]
+    else:
+        ckv_all, kpe_all = ckv, kpe
+        kpos = jnp.broadcast_to(positions, (B, T))
+
+    wkv_b = params["wkv_b"]
+    if absorb and cache is not None:
+        # Beyond-paper decode optimization: fold wkv_b into the query/output
+        # so scores are taken directly against the compressed latent cache.
+        # Numerically identical to the materialized path (incl. the activation
+        # quantizer, applied to the latent exactly as lin(wkv_b, .) would).
+        w_full = _mla_up_matrix(wkv_b, a, q)  # (kv_lora, H, nope+vd)
+        if q.mode != "none" and "aq" in wkv_b:
+            from repro.core.quantizers import apply_act_quant
+
+            ckv_all = apply_act_quant(
+                {"log2_scale": wkv_b["aq"]["log2_scale"]}, ckv_all, q.act_bits, signed=True
+            )
+        w_k, w_v = w_full[..., :nope], w_full[..., nope:]
+        q_lat = jnp.einsum("bthn,lhn->bthl", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
+        scale = (nope + rope) ** -0.5
+        s = jnp.einsum("bthl,bsl->bths", q_lat, ckv_all.astype(jnp.float32))
+        s += jnp.einsum("bthr,bsr->bths", q_pe.astype(jnp.float32), kpe_all.astype(jnp.float32))
+        s *= scale
+        qp = positions[:, :, None]
+        kp = kpos[:, None, :]
+        mask = (kp >= 0) & (kp <= qp)
+        s = jnp.where(mask[:, :, None, :], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bths,bsl->bthl", p, ckv_all.astype(jnp.float32))
+        out = jnp.einsum("bthl,lhv->bthv", o_lat, w_v.astype(jnp.float32))
+        out = out.astype(compute_dtype).reshape(B, T, H * vd)
+        return lin(params["wo"], x=out), cache
+
+    # Materialized path (paper-faithful baseline): expand per-head K/V.
+    S = ckv_all.shape[1]
+    kv = lin(wkv_b, x=ckv_all).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe_all[:, :, None, :], (B, S, H, rope))], axis=-1
+    )
+    qfull = jnp.concatenate([q_nope, q_pe], axis=-1)
+    out = _sdpa(
+        qfull, k, v, positions, kpos,
+        causal=a.causal, window=None, chunk=None, q_chunk=q_chunk,
+    )
+    out = out.reshape(B, T, H * vd)
+    return lin(params["wo"], x=out), cache
+
+
+def _mla_up_matrix(wkv_b_params: dict, a: AttnConfig, q: QuantConfig) -> jnp.ndarray:
+    from repro.nn.linear import _quant_weights  # quantized view of the up-proj
+
+    w = _quant_weights(wkv_b_params, q, boundary=False, input_signed=True)
+    kv_lora = w.shape[0]
+    return w.reshape(kv_lora, a.heads, a.qk_nope_dim + a.v_head_dim)
+
+
+def attention_penalty(params: dict, a: AttnConfig, q: QuantConfig) -> jnp.ndarray:
+    """Sum of A2Q regularizer terms over this layer's projections."""
+    total = jnp.zeros((), jnp.float32)
+    for name, sub in params.items():
+        if isinstance(sub, dict) and ("t" in sub or "w" in sub or "v" in sub):
+            total = total + linear_penalty(sub, q, boundary=False, input_signed=True)
+    return total

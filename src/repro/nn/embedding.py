@@ -1,0 +1,54 @@
+"""Token embeddings + rotary position embeddings.
+
+Embedding lookups have K=1 (no accumulation), so A2Q never attaches here
+(DESIGN.md Sec. 5); tables stay in the param dtype.  RoPE tables are computed
+on the fly from positions — no (max_seq, dim) table is materialized, which
+matters at 500k context.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import box, normal_init
+
+__all__ = ["init_embedding", "apply_embedding", "apply_rope"]
+
+
+def init_embedding(key, vocab: int, d_model: int) -> dict:
+    return {"table": box(normal_init(key, (vocab, d_model), std=0.02), ("vocab", "embed"))}
+
+
+def apply_embedding(params: dict, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(params["table"].astype(dtype), tokens, axis=0)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float = 10000.0,
+    rotary_dim: Optional[int] = None,
+) -> jnp.ndarray:
+    """Rotate ``x (B, T, H, Dh)`` by ``positions (B, T)`` (absolute).
+
+    Pairs (x[2i], x[2i+1]); ``rotary_dim`` (default Dh) allows partial rotary.
+    fp32 trig, output in x.dtype.
+    """
+    B, T, H, Dh = x.shape
+    rd = rotary_dim or Dh
+    half = rd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)  # (half,)
+    angles = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]  # (B,T,half)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B,T,1,half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr = x[..., :rd].astype(jnp.float32).reshape(B, T, H, half, 2)
+    x0, x1 = xr[..., 0], xr[..., 1]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    rotated = jnp.stack([r0, r1], axis=-1).reshape(B, T, H, rd)
+    if rd < Dh:
+        rotated = jnp.concatenate([rotated, x[..., rd:].astype(jnp.float32)], axis=-1)
+    return rotated.astype(x.dtype)

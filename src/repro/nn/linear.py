@@ -1,0 +1,248 @@
+"""QuantLinear / QuantConv — every matmul-bearing layer in the framework.
+
+The paper's technique is a first-class mode of this layer:
+
+* ``mode='none'`` — float weights (the floating-point baseline),
+* ``mode='qat'``  — baseline quantization-aware training (paper Sec. 2.1):
+  per-channel weight scales, per-tensor activation scales, z=0, half-way
+  rounding, STE,
+* ``mode='a2q'``  — accumulator-aware quantization (paper Sec. 4): l1
+  weight-normalized reparameterization (v, t, d), norm cap from the target
+  accumulator width P, round-toward-zero.  ``penalty()`` exposes the layer's
+  regularizer term.
+
+Hidden layers use (M, N, P) from :class:`~repro.configs.base.QuantConfig`;
+layers flagged ``boundary=True`` (first/last) stay at 8-bit as in App. B.
+``input_signed`` reflects the preceding nonlinearity (ReLU -> unsigned).
+
+Deployment: ``deploy_linear`` converts a trained A2Q layer to (int8 weights,
+per-channel scale) — the artifact whose l1 norm provably fits the P-bit
+accumulator — used by the serve path and by the int8-weight-storage roofline
+lever.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core.a2q import a2q_int_weights, a2q_norm_cap, apply_a2q, init_a2q
+from repro.core.quantizers import (
+    apply_act_quant,
+    apply_weight_qat,
+    init_act_quant,
+    init_weight_qat,
+    weight_qat_int,
+)
+from repro.nn.module import Boxed, box, kaiming
+
+__all__ = [
+    "init_linear",
+    "apply_linear",
+    "linear_penalty",
+    "deploy_linear",
+    "init_conv",
+    "apply_conv",
+]
+
+
+def _bits(cfg: QuantConfig, boundary: bool) -> tuple[int, int]:
+    if boundary:
+        return cfg.boundary_bits, cfg.boundary_bits
+    return cfg.weight_bits, cfg.act_bits
+
+
+def init_linear(
+    key,
+    d_in: int,
+    d_out: int,
+    cfg: QuantConfig,
+    *,
+    axes: Sequence[Optional[str]] = ("embed", "mlp"),
+    use_bias: bool = False,
+    boundary: bool = False,
+    input_signed: bool = True,
+    w_std: Optional[float] = None,
+    act_absmax: float = 6.0,
+) -> dict:
+    """Weights are stored ``(d_in, d_out)`` — output channels (accumulators)
+    on the last axis, matching ``core.a2q`` conventions."""
+    k_w, _ = jax.random.split(key)
+    if w_std is None:
+        w = kaiming(k_w, (d_in, d_out), fan_in=d_in)
+    else:
+        w = jax.random.normal(k_w, (d_in, d_out)) * w_std
+    M, N = _bits(cfg, boundary)
+    out_axis = axes[-1]
+    p: dict = {}
+    if cfg.mode == "none":
+        p["w"] = box(w, tuple(axes))
+    elif cfg.mode == "qat":
+        p["w"] = box(w, tuple(axes))
+        wq = init_weight_qat(w, M)
+        p["wq"] = {"log2_scale": box(wq["log2_scale"], (out_axis,))}
+        aq = init_act_quant(N, input_signed, init_absmax=act_absmax)
+        p["aq"] = {"log2_scale": box(aq["log2_scale"], ())}
+    elif cfg.mode == "a2q":
+        a = init_a2q(w, M, cfg.acc_bits, N, input_signed)
+        p["v"] = box(a["v"], tuple(axes))
+        p["t"] = box(a["t"], (out_axis,))
+        p["d"] = box(a["d"], (out_axis,))
+        aq = init_act_quant(N, input_signed, init_absmax=act_absmax)
+        p["aq"] = {"log2_scale": box(aq["log2_scale"], ())}
+    else:
+        raise ValueError(cfg.mode)
+    if use_bias:
+        p["b"] = box(jnp.zeros((d_out,), jnp.float32), (out_axis,))
+    return p
+
+
+def _quant_weights(params: dict, cfg: QuantConfig, boundary: bool, input_signed: bool):
+    M, N = _bits(cfg, boundary)
+    if "q8" in params:  # deployed int8 storage (beyond-paper serve lever)
+        return params["q8"].astype(jnp.float32) * params["s8"]
+    if cfg.mode == "none":
+        return params["w"]
+    if cfg.mode == "qat":
+        return apply_weight_qat({"log2_scale": params["wq"]["log2_scale"]}, params["w"], M)
+    if cfg.mode == "a2q":
+        return apply_a2q(
+            {"v": params["v"], "t": params["t"], "d": params["d"]},
+            M,
+            cfg.acc_bits,
+            N,
+            input_signed,
+        )
+    raise ValueError(cfg.mode)
+
+
+def apply_linear(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: QuantConfig,
+    *,
+    boundary: bool = False,
+    input_signed: bool = True,
+    compute_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """``y = act_quant(x) @ quant(w) (+ b)`` in ``compute_dtype``."""
+    M, N = _bits(cfg, boundary)
+    if cfg.mode != "none" and "aq" in params:
+        x = apply_act_quant(
+            {"log2_scale": params["aq"]["log2_scale"]}, x, N, signed=input_signed
+        )
+    w = _quant_weights(params, cfg, boundary, input_signed).astype(compute_dtype)
+    y = jnp.dot(x.astype(compute_dtype), w)
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def linear_penalty(params: dict, cfg: QuantConfig, boundary: bool, input_signed: bool) -> jnp.ndarray:
+    """This layer's ``R_l = sum_i max(t_i - T_i, 0)`` (zero unless a2q)."""
+    if cfg.mode != "a2q" or "t" not in params:
+        return jnp.zeros((), jnp.float32)
+    _, N = _bits(cfg, boundary)
+    T = a2q_norm_cap(params["d"], cfg.acc_bits, N, input_signed)
+    return jnp.sum(jnp.maximum(params["t"] - T, 0.0))
+
+
+def deploy_linear(params: dict, cfg: QuantConfig, *, boundary: bool = False, input_signed: bool = True) -> dict:
+    """A2Q/QAT layer -> inference artifacts {q8 int8, s8 scale [, b, aq]}."""
+    M, N = _bits(cfg, boundary)
+    if cfg.mode == "a2q":
+        q, s = a2q_int_weights(
+            {"v": params["v"], "t": params["t"], "d": params["d"]},
+            M,
+            cfg.acc_bits,
+            N,
+            input_signed,
+        )
+    elif cfg.mode == "qat":
+        q, s = weight_qat_int({"log2_scale": params["wq"]["log2_scale"]}, params["w"], M)
+    else:
+        raise ValueError("deploy requires a quantized mode")
+    out = {"q8": q.astype(jnp.int8), "s8": s.astype(jnp.float32)}
+    if "b" in params:
+        out["b"] = params["b"]
+    if "aq" in params:
+        out["aq"] = params["aq"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Conv (vision benchmarks: MobileNetV1 / ResNet18 / ESPCN / UNet)
+# ---------------------------------------------------------------------------
+
+
+def init_conv(
+    key,
+    c_in: int,
+    c_out: int,
+    kernel: tuple[int, int],
+    cfg: QuantConfig,
+    *,
+    groups: int = 1,
+    use_bias: bool = False,
+    boundary: bool = False,
+    input_signed: bool = False,  # vision nets are ReLU nets -> unsigned acts
+) -> dict:
+    """HWIO weights ``(kh, kw, c_in/groups, c_out)`` — channel axis last, so
+    A2Q's per-output-channel reduction (= per accumulator, K = kh*kw*c_in/g)
+    applies unchanged."""
+    kh, kw = kernel
+    fan_in = kh * kw * (c_in // groups)
+    w = kaiming(key, (kh, kw, c_in // groups, c_out), fan_in=fan_in)
+    axes = (None, None, None, "conv_out")
+    M, N = _bits(cfg, boundary)
+    p: dict = {}
+    if cfg.mode == "none":
+        p["w"] = box(w, axes)
+    elif cfg.mode == "qat":
+        p["w"] = box(w, axes)
+        p["wq"] = {"log2_scale": box(init_weight_qat(w, M)["log2_scale"], ("conv_out",))}
+        p["aq"] = {"log2_scale": box(init_act_quant(N, input_signed)["log2_scale"], ())}
+    elif cfg.mode == "a2q":
+        a = init_a2q(w, M, cfg.acc_bits, N, input_signed)
+        p["v"] = box(a["v"], axes)
+        p["t"] = box(a["t"], ("conv_out",))
+        p["d"] = box(a["d"], ("conv_out",))
+        p["aq"] = {"log2_scale": box(init_act_quant(N, input_signed)["log2_scale"], ())}
+    if use_bias:
+        p["b"] = box(jnp.zeros((c_out,), jnp.float32), ("conv_out",))
+    return p
+
+
+def apply_conv(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: QuantConfig,
+    *,
+    stride: tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+    groups: int = 1,
+    boundary: bool = False,
+    input_signed: bool = False,
+    compute_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """NHWC convolution with the same quant pipeline as apply_linear."""
+    M, N = _bits(cfg, boundary)
+    if cfg.mode != "none" and "aq" in params:
+        x = apply_act_quant(
+            {"log2_scale": params["aq"]["log2_scale"]}, x, N, signed=input_signed
+        )
+    w = _quant_weights(params, cfg, boundary, input_signed).astype(compute_dtype)
+    y = jax.lax.conv_general_dilated(
+        x.astype(compute_dtype),
+        w,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y

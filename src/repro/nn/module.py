@@ -1,0 +1,108 @@
+"""Minimal functional module system: param pytrees with logical sharding axes.
+
+Every parameter is created as a :class:`Boxed` leaf carrying ``(value, axes)``
+where ``axes`` is a tuple of *logical* axis names (one per array dim, ``None``
+for replicated dims).  ``dist/sharding.py`` maps logical names to mesh axes
+with divisibility-aware fallback.  Train/optimizer code operates on the
+*unboxed* value tree; the box tree is kept once per model to derive shardings.
+
+This is the flax ``param_with_axes`` idea without the framework: pure dicts,
+pure functions, scan-over-layers friendly (stacked leaves get a leading
+``'layers'`` axis added by ``stack_axes``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Boxed",
+    "box",
+    "unbox",
+    "axes_tree",
+    "with_layers_axis",
+    "kaiming",
+    "normal_init",
+    "zeros_init",
+    "ones_init",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    """A parameter value tagged with per-dim logical axis names."""
+
+    value: Any
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+
+def box(value: jnp.ndarray, axes: Sequence[Optional[str]]) -> Boxed:
+    axes = tuple(axes)
+    if hasattr(value, "ndim") and value.ndim != len(axes):
+        raise ValueError(f"axes {axes} do not match array rank {value.ndim}")
+    return Boxed(value, axes)
+
+
+def _is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Boxed tree -> plain value tree (what training code sees).  Non-boxed
+    leaves pass through (some trees mix boxed params with plain arrays)."""
+    return jax.tree.map(lambda b: b.value if _is_boxed(b) else b, tree, is_leaf=_is_boxed)
+
+
+def axes_tree(tree):
+    """Boxed tree -> tree of logical-axes tuples (same structure as unbox)."""
+    return jax.tree.map(
+        lambda b: b.axes if _is_boxed(b) else (None,) * getattr(b, "ndim", 0),
+        tree,
+        is_leaf=_is_boxed,
+    )
+
+
+def with_layers_axis(tree, name: str = "layers"):
+    """Prepend a stacked-layers logical axis to every box (scan-over-layers)."""
+    return jax.tree.map(lambda b: Boxed(b.value, (name,) + b.axes), tree, is_leaf=_is_boxed)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (explicit, no flax dependency)
+# ---------------------------------------------------------------------------
+
+
+def kaiming(key, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0] if len(shape) >= 1 else 1
+    std = (2.0 / max(fan_in, 1)) ** 0.5
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def normal_init(key, shape, std: float = 0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,270 @@
+"""Mixture-of-experts FFN with expert parallelism over the ``model`` mesh axis.
+
+Design (DESIGN.md Sec. 6.3): no ``(T, E, C)`` one-hot dispatch tensors — for
+deepseek-v3 (256 experts, 1M tokens/pod) that would be ~10^13 elements.
+Instead, inside ``shard_map`` each model-shard owns ``E/tp`` experts and:
+
+1. computes routing (replicated — the router is tiny),
+2. sorts the (token, expert) assignments owned by this shard by local expert,
+3. packs them into a capacity-bounded buffer (static shapes; overflow rows are
+   dropped, standard token-dropping semantics),
+4. runs the expert FFNs with ``jax.lax.ragged_dot`` over the packed groups,
+5. scatter-adds gate-weighted outputs back to token order (``segment_sum``),
+6. one ``psum`` over ``model`` combines shards — the same wire cost as a dense
+   TP FFN all-reduce, no all_to_all needed because activations enter the MoE
+   replicated over ``model`` (Megatron-style TP block layout).
+
+With ``ep_axis=None`` (tests / single device) the same packed-ragged path runs
+with all experts local — one code path, two mesh bindings.
+
+Expert weights are QuantLinear-style tensors ``(E, d_in, d_ff)`` so A2Q's
+per-output-channel budget applies per expert row (each expert output channel
+is its own accumulator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig, QuantConfig
+from repro.core.a2q import a2q_norm_cap, apply_a2q, init_a2q
+from repro.core.quantizers import apply_act_quant, init_act_quant
+from repro.nn.linear import apply_linear, init_linear, linear_penalty
+from repro.nn.module import box, kaiming
+
+__all__ = ["init_moe", "apply_moe", "moe_penalty"]
+
+
+def _init_expert_weight(key, e: int, d_in: int, d_out: int, q: QuantConfig, axes) -> dict:
+    w = kaiming(key, (e, d_in, d_out), fan_in=d_in)
+    if q.mode in ("none", "qat"):
+        # Baseline QAT on experts uses per-(expert, channel) scales folded into
+        # the standard per-channel machinery (channel axis is last).
+        p = {"w": box(w, axes)}
+        if q.mode == "qat":
+            absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)  # (E, d_out)
+            pmax = 2.0 ** (q.weight_bits - 1) - 1
+            p["wq"] = {"log2_scale": box(jnp.log2(absmax / pmax).astype(jnp.float32), (axes[0], axes[-1]))}
+        return p
+    # a2q: per-(expert, channel) t/d. core.a2q reduces all-but-last axes, so it
+    # is applied per expert slice inside the compute (vmap over E).
+    a = jax.vmap(lambda wi: init_a2q(wi, q.weight_bits, q.acc_bits, q.act_bits, True))(w)
+    return {
+        "v": box(a["v"], axes),
+        "t": box(a["t"], (axes[0], axes[-1])),
+        "d": box(a["d"], (axes[0], axes[-1])),
+    }
+
+
+def _expert_weight_view(p: dict, q: QuantConfig) -> jnp.ndarray:
+    """Quantized (fake-quant) view of an (E_local, d_in, d_out) expert weight."""
+    if "q8" in p:  # deployed int8 storage
+        return p["q8"].astype(jnp.float32) * p["s8"][:, None, :]
+    if q.mode == "none":
+        return p["w"]
+    if q.mode == "qat":
+        scale = jnp.exp2(p["wq"]["log2_scale"])[:, None, :]
+        pmax = 2.0 ** (q.weight_bits - 1) - 1
+        from repro.core.quantizers import ste_round
+
+        qw = jnp.clip(ste_round(p["w"] / scale), -pmax - 1, pmax)
+        return qw * scale
+    return jax.vmap(
+        lambda v, t, d: apply_a2q(
+            {"v": v, "t": t, "d": d}, q.weight_bits, q.acc_bits, q.act_bits, True
+        )
+    )(p["v"], p["t"], p["d"])
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, q: QuantConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": box(kaiming(ks[0], (d_model, cfg.n_experts), fan_in=d_model), ("embed", None)),
+        "w_in": _init_expert_weight(ks[1], cfg.n_experts, d_model, cfg.d_ff, q, ("experts", "embed", None)),
+        "w_gate": _init_expert_weight(ks[2], cfg.n_experts, d_model, cfg.d_ff, q, ("experts", "embed", None)),
+        "w_out": _init_expert_weight(ks[3], cfg.n_experts, cfg.d_ff, d_model, q, ("experts", None, "embed")),
+    }
+    if q.mode != "none":
+        p["aq"] = {"log2_scale": box(init_act_quant(q.act_bits, True)["log2_scale"], ())}
+    if cfg.n_shared:
+        ff = cfg.shared_d_ff or cfg.d_ff * cfg.n_shared
+        p["shared_in"] = init_linear(ks[4], d_model, ff, q, axes=("embed", "mlp"))
+        p["shared_gate"] = init_linear(jax.random.fold_in(ks[4], 1), d_model, ff, q, axes=("embed", "mlp"))
+        p["shared_out"] = init_linear(ks[5], ff, d_model, q, axes=("mlp", "embed"))
+    return p
+
+
+def _local_expert_ffn(x_buf, w_in, w_gate, w_out, group_sizes, q: QuantConfig, compute_dtype):
+    """Packed ragged FFN: x_buf (L, d) grouped rows, weights (E_loc, ...)."""
+    cd = compute_dtype
+    h_in = jax.lax.ragged_dot(x_buf.astype(cd), w_in.astype(cd), group_sizes)
+    h_gate = jax.lax.ragged_dot(x_buf.astype(cd), w_gate.astype(cd), group_sizes)
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(cd) * h_in
+    return jax.lax.ragged_dot(h, w_out.astype(cd), group_sizes)
+
+
+def _dispatch_compute_combine(
+    x2d: jnp.ndarray,  # (T_loc, d) tokens on this shard
+    probs: jnp.ndarray,  # (T_loc, E) full router probabilities
+    w_in: jnp.ndarray,  # (E_loc, d, f) this shard's experts (quantized view)
+    w_gate: jnp.ndarray,
+    w_out: jnp.ndarray,
+    cfg: MoEConfig,
+    q: QuantConfig,
+    shard_idx: jnp.ndarray,  # scalar: which expert shard am I
+    n_shards: int,
+    compute_dtype,
+) -> jnp.ndarray:
+    T, d = x2d.shape
+    E = cfg.n_experts
+    E_loc = E // n_shards
+    k = cfg.top_k
+    capacity = max(int(T * k * cfg.capacity_factor / E), 1)
+    L = E_loc * capacity
+
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+
+    first = shard_idx * E_loc
+    local_e = flat_e - first
+    is_local = (local_e >= 0) & (local_e < E_loc)
+    sort_key = jnp.where(is_local, local_e, E_loc)  # non-local sorts last
+    order = jnp.argsort(sort_key, stable=True)
+    se, st, sp = sort_key[order], flat_tok[order], flat_p[order]
+
+    counts = jnp.bincount(se, length=E_loc + 1)[:E_loc]  # local expert loads
+    capped = jnp.minimum(counts, capacity)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(capped)[:-1]])
+    seg_start = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])
+    pos_in_group = jnp.arange(se.shape[0]) - seg_start[jnp.clip(se, 0, E_loc)]
+    keep = (se < E_loc) & (pos_in_group < capacity)
+    dest = jnp.where(keep, offsets[jnp.clip(se, 0, E_loc - 1)] + pos_in_group, L)
+
+    x_buf = jnp.zeros((L + 1, d), x2d.dtype).at[dest].set(x2d[st])
+    y_buf = _local_expert_ffn(
+        x_buf[:L], w_in, w_gate, w_out, capped.astype(jnp.int32), q, compute_dtype
+    )
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((1, d), y_buf.dtype)], axis=0)
+    contrib = y_buf[dest] * sp[:, None].astype(y_buf.dtype)  # dropped rows read zeros
+    out = jax.ops.segment_sum(
+        jnp.where(keep[:, None], contrib, 0.0), st, num_segments=T
+    )
+    return out.astype(x2d.dtype)
+
+
+def apply_moe(
+    params: dict,
+    x: jnp.ndarray,  # (B, T, d) — replicated over the model axis
+    cfg: MoEConfig,
+    q: QuantConfig,
+    *,
+    ep_axis: Optional[str] = None,
+    mesh=None,
+    compute_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    B, T, d = x.shape
+    if q.mode != "none" and "aq" in params:
+        x = apply_act_quant({"log2_scale": params["aq"]["log2_scale"]}, x, q.act_bits, signed=True)
+    x2d = x.reshape(B * T, d)
+    logits = x2d.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    w_in = _expert_weight_view(params["w_in"], q)
+    w_gate = _expert_weight_view(params["w_gate"], q)
+    w_out = _expert_weight_view(params["w_out"], q)
+
+    if ep_axis is None:
+        out2d = _dispatch_compute_combine(
+            x2d, probs, w_in, w_gate, w_out, cfg, q,
+            jnp.zeros((), jnp.int32), 1, compute_dtype,
+        )
+    elif isinstance(ep_axis, tuple):
+        # EP over multiple mesh axes (e.g. ('model', 'data') for serving:
+        # 1 expert/chip on 256 chips, no weight gathering).  Tokens replicate;
+        # the combine is one psum over both axes.
+        assert mesh is not None
+        n_shards = 1
+        for a in ep_axis:
+            n_shards *= mesh.shape[a]
+        assert cfg.n_experts % n_shards == 0, (cfg.n_experts, n_shards)
+
+        def shard_fn2(x_l, probs_l, wi, wg, wo):
+            idx = jnp.zeros((), jnp.int32)
+            for a in ep_axis:  # row-major over the listed axes
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            out = _dispatch_compute_combine(
+                x_l, probs_l, wi, wg, wo, cfg, q, idx, n_shards, compute_dtype
+            )
+            return jax.lax.psum(out, ep_axis)
+
+        espec = P(ep_axis, None, None)
+        out2d = jax.shard_map(
+            shard_fn2,
+            mesh=mesh,
+            in_specs=(P(None, None), P(None, None), espec, espec, espec),
+            out_specs=P(None, None),
+            check_vma=False,
+        )(x2d, probs, w_in, w_gate, w_out)
+    else:
+        assert mesh is not None, "ep_axis requires a mesh"
+        n_shards = mesh.shape[ep_axis]
+        other_axes = tuple(n for n in mesh.axis_names if n != ep_axis)
+        # tokens shard over the non-EP axes only when divisible (a single
+        # decode token at long_500k batch=1 replicates instead)
+        n_tok_shards = 1
+        for a in other_axes:
+            n_tok_shards *= mesh.shape[a]
+        token_axes = other_axes if (other_axes and (B * T) % n_tok_shards == 0) else None
+
+        def shard_fn(x_l, probs_l, wi, wg, wo):
+            idx = jax.lax.axis_index(ep_axis)
+            out = _dispatch_compute_combine(
+                x_l, probs_l, wi, wg, wo, cfg, q, idx, n_shards, compute_dtype
+            )
+            return jax.lax.psum(out, ep_axis)
+
+        out2d = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(
+                P(token_axes, None),
+                P(token_axes, None),
+                P(ep_axis, None, None),
+                P(ep_axis, None, None),
+                P(ep_axis, None, None),
+            ),
+            out_specs=P(token_axes, None),
+            check_vma=False,
+        )(x2d, probs, w_in, w_gate, w_out)
+
+    out = out2d.reshape(B, T, d)
+    if "shared_in" in params:
+        lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+        h = jax.nn.silu(lin(params["shared_gate"], x=x).astype(jnp.float32)).astype(compute_dtype)
+        h = h * lin(params["shared_in"], x=x)
+        out = out + lin(params["shared_out"], x=h)
+    return out
+
+
+def moe_penalty(params: dict, cfg: MoEConfig, q: QuantConfig) -> jnp.ndarray:
+    """A2Q regularizer over expert + shared weights."""
+    total = jnp.zeros((), jnp.float32)
+    if q.mode != "a2q":
+        return total
+    for name in ("w_in", "w_gate", "w_out"):
+        p = params[name]
+        T_cap = a2q_norm_cap(p["d"], q.acc_bits, q.act_bits, True)
+        total = total + jnp.sum(jnp.maximum(p["t"] - T_cap, 0.0))
+    for name in ("shared_in", "shared_gate", "shared_out"):
+        if name in params:
+            total = total + linear_penalty(params[name], q, False, True)
+    return total

@@ -1,0 +1,33 @@
+"""RMSNorm / LayerNorm (fp32 accumulation, cast back to compute dtype)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn.module import Boxed, box
+
+__all__ = ["init_norm", "apply_norm"]
+
+
+def init_norm(d: int, kind: str = "rmsnorm", axis_name: str = "embed") -> dict:
+    params = {"scale": box(jnp.ones((d,), jnp.float32), (axis_name,))}
+    if kind == "layernorm":
+        params["bias"] = box(jnp.zeros((d,), jnp.float32), (axis_name,))
+    return params
+
+
+def apply_norm(params: dict, x: jnp.ndarray, kind: str = "rmsnorm", eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * (var + eps) ** -0.5
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * (var + eps) ** -0.5
+    else:
+        raise ValueError(kind)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,357 @@
+"""Attention-free sequence mixers: RWKV-6 (Finch) and Mamba-2-style SSD heads.
+
+Both are "diagonal decay + rank-1 update" recurrences, O(1) state in sequence
+length — the property that makes rwkv6-7b / hymba-1.5b runnable at the
+long_500k cell.  Training/prefill uses the *chunked parallel form* (two GEMMs
++ one masked score matmul per chunk; per-chunk cumulative decay products in
+log space), which is MXU-friendly and keeps backward memory at one state per
+chunk instead of one per step.  Decode applies the recurrence directly to the
+carried state.
+
+Numerics: within-chunk decay ratios ``exp(logA_t - logA_i)`` are <= 1 for the
+terms that matter; the two factors are materialized separately, so per-step
+log-decay is clamped to >= -8 (a decay of 3e-4/step is indistinguishable from
+a reset) to keep ``exp(+|logA|)`` inside fp32 at chunk 64.  The sequential
+scan oracle lives here too (``*_sequential``) and the tests assert the chunked
+forms match it.
+
+A2Q attaches to every projection in the blocks built on these mixers (r/k/v/g
+/o, channel-mix, in/out projections); the recurrence itself is a
+data-dependent elementwise update with no frozen weight vector, so Eq. 15 has
+nothing to bound there (DESIGN.md Sec. 5, noted inapplicability).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig, SSMConfig
+from repro.nn.linear import apply_linear, init_linear
+from repro.nn.module import box, normal_init
+
+__all__ = [
+    "rwkv6_chunked",
+    "rwkv6_sequential",
+    "ssd_chunked",
+    "ssd_sequential",
+    "init_rwkv6_timemix",
+    "apply_rwkv6_timemix",
+    "init_rwkv6_channelmix",
+    "apply_rwkv6_channelmix",
+    "init_mamba_heads",
+    "apply_mamba_heads",
+]
+
+_MIN_LOGW = -8.0
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 recurrence
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_sequential(r, k, v, w, u, S0):
+    """Oracle: step-by-step scan.  Shapes (B, H, T, Dk/Dv), u (H, Dk),
+    S0 (B, H, Dk, Dv).  Returns (y (B, H, T, Dv), S_T)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,Dk) ... (B,H,Dv)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(t.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32) for t in (r, k, v, w))
+    # (T, B, H, D)
+    S, ys = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), S
+
+
+def rwkv6_chunked(r, k, v, w, u, S0, chunk: int = 32):
+    """Chunked parallel form.  Same signature/semantics as the oracle."""
+    B, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return x.reshape(B, H, nc, chunk, x.shape[-1]).transpose(2, 0, 1, 3, 4).astype(f32)
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(w.astype(f32), 1e-30)), _MIN_LOGW)
+
+    def body(S, inp):
+        r_c, k_c, v_c, lw = inp  # (B, H, L, D*)
+        logA = jnp.cumsum(lw, axis=2)  # inclusive within-chunk products
+        logA_prev = logA - lw  # exclusive
+        r_in = r_c * jnp.exp(logA_prev)
+        k_in = k_c * jnp.exp(-logA)
+        y = jnp.einsum("bhld,bhdv->bhlv", r_in, S)  # inter-chunk
+        att = jnp.einsum("bhld,bhmd->bhlm", r_in, k_in)
+        tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)  # strictly lower
+        y = y + jnp.einsum("bhlm,bhmv->bhlv", att * tri, v_c)
+        diag = jnp.einsum("bhld,bhld->bhl", r_c, u[None, :, None, :] * k_c)
+        y = y + diag[..., None] * v_c
+        k_out = k_c * jnp.exp(logA[:, :, -1:, :] - logA)  # (A_L / A_i) <= 1
+        S = jnp.exp(logA[:, :, -1, :])[..., None] * S + jnp.einsum(
+            "bhld,bhlv->bhdv", k_out, v_c
+        )
+        return S, y
+
+    xs = (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw))
+    S, ys = jax.lax.scan(body, S0.astype(f32), xs)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, T, Dv)
+    return y.astype(r.dtype), S
+
+
+def rwkv6_decode_step(r, k, v, w, u, S):
+    """One token: r/k/v/w (B, H, Dk|Dv), S (B, H, Dk, Dv)."""
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    return y, S
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2-style SSD (scalar per-head decay) for hymba's mamba heads
+# ---------------------------------------------------------------------------
+
+
+def ssd_sequential(x, a, Bm, Cm, S0):
+    """Oracle.  x (B,H,T,Dh) pre-scaled input (delta already folded in),
+    a (B,H,T) per-step decay in (0,1], Bm/Cm (B,H,T,N), S0 (B,H,Dh,N).
+    y_t = S_t C_t;  S_t = a_t S_{t-1} + x_t B_t^T."""
+
+    def step(S, inp):
+        x_t, a_t, b_t, c_t = inp
+        S = a_t[..., None, None] * S + x_t[..., :, None] * b_t[..., None, :]
+        y = jnp.einsum("bhdn,bhn->bhd", S, c_t)
+        return S, y
+
+    xs = (
+        x.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32),
+        a.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32),
+        Bm.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32),
+        Cm.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32),
+    )
+    S, ys = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype), S
+
+
+def ssd_chunked(x, a, Bm, Cm, S0, chunk: int = 32):
+    """Chunked parallel SSD (Mamba-2): scalar decay factorizes the intra-chunk
+    term into ``(C B^T) * decay-matrix`` — two GEMMs + one masked matmul."""
+    B, H, T, Dh = x.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        tail = t.shape[3:]
+        return t.reshape(B, H, nc, chunk, *tail).transpose(2, 0, 1, 3, *range(4, 4 + len(tail))).astype(f32)
+
+    loga = jnp.maximum(jnp.log(jnp.maximum(a.astype(f32), 1e-30)), _MIN_LOGW)
+
+    def body(S, inp):
+        x_c, la, b_c, c_c = inp  # (B,H,L,Dh), (B,H,L), (B,H,L,N), (B,H,L,N)
+        logA = jnp.cumsum(la, axis=2)  # inclusive
+        # y_t = C_t S_t;  S_t includes the i == t update -> inclusive ratios.
+        c_in = c_c * jnp.exp(logA)[..., None]
+        b_in = b_c * jnp.exp(-logA)[..., None]
+        y = jnp.einsum("bhln,bhdn->bhld", c_in, S)  # inter-chunk
+        att = jnp.einsum("bhln,bhmn->bhlm", c_in, b_in)
+        tri = jnp.tril(jnp.ones((chunk, chunk), f32))  # includes diagonal
+        y = y + jnp.einsum("bhlm,bhmd->bhld", att * tri, x_c)
+        b_out = b_c * jnp.exp(logA[:, :, -1:] - logA)[..., None]
+        S = jnp.exp(logA[:, :, -1])[..., None, None] * S + jnp.einsum(
+            "bhld,bhln->bhdn", x_c, b_out
+        )
+        return S, y
+
+    xs = (to_chunks(x), to_chunks(loga), to_chunks(Bm), to_chunks(Cm))
+    S, ys = jax.lax.scan(body, S0.astype(f32), xs)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, T, Dh)
+    return y.astype(x.dtype), S
+
+
+def ssd_decode_step(x, a, Bm, Cm, S):
+    f32 = jnp.float32
+    x, a, Bm, Cm = (t.astype(f32) for t in (x, a, Bm, Cm))
+    S = a[..., None, None] * S + x[..., :, None] * Bm[..., None, :]
+    y = jnp.einsum("bhdn,bhn->bhd", S, Cm)
+    return y, S
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block sublayers (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x_{t-1} stream: returns (shifted x, new carry = x_T)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def init_rwkv6_timemix(key, d_model: int, ssm: SSMConfig, q: QuantConfig) -> dict:
+    H = d_model // ssm.head_dim
+    Dk = ssm.head_dim
+    ks = jax.random.split(key, 8)
+    lin = functools.partial(init_linear, cfg=q)
+    return {
+        "mix": box(jnp.full((5, d_model), 0.5, jnp.float32), (None, "embed")),
+        "wr": lin(ks[0], d_model, d_model, axes=("embed", "heads")),
+        "wk": lin(ks[1], d_model, d_model, axes=("embed", "heads")),
+        "wv": lin(ks[2], d_model, d_model, axes=("embed", "heads")),
+        "wg": lin(ks[3], d_model, d_model, axes=("embed", "heads")),
+        "wo": lin(ks[4], d_model, d_model, axes=("heads", "embed")),
+        # data-dependent decay LoRA: d_model -> rank -> d_model
+        "w_lora_a": box(normal_init(ks[5], (d_model, ssm.lora_rank), 0.02), ("embed", None)),
+        "w_lora_b": box(normal_init(ks[6], (ssm.lora_rank, d_model), 0.02), (None, "heads")),
+        "w0": box(jnp.zeros((d_model,), jnp.float32) - 0.6, ("heads",)),
+        "u": box(normal_init(ks[7], (H, Dk), 0.02), ("heads", None)),
+        "ln_scale": box(jnp.ones((d_model,), jnp.float32), ("embed",)),
+    }
+
+
+def apply_rwkv6_timemix(
+    params: dict,
+    x: jnp.ndarray,
+    ssm: SSMConfig,
+    q: QuantConfig,
+    state: Optional[dict] = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """state = {'S': (B,H,Dk,Dv), 'shift': (B,1,d)} for decode; None = parallel."""
+    B, T, D = x.shape
+    Dk = ssm.head_dim
+    H = D // Dk
+    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    last = state["shift"] if state is not None else None
+    xs, new_shift = _token_shift(x, last)
+    mix = params["mix"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mix[i] * (xs - x) for i in range(5))
+    to_heads = lambda t: t.reshape(B, T, H, Dk).transpose(0, 2, 1, 3)
+    r = to_heads(lin(params["wr"], x=xr))
+    k = to_heads(lin(params["wk"], x=xk))
+    v = to_heads(lin(params["wv"], x=xv))
+    g = lin(params["wg"], x=xg)
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["w_lora_a"].astype(jnp.float32))
+    dd = lora @ params["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32) + dd))  # (B,T,D) in (0,1)
+    w = to_heads(w)
+    u = params["u"].astype(jnp.float32)
+
+    if state is None:
+        S0 = jnp.zeros((B, H, Dk, Dk), jnp.float32)
+        y, S = rwkv6_chunked(r, k, v, w, u, S0, chunk=ssm.chunk)
+        new_state = None
+    else:
+        y1, S = rwkv6_decode_step(r[:, :, 0], k[:, :, 0], v[:, :, 0], w[:, :, 0], u, state["S"])
+        y = y1[:, :, None, :]
+        new_state = {"S": S, "shift": new_shift}
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, D)
+    # per-head groupnorm then silu(g) gate
+    yf = y.astype(jnp.float32).reshape(B, T, H, Dk)
+    yf = (yf - yf.mean(-1, keepdims=True)) * (yf.var(-1, keepdims=True) + 1e-5) ** -0.5
+    y = (yf.reshape(B, T, D) * params["ln_scale"].astype(jnp.float32)).astype(compute_dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype)
+    return lin(params["wo"], x=y), new_state
+
+
+def init_rwkv6_channelmix(key, d_model: int, d_ff: int, q: QuantConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "mix": box(jnp.full((d_model,), 0.5, jnp.float32), ("embed",)),
+        "wk": init_linear(ks[0], d_model, d_ff, q, axes=("embed", "mlp")),
+        "wv": init_linear(ks[1], d_ff, d_model, q, axes=("mlp", "embed"), input_signed=False),
+    }
+
+
+def apply_rwkv6_channelmix(
+    params: dict,
+    x: jnp.ndarray,
+    q: QuantConfig,
+    state: Optional[dict] = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    last = state["shift"] if state is not None else None
+    xs, new_shift = _token_shift(x, last)
+    xk = x + params["mix"].astype(x.dtype) * (xs - x)
+    h = lin(params["wk"], x=xk)
+    h = jnp.square(jax.nn.relu(h))  # squared-relu: non-negative -> unsigned acts
+    out = lin(params["wv"], x=h, input_signed=False)
+    return out, ({"shift": new_shift} if state is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# Mamba heads (hymba): Mamba-2 SSD with scalar per-head decay
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_heads(key, d_model: int, ssm: SSMConfig, q: QuantConfig) -> dict:
+    H = d_model // ssm.head_dim
+    N = ssm.state_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": init_linear(ks[0], d_model, 2 * d_model, q, axes=("embed", "heads")),
+        "bc_proj": init_linear(ks[1], d_model, 2 * H * N, q, axes=("embed", "heads")),
+        "dt_proj": init_linear(ks[2], d_model, H, q, axes=("embed", "heads")),
+        "A_log": box(jnp.zeros((H,), jnp.float32), ("heads",)),
+        "D": box(jnp.ones((H, ssm.head_dim), jnp.float32), ("heads", None)),
+        "out_proj": init_linear(ks[3], d_model, d_model, q, axes=("heads", "embed")),
+        "dt_bias": box(jnp.full((H,), -4.6, jnp.float32), ("heads",)),  # softplus ~ 0.01
+    }
+
+
+def apply_mamba_heads(
+    params: dict,
+    x: jnp.ndarray,
+    ssm: SSMConfig,
+    q: QuantConfig,
+    state: Optional[dict] = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """state = {'S': (B,H,Dh,N)} for decode."""
+    B, T, D = x.shape
+    Dh = ssm.head_dim
+    H = D // Dh
+    N = ssm.state_dim
+    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    xz = lin(params["in_proj"], x=x)
+    xin, z = xz[..., :D], xz[..., D:]
+    bc = lin(params["bc_proj"], x=x).astype(jnp.float32).reshape(B, T, H, 2 * N)
+    Bm, Cm = bc[..., :N].transpose(0, 2, 1, 3), bc[..., N:].transpose(0, 2, 1, 3)
+    dt = jax.nn.softplus(
+        lin(params["dt_proj"], x=x).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,T,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
+    a = jnp.exp(dt * A[None, None, :]).transpose(0, 2, 1)  # (B,H,T) decay in (0,1)
+    xh = xin.astype(jnp.float32).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    xh = xh * dt.transpose(0, 2, 1)[..., None]  # fold delta into the input
+
+    if state is None:
+        S0 = jnp.zeros((B, H, Dh, N), jnp.float32)
+        y, S = ssd_chunked(xh, a, Bm, Cm, S0, chunk=ssm.chunk)
+        new_state = None
+    else:
+        y1, S = ssd_decode_step(xh[:, :, 0], a[:, :, 0], Bm[:, :, 0], Cm[:, :, 0], state["S"])
+        y = y1[:, :, None, :]
+        new_state = {"S": S}
+    skip = params["D"].astype(jnp.float32)[None, :, None, :] * xh
+    y = (y + skip).transpose(0, 2, 1, 3).reshape(B, T, D).astype(compute_dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype)
+    return lin(params["out_proj"], x=y), new_state

@@ -1,0 +1,295 @@
+"""Blocks and scan-over-layers stacks.
+
+A model is a sequence of *stacks*; each stack is ``count`` identical blocks
+compiled as one ``jax.lax.scan`` over stacked parameters (HLO size and compile
+time O(1) in depth — essential for compiling 61-layer deepseek-v3 against 512
+host devices).  Heterogeneous architectures (deepseek dense-then-MoE, llama4
+local/global interleave) are expressed as multiple stacks.
+
+Block kinds:
+  * ``attn_mlp`` — pre-norm GQA/MLA + SwiGLU (or parallel attn+FFN, command-r)
+  * ``moe``      — pre-norm attention + MoE FFN (+ shared experts)
+  * ``rwkv6``    — time-mix + channel-mix
+  * ``hymba``    — parallel SWA-attention and mamba(SSD) heads, then MLP
+
+Every block returns ``(x, cache, a2q_penalty)``; the scan accumulates the
+penalty so ``L_reg`` falls out of the forward pass for free.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, QuantConfig, StackConfig
+from repro.nn.attention import apply_attention, attention_penalty, init_attention, init_attn_cache
+from repro.nn.linear import apply_linear, init_linear, linear_penalty
+from repro.nn.moe import apply_moe, init_moe, moe_penalty
+from repro.nn.module import unbox, with_layers_axis
+from repro.nn.norms import apply_norm, init_norm
+from repro.nn.ssm import (
+    apply_mamba_heads,
+    apply_rwkv6_channelmix,
+    apply_rwkv6_timemix,
+    init_mamba_heads,
+    init_rwkv6_channelmix,
+    init_rwkv6_timemix,
+)
+
+__all__ = ["init_stack", "apply_stack", "init_stack_cache", "tree_a2q_penalty"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _init_mlp(key, d: int, ff: int, q: QuantConfig, gated: bool, use_bias: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": init_linear(ks[0], d, ff, q, axes=("embed", "mlp"), use_bias=use_bias),
+        "w_out": init_linear(ks[1], ff, d, q, axes=("mlp", "embed"), use_bias=use_bias),
+    }
+    if gated:
+        p["w_gate"] = init_linear(ks[2], d, ff, q, axes=("embed", "mlp"), use_bias=use_bias)
+    return p
+
+
+def _apply_mlp(p: dict, x, q: QuantConfig, compute_dtype) -> jnp.ndarray:
+    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    h = lin(p["w_in"], x=x)
+    if "w_gate" in p:
+        h = jax.nn.silu(lin(p["w_gate"], x=x).astype(jnp.float32)).astype(compute_dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(compute_dtype)
+    return lin(p["w_out"], x=h)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, arch: ArchConfig, s: StackConfig) -> dict:
+    d, q = arch.d_model, arch.quant
+    ks = jax.random.split(key, 4)
+    norm = lambda: init_norm(d, arch.norm)
+    if s.kind in ("attn_mlp", "moe"):
+        p = {"ln1": norm(), "attn": init_attention(ks[0], d, s.attn, q, arch.use_bias)}
+        if not s.parallel_block:
+            p["ln2"] = norm()
+        if s.kind == "attn_mlp":
+            p["mlp"] = _init_mlp(ks[1], d, s.d_ff, q, s.mlp_gated, arch.use_bias)
+        else:
+            p["moe"] = init_moe(ks[1], d, s.moe, q)
+        return p
+    if s.kind == "rwkv6":
+        return {
+            "ln1": norm(),
+            "tm": init_rwkv6_timemix(ks[0], d, s.ssm, q),
+            "ln2": norm(),
+            "cm": init_rwkv6_channelmix(ks[1], d, s.d_ff, q),
+        }
+    if s.kind == "hymba":
+        return {
+            "ln1": norm(),
+            "attn": init_attention(ks[0], d, s.attn, q, arch.use_bias),
+            "mamba": init_mamba_heads(ks[1], d, s.ssm, q),
+            "ln2": norm(),
+            "mlp": _init_mlp(ks[2], d, s.d_ff, q, s.mlp_gated, arch.use_bias),
+        }
+    raise ValueError(s.kind)
+
+
+def _apply_block(
+    p: dict,
+    x: jnp.ndarray,
+    arch: ArchConfig,
+    s: StackConfig,
+    positions: jnp.ndarray,
+    cache: Optional[dict],
+    *,
+    mesh=None,
+    ep_axis: Optional[str] = None,
+    mla_absorb: bool = False,
+):
+    q = arch.quant
+    cd = jnp.dtype(arch.compute_dtype)
+    norm = functools.partial(apply_norm, kind=arch.norm, eps=arch.norm_eps)
+    new_cache: dict = {}
+    if s.kind in ("attn_mlp", "moe"):
+        h = norm(p["ln1"], x)
+        attn_out, c = apply_attention(
+            p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
+            q_chunk=arch.attn_q_chunk, compute_dtype=cd, mla_absorb=mla_absorb,
+        )
+        if c is not None:
+            new_cache["attn"] = c
+        if s.parallel_block:
+            if s.kind == "moe":
+                ffn = apply_moe(p["moe"], h, s.moe, q, ep_axis=ep_axis, mesh=mesh, compute_dtype=cd)
+            else:
+                ffn = _apply_mlp(p["mlp"], h, q, cd)
+            x = x + attn_out + ffn
+        else:
+            x = x + attn_out
+            h2 = norm(p["ln2"], x)
+            if s.kind == "moe":
+                ffn = apply_moe(p["moe"], h2, s.moe, q, ep_axis=ep_axis, mesh=mesh, compute_dtype=cd)
+            else:
+                ffn = _apply_mlp(p["mlp"], h2, q, cd)
+            x = x + ffn
+    elif s.kind == "rwkv6":
+        h = norm(p["ln1"], x)
+        y, c = apply_rwkv6_timemix(p["tm"], h, s.ssm, q, (cache or {}).get("tm"), compute_dtype=cd)
+        if c is not None:
+            new_cache["tm"] = c
+        x = x + y
+        h2 = norm(p["ln2"], x)
+        y2, c2 = apply_rwkv6_channelmix(p["cm"], h2, q, (cache or {}).get("cm"), compute_dtype=cd)
+        if c2 is not None:
+            new_cache["cm"] = c2
+        x = x + y2
+    elif s.kind == "hymba":
+        h = norm(p["ln1"], x)
+        attn_out, c = apply_attention(
+            p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
+            q_chunk=arch.attn_q_chunk, compute_dtype=cd,
+        )
+        if c is not None:
+            new_cache["attn"] = c
+        m_out, cm = apply_mamba_heads(p["mamba"], h, s.ssm, q, (cache or {}).get("mamba"), compute_dtype=cd)
+        if cm is not None:
+            new_cache["mamba"] = cm
+        x = x + 0.5 * (attn_out + m_out)
+        x = x + _apply_mlp(p["mlp"], norm(p["ln2"], x), q, cd)
+    else:
+        raise ValueError(s.kind)
+
+    penalty = tree_a2q_penalty(p, q)
+    return x, (new_cache or None), penalty
+
+
+# Param subtrees whose matmul consumes *unsigned* activations (post-relu^2):
+_UNSIGNED_LEAF_NAMES = {"wv_channelmix"}
+
+
+def tree_a2q_penalty(p, q: QuantConfig) -> jnp.ndarray:
+    """Walk a block's params and sum every A2Q layer's regularizer.
+
+    The channel-mix ``wv`` (post-relu^2, unsigned input) is the one layer whose
+    cap uses 1_signed = 0; all other transformer matmuls see signed inputs.
+    """
+    total = jnp.zeros((), jnp.float32)
+    if q.mode != "a2q":
+        return total
+
+    def walk(node, path):
+        nonlocal total
+        if isinstance(node, dict):
+            if "t" in node and "d" in node and "v" in node:
+                signed = not (len(path) >= 2 and path[-2] == "cm" and path[-1] == "wv")
+                if node["t"].ndim == 2:  # stacked experts (E, C)
+                    from repro.core.a2q import a2q_norm_cap
+
+                    T = a2q_norm_cap(node["d"], q.acc_bits, q.act_bits, signed)
+                    total = total + jnp.sum(jnp.maximum(node["t"] - T, 0.0))
+                else:
+                    total = total + linear_penalty(node, q, False, signed)
+            else:
+                for k, v in node.items():
+                    walk(v, path + (k,))
+
+    walk(p, ())
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Stacks: vmapped init, scanned apply
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, arch: ArchConfig, s: StackConfig):
+    """Stacked (leading ``count`` dim) boxed params for one stack."""
+    keys = jax.random.split(key, s.count)
+    stacked = jax.vmap(lambda k: _init_block(k, arch, s))(keys)
+    return with_layers_axis(stacked)
+
+
+def apply_stack(
+    params,
+    x: jnp.ndarray,
+    arch: ArchConfig,
+    s: StackConfig,
+    positions: jnp.ndarray,
+    cache=None,
+    *,
+    mesh=None,
+    ep_axis: Optional[str] = None,
+    mla_absorb: bool = False,
+):
+    """Scan ``s.count`` blocks.  Returns (x, new_cache, total_penalty)."""
+
+    def body(carry, layer_in):
+        xc = carry
+        layer_params, layer_cache = layer_in
+        xn, new_cache, pen = _apply_block(
+            layer_params, xc, arch, s, positions, layer_cache,
+            mesh=mesh, ep_axis=ep_axis, mla_absorb=mla_absorb,
+        )
+        return xn, (new_cache, pen)
+
+    if arch.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if s.count == 1 or arch.unroll_stacks:
+        # Python loop: singleton stacks, and the roofline costing variants
+        # (XLA cost_analysis counts a scan body once, so per-layer costs are
+        # measured on unrolled models — see launch/dryrun.py).
+        new_caches, pens = [], []
+        xc = x
+        for i in range(s.count):
+            lp = jax.tree.map(lambda a: a[i], params)
+            lc = jax.tree.map(lambda a: a[i], cache) if cache is not None else None
+            xc, (nc, pen) = body(xc, (lp, lc))
+            new_caches.append(nc)
+            pens.append(pen)
+        if new_caches[0] is not None:
+            new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *new_caches)
+        else:
+            new_cache = None
+        return xc, new_cache, sum(pens)
+
+    x, (new_cache, pens) = jax.lax.scan(body, x, (params, cache))
+    return x, new_cache, jnp.sum(pens)
+
+
+def init_stack_cache(arch: ArchConfig, s: StackConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Stacked decode cache for one stack (leading dim = s.count)."""
+    d = arch.d_model
+
+    def one():
+        if s.kind in ("attn_mlp", "moe"):
+            return {"attn": init_attn_cache(batch, s.attn, max_seq, dtype)}
+        if s.kind == "rwkv6":
+            H = d // s.ssm.head_dim
+            return {
+                "tm": {
+                    "S": jnp.zeros((batch, H, s.ssm.head_dim, s.ssm.head_dim), jnp.float32),
+                    "shift": jnp.zeros((batch, 1, d), dtype),
+                },
+                "cm": {"shift": jnp.zeros((batch, 1, d), dtype)},
+            }
+        if s.kind == "hymba":
+            H = d // s.ssm.head_dim
+            return {
+                "attn": init_attn_cache(batch, s.attn, max_seq, dtype),
+                "mamba": {"S": jnp.zeros((batch, H, s.ssm.head_dim, s.ssm.state_dim), jnp.float32)},
+            }
+        raise ValueError(s.kind)
+
+    cache = one()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (s.count, *a.shape)), cache)

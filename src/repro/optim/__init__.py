@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adafactor, adamw, clip_by_global_norm, global_norm, sgdm  # noqa: F401
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,42 @@
+"""LR schedules as pure ``step -> lr`` functions (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine_with_warmup", "step_decay", "exponential_decay"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_with_warmup(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return f
+
+
+def step_decay(base: float, gamma: float, every: int):
+    """Paper App. B: e.g. ResNet18 uses 1e-3 decayed x0.1 every 30 epochs."""
+
+    def f(step):
+        k = jnp.floor(jnp.asarray(step, jnp.float32) / every)
+        return base * gamma**k
+
+    return f
+
+
+def exponential_decay(base: float, gamma: float, every: int = 1):
+    """Paper App. B: MobileNetV1 / ESPCN style per-epoch x0.9 / x0.98 decay."""
+
+    def f(step):
+        k = jnp.asarray(step, jnp.float32) / every
+        return base * gamma**k
+
+    return f

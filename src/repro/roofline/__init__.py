@@ -1,0 +1,2 @@
+from repro.roofline import hw  # noqa: F401
+from repro.roofline.analysis import collective_bytes_from_hlo, model_flops, roofline_terms  # noqa: F401

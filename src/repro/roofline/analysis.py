@@ -1,0 +1,116 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = FLOPs / (chips * peak)
+    memory     = HBM bytes / (chips * HBM bw)
+    collective = collective bytes / (chips * link bw)
+
+Sources: ``compiled.cost_analysis()`` provides per-device FLOPs and bytes
+(XLA's post-partitioning module is the per-device program, so these are
+already divided by the mesh).  Collective bytes are NOT in cost_analysis:
+``collective_bytes_from_hlo`` parses the optimized HLO and sums the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (a consistent per-chip wire-bytes proxy: ring all-reduce
+moves ~2x the buffer, all-gather ~1x the result — we record raw result bytes
+per op kind so any convention can be recomputed; the *deltas* the perf loop
+optimizes are convention-independent).
+
+``MODEL_FLOPS = 6*N*D`` (dense) / ``6*N_active*D`` (MoE) gives the useful-work
+ratio that catches remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.roofline import hw
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "model_flops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# result of an HLO op:  %name = bf16[8,128,4096]{2,1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\b(" + "|".join(_COLLECTIVES) + r")\b"
+)
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum collective result bytes by op kind over an optimized HLO module."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            # match the op name with word-ish boundaries: "all-reduce(", "all-reduce-start("
+            if f" {k}(" in stripped or f" {k}-start(" in stripped or f"{k}-done(" in stripped:
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in stripped:
+            continue  # avoid double counting start/done pairs
+        # take the result type(s) on the lhs of '='
+        lhs = stripped.split("=", 1)
+        if len(lhs) != 2:
+            continue
+        header = lhs[1].split(kind)[0]
+        total = 0
+        for dtype, dims in _TUPLE_RE.findall(header):
+            total += _shape_bytes(dtype, dims)
+        per_kind[kind] += total
+        counts[kind] += 1
+    return {
+        "bytes_by_kind": per_kind,
+        "counts": counts,
+        "total_bytes": sum(per_kind.values()),
+    }
+
+
+def model_flops(n_params: float, tokens: float, kind: str = "train") -> float:
+    """6*N*D for training; 2*N*D for a forward/decode pass."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_params * tokens
+
+
+def roofline_terms(
+    *,
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    n_chips: int,
+    links_per_chip: int = 4,
+) -> dict:
+    """Seconds per step for each roofline term, per chip."""
+    compute = flops_per_device / hw.PEAK_FLOPS_BF16
+    memory = bytes_per_device / hw.HBM_BW
+    collective = collective_bytes_per_device / (hw.ICI_LINK_BW * links_per_chip)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms.update(
+        dominant=dominant,
+        bound_s=bound,
+        # fraction of roofline: how close the *dominant* term is to being the
+        # only cost — bound/(sum) == 1 means perfectly balanced on one wall.
+        roofline_fraction=(compute / bound) if bound > 0 else 0.0,
+        n_chips=n_chips,
+    )
+    return terms

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (the dry-run's roofline denominators)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, bf16
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link (~45-50 GB/s each direction)
+VMEM_BYTES = 128 * 1024 * 1024 // 8  # 16 MiB
+CHIPS_PER_POD = 256  # 16x16 v5e pod

@@ -1,0 +1,236 @@
+"""Batched decode engine: continuous batching over KV caches.
+
+The engine owns a fixed slot layout of ``batch`` concurrent sequences, a
+jitted prefill and a jitted decode step.  Requests are admitted into free
+slots (their prompt prefilled into the cache at slot granularity), every
+engine tick advances all live slots one token, and finished sequences release
+their slot.  Deployment option ``deploy=True`` swaps trained A2Q params for
+int8 weights + per-channel scales — the artifact whose l1 norms provably fit
+the target accumulator (the serving payoff of the paper's guarantee; also the
+memory-roofline lever recorded in EXPERIMENTS.md SPerf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, QuantConfig
+from repro.models.lm import Runtime, apply_lm, init_cache
+from repro.nn.linear import deploy_linear
+
+__all__ = ["ServeEngine", "deploy_params"]
+
+
+def deploy_params(params: dict, q: QuantConfig) -> dict:
+    """Convert every quantized linear's (v,t,d)/(w,wq) into {q8, s8}.
+
+    Halves weight bytes (int8 vs bf16/fp32) on the serve path; sound because
+    A2Q guarantees the P-bit accumulator for the resulting integer weights.
+    """
+
+    def one(node, signed):
+        # leading dims (scan layers, experts) are vmapped onto the 2D core
+        lead = node["v" if "v" in node else "w"].ndim - 2
+        fn = lambda sub: deploy_linear(sub, q, input_signed=signed)
+        for _ in range(lead):
+            fn = jax.vmap(fn)
+        keys = ("v", "t", "d") if "v" in node else ("w", "wq")
+        sub = {k: node[k] for k in keys if k in node}
+        out = fn(sub)
+        for passthrough in ("aq", "b"):
+            if passthrough in node:
+                out[passthrough] = node[passthrough]
+        return out
+
+    def walk(node, path=()):
+        if isinstance(node, dict):
+            keys = set(node.keys())
+            if ("v" in keys and "t" in keys and "d" in keys) or ("w" in keys and "wq" in keys):
+                signed = not (len(path) >= 2 and path[-2] == "cm" and path[-1] == "wv")
+                return one(node, signed)
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+def deploy_boxed(boxed_tree, q: QuantConfig):
+    """Shape-level twin of :func:`deploy_params` for the dry-run: transforms a
+    *boxed ShapeDtypeStruct* tree so the serve graph can be lowered against
+    int8 weight storage without materializing anything.  q8 inherits the
+    weight's logical axes, s8 the per-channel axes."""
+    import jax
+
+    from repro.nn.module import Boxed
+
+    def walk(node):
+        if isinstance(node, dict):
+            keys = set(node.keys())
+            if "v" in keys and "t" in keys and "d" in keys:
+                v, t = node["v"], node["t"]
+                out = {
+                    "q8": Boxed(jax.ShapeDtypeStruct(v.value.shape, jnp.int8), v.axes),
+                    "s8": Boxed(jax.ShapeDtypeStruct(t.value.shape, jnp.float32), t.axes),
+                }
+                for passthrough in ("aq", "b"):
+                    if passthrough in node:
+                        out[passthrough] = node[passthrough]
+                return out
+            if "w" in keys and "wq" in keys:
+                w = node["w"]
+                out = {
+                    "q8": Boxed(jax.ShapeDtypeStruct(w.value.shape, jnp.int8), w.axes),
+                    "s8": Boxed(
+                        jax.ShapeDtypeStruct(w.value.shape[-1:], jnp.float32),
+                        (w.axes[-1],),
+                    ),
+                }
+                for passthrough in ("aq", "b"):
+                    if passthrough in node:
+                        out[passthrough] = node[passthrough]
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(boxed_tree)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (T,) int32
+    max_new: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        arch: ArchConfig,
+        params: dict,
+        *,
+        batch: int = 4,
+        max_seq: int = 512,
+        rt: Optional[Runtime] = None,
+        greedy: bool = True,
+    ):
+        self.arch = arch
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.rt = rt or Runtime()
+        self.greedy = greedy
+        self.cache = init_cache(arch, batch, max_seq, dtype=jnp.dtype(arch.compute_dtype))
+        self.pos = np.zeros((batch,), np.int32)  # per-slot next position
+        self.slots: list[Optional[Request]] = [None] * batch
+        # Recurrent mixers (rwkv6/hymba) advance a non-positional state for
+        # every row on every call, so slot-at-a-time prefill would pollute
+        # other live rows irreversibly.  Those archs run in synchronized-batch
+        # mode: equal-length prompt groups prefilled in lockstep.
+        self.recurrent = any(s.kind in ("rwkv6", "hymba") for s in arch.stacks)
+        self._decode = jax.jit(self._decode_fn)
+
+    # Prefill is implemented as sequential cached steps over the prompt so the
+    # slot-granular cache stays consistent under continuous batching (a
+    # batch-wide one-shot prefill would clobber other live slots).  The
+    # one-shot prefill path exists for benchmarking (models/steps.py).
+    def _decode_fn(self, params, tokens, cache, pos):
+        logits, new_cache, _ = apply_lm(
+            self.params_struct(params), self.arch, tokens=tokens, cache=cache,
+            start_pos=pos, rt=self.rt,
+        )
+        return logits, new_cache
+
+    def params_struct(self, params):
+        return params
+
+    def admit(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                self._prefill_slot(i, req)
+                return True
+        return False
+
+    def _prefill_slot(self, slot: int, req: Request):
+        # Feed prompt tokens one at a time into this slot's cache lane.  Other
+        # rows receive transient garbage at their *current* position, which
+        # their own next real token overwrites before it is ever attended.
+        self.pos[slot] = 0
+        for t in req.prompt:
+            tok = np.zeros((self.batch, 1), np.int32)
+            tok[slot, 0] = t
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy())
+            )
+            self.pos[slot] += 1
+        req._last_logits = np.asarray(jax.device_get(logits[slot, 0]))
+
+    def tick(self) -> int:
+        """Advance every live slot one token; returns number of live slots.
+
+        Slots advance at *their own* positions (per-row cache writes), so
+        sequences admitted at different times interleave correctly.
+        """
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return 0
+        tok = np.zeros((self.batch, 1), np.int32)
+        for i in live:
+            req = self.slots[i]
+            last = getattr(req, "_last_logits")
+            nxt = int(np.argmax(last))
+            req.generated.append(nxt)
+            tok[i, 0] = nxt
+        logits, self.cache = self._decode(self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy()))
+        ln = np.asarray(jax.device_get(logits[:, 0]))
+        for i in live:
+            req = self.slots[i]
+            req._last_logits = ln[i]
+            self.pos[i] += 1
+            if len(req.generated) >= req.max_new:
+                req.done = True
+                self.slots[i] = None
+        return len(live)
+
+    def generate(self, prompts: list[np.ndarray], max_new: int = 16) -> list[list[int]]:
+        """Convenience batch API: admit all, tick until drained."""
+        reqs = [Request(uid=i, prompt=p, max_new=max_new) for i, p in enumerate(prompts)]
+        if self.recurrent:
+            return self._generate_lockstep(reqs)
+        pending = list(reqs)
+        while pending or any(s is not None for s in self.slots):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            if self.tick() == 0 and not pending:
+                break
+        return [r.generated for r in reqs]
+
+    def _generate_lockstep(self, reqs: list) -> list[list[int]]:
+        assert len(reqs) <= self.batch, "lockstep mode serves one group at a time"
+        lens = {len(r.prompt) for r in reqs}
+        assert len(lens) == 1, "recurrent archs require equal-length prompt groups"
+        T = lens.pop()
+        self.pos[:] = 0
+        for i, r in enumerate(reqs):
+            self.slots[i] = r
+        for t in range(T):
+            tok = np.zeros((self.batch, 1), np.int32)
+            for i, r in enumerate(reqs):
+                tok[i, 0] = r.prompt[t]
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy())
+            )
+            self.pos[: len(reqs)] += 1
+        ln = np.asarray(jax.device_get(logits[:, 0]))
+        for i, r in enumerate(reqs):
+            r._last_logits = ln[i]
+        while any(s is not None for s in self.slots):
+            self.tick()
+        return [r.generated for r in reqs]

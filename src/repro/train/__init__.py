@@ -1,0 +1,1 @@
+from repro.train import checkpoint, elastic, state, trainer  # noqa: F401

@@ -1,0 +1,93 @@
+"""Train state: params + optimizer state + step, with sharding derivation."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import ShardingRules, param_specs
+from repro.nn.module import axes_tree, unbox
+from repro.optim.optimizers import Optimizer
+
+__all__ = ["TrainState", "make_state_specs"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+    def tree(self):
+        return {"params": self.params, "opt_state": self.opt_state, "step": self.step}
+
+    @staticmethod
+    def from_tree(t):
+        return TrainState(t["params"], t["opt_state"], t["step"])
+
+
+def init_state(boxed_params, optimizer: Optimizer) -> TrainState:
+    params = unbox(boxed_params)
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def make_state_specs(boxed_params, optimizer: Optimizer, mesh: Mesh, rules: ShardingRules):
+    """PartitionSpec tree for a TrainState.tree().
+
+    Optimizer states mirror param structure leaf-for-leaf (momentum/variance)
+    or reduce a trailing axis (adafactor vr/vc); both inherit the param's spec
+    (trimmed for reduced axes) — ZeRO-1 + ZeRO-3 by construction.
+    """
+    pspecs = param_specs(boxed_params, mesh, rules)
+    params = unbox(boxed_params)
+    opt_shapes = jax.eval_shape(optimizer.init, params)
+
+    def spec_for(path, leaf):
+        # paths look like ('m', <param path...>) / ('v', ...) / ('count',)
+        if leaf.ndim == 0:
+            return P()
+        # try to locate the matching param leaf by stripping the head key
+        sub = path[1:] if len(path) > 1 else path
+        try:
+            node = pspecs
+            for k in sub:
+                key = k.key if hasattr(k, "key") else k.idx if hasattr(k, "idx") else k
+                node = node[key]
+            spec = node
+        except (KeyError, TypeError, IndexError):
+            return P()
+        if isinstance(spec, P):
+            if len(spec) == leaf.ndim:
+                return spec
+            if len(spec) == leaf.ndim + 1:  # adafactor vr: trailing axis reduced
+                return P(*tuple(spec)[:-1])
+            if len(spec) == leaf.ndim - 1:
+                return P(*tuple(spec), None)
+            return P()
+        return P()
+
+    opt_spec = _map_with_path(spec_for, opt_shapes)
+    state_spec = {
+        "params": pspecs,
+        "opt_state": opt_spec,
+        "step": P(),
+    }
+    return state_spec
+
+
+def _map_with_path(f, tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(treedef, [f(p, l) for p, l in flat])
+
+
+def specs_to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,142 @@
+"""THE property: A2Q-quantized weights can never overflow a P-bit accumulator
+— for any inputs, any MAC order, any training-time parameter values.
+
+Hypothesis drives (shapes, bit widths, parameter perturbations); the bit-exact
+numpy simulator replays the dot products with wraparound and saturating
+accumulators and must agree with the ideal wide accumulator everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.a2q import (
+    a2q_channel_l1,
+    a2q_int_weights,
+    a2q_norm_cap,
+    a2q_penalty,
+    apply_a2q,
+    init_a2q,
+)
+from repro.core.bounds import l1_budget
+from repro.core.integer import accumulate_dot, mac_order_audit, overflow_stats
+
+
+@st.composite
+def a2q_cases(draw):
+    K = draw(st.integers(2, 96))
+    C = draw(st.integers(1, 8))
+    M = draw(st.integers(3, 8))
+    N = draw(st.integers(1, 8))
+    P = draw(st.integers(max(N + 2, 4), 24))
+    signed = draw(st.booleans())
+    seed = draw(st.integers(0, 2**16))
+    # arbitrary (t, d) perturbations: the guarantee must hold at EVERY point in
+    # parameter space, not just at init (training visits arbitrary values).
+    dt = draw(st.floats(-4, 8))
+    dd = draw(st.floats(-2, 2))
+    return K, C, M, N, P, signed, seed, dt, dd
+
+
+@given(a2q_cases())
+@settings(max_examples=60, deadline=None)
+def test_integer_weights_respect_l1_budget(case):
+    K, C, M, N, P, signed, seed, dt, dd = case
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1.0, (K, C)), jnp.float32)
+    params = init_a2q(w, M, P, N, signed)
+    params = {
+        "v": params["v"],
+        "t": params["t"] + dt,  # push t above/below the cap arbitrarily
+        "d": params["d"] + dd,
+    }
+    q, s = a2q_int_weights(params, M, P, N, signed)
+    q = np.asarray(q)
+    budget = l1_budget(P, N, signed)
+    l1 = np.abs(q).sum(axis=0)
+    assert (l1 <= budget + 1e-6).all(), (l1.max(), budget)
+
+
+@given(a2q_cases())
+@settings(max_examples=30, deadline=None)
+def test_no_overflow_any_input_any_order(case):
+    K, C, M, N, P, signed, seed, dt, dd = case
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1.0, (K, C)), jnp.float32)
+    params = init_a2q(w, M, P, N, signed)
+    params = {"v": params["v"], "t": params["t"] + dt, "d": params["d"] + dd}
+    q, _ = a2q_int_weights(params, M, P, N, signed)
+    q = np.asarray(q).astype(np.int64)
+
+    # adversarial inputs: worst-case magnitudes with signs aligned to weights
+    lo, hi = (-(2 ** (N - 1)), 2 ** (N - 1) - 1) if signed else (0, 2**N - 1)
+    x_rand = rng.integers(lo, hi + 1, (4, K))
+    x_worst = np.where(q.sum(1) >= 0, hi, lo)[None, :]  # align signs
+    x = np.concatenate([x_rand, x_worst], axis=0)
+
+    exact = accumulate_dot(x, q, 64, "exact")
+    wrap = accumulate_dot(x, q, P, "wrap")
+    np.testing.assert_array_equal(exact, wrap)
+    for order_seed in range(2):
+        order = np.random.default_rng(order_seed).permutation(K)
+        sat = accumulate_dot(x, q, P, "saturate", order=order)
+        np.testing.assert_array_equal(exact, sat)
+    stats = overflow_stats(x, q, P)
+    assert stats["events"] == 0
+
+
+@given(a2q_cases())
+@settings(max_examples=30, deadline=None)
+def test_dequantized_matches_int_times_scale(case):
+    K, C, M, N, P, signed, seed, dt, dd = case
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1.0, (K, C)), jnp.float32)
+    params = init_a2q(w, M, P, N, signed)
+    deq = apply_a2q(params, M, P, N, signed)
+    q, s = a2q_int_weights(params, M, P, N, signed)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(q * s), rtol=1e-6)
+
+
+def test_penalty_zero_iff_under_cap():
+    w = jnp.asarray(np.random.default_rng(0).normal(0, 1, (32, 4)), jnp.float32)
+    params = init_a2q(w, 8, 16, 8, True)
+    assert float(a2q_penalty(params, 16, 8, True)) == 0.0  # init clamps t <= T
+    bumped = dict(params, t=params["t"] + 3.0)
+    assert float(a2q_penalty(bumped, 16, 8, True)) > 0.0
+
+
+def test_norm_cap_formula():
+    d = jnp.zeros((3,))
+    T = a2q_norm_cap(d, acc_bits=16, input_bits=8, input_signed=False)
+    expect = 0 + np.log2(2**15 - 1) + 0 - 8
+    np.testing.assert_allclose(np.asarray(T), expect, rtol=1e-6)
+
+
+def test_gradients_flow_through_a2q():
+    w = jnp.asarray(np.random.default_rng(0).normal(0, 1, (16, 4)), jnp.float32)
+    params = init_a2q(w, 8, 20, 8, True)
+
+    def loss(p):
+        wq = apply_a2q(p, 8, 20, 8, True)
+        return jnp.sum(wq**2)
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g["v"]).sum()) > 0
+    assert float(jnp.abs(g["t"]).sum()) > 0
+    assert float(jnp.abs(g["d"]).sum()) >= 0  # d may sit on a flat region
+
+
+def test_training_drives_sparsity_up_as_P_shrinks():
+    """Fig. 5's mechanism: tighter budget -> more zero integer weights."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 1, (128, 8)), jnp.float32)
+    sparsities = []
+    for P in (24, 16, 12, 9):
+        params = init_a2q(w, 8, P, 8, False)
+        q, _ = a2q_int_weights(params, 8, P, 8, False)
+        sparsities.append(float(np.mean(np.asarray(q) == 0)))
+    assert sparsities == sorted(sparsities), sparsities
+    assert sparsities[-1] > sparsities[0]

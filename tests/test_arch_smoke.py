@@ -1,0 +1,149 @@
+"""Per-assigned-architecture smoke tests: a REDUCED config of the same family
+runs one forward/train step on CPU; output shapes + no NaNs (assignment (f))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, reduced
+from repro.models import Runtime, apply_lm, init_cache, init_lm, lm_loss
+from repro.models.steps import build_train_step
+from repro.nn.module import unbox
+from repro.optim.optimizers import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(arch, B=2, S=16):
+    rng = np.random.default_rng(0)
+    if arch.family == "audio":
+        return {
+            "frontend_embeds": jnp.asarray(rng.normal(size=(B, S, arch.d_model)), jnp.float32),
+            "targets": jnp.asarray(rng.integers(0, arch.n_classes, (B, S)), jnp.int32),
+        }
+    if arch.family == "vlm":
+        si = arch.frontend.seq_len
+        return {
+            "tokens": jnp.asarray(rng.integers(0, arch.vocab, (B, S - si)), jnp.int32),
+            "frontend_embeds": jnp.asarray(rng.normal(size=(B, si, arch.d_model)), jnp.float32),
+            "targets": jnp.asarray(rng.integers(0, arch.vocab, (B, S)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, arch.vocab, (B, S)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, arch.vocab, (B, S)), jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_forward_shapes_and_finite(name):
+    arch = reduced(get_arch(name))
+    params = unbox(init_lm(KEY, arch))
+    batch = _batch(arch)
+    logits, _, penalty = apply_lm(
+        params, arch,
+        tokens=batch.get("tokens"),
+        frontend_embeds=batch.get("frontend_embeds"),
+    )
+    vocab_or_classes = arch.n_classes if arch.family == "audio" else arch.vocab
+    assert logits.shape == (2, 16, vocab_or_classes)
+    assert bool(jnp.isfinite(logits).all())
+    assert float(penalty) >= 0.0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_train_step(name):
+    arch = reduced(get_arch(name))
+    params = unbox(init_lm(KEY, arch))
+    opt = adamw()
+    state = {"params": params, "opt_state": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+    step = build_train_step(arch, opt, Runtime())
+    batch = _batch(arch)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(new_state["params"]), jax.tree.leaves(params))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize(
+    "name",
+    [n for n in ARCH_NAMES if get_arch(n).family in ("lm", "vlm")],
+)
+def test_reduced_decode_step(name):
+    arch = reduced(get_arch(name))
+    params = unbox(init_lm(KEY, arch))
+    cache = init_cache(arch, 2, max_seq=32, dtype=jnp.float32)
+    logits, cache2, _ = apply_lm(
+        params, arch, tokens=jnp.zeros((2, 1), jnp.int32), cache=cache,
+        start_pos=jnp.zeros((), jnp.int32),
+    )
+    assert logits.shape == (2, 1, arch.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # cache was updated somewhere
+    changed = any(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).sum()) > 0
+        for a, b in zip(jax.tree.leaves(cache2), jax.tree.leaves(cache))
+        if a.dtype != jnp.int32
+    )
+    assert changed
+
+
+def test_encoder_has_no_decode_shapes():
+    from repro.configs import applicable_shapes
+
+    hubert = get_arch("hubert-xlarge")
+    shapes = applicable_shapes(hubert)
+    assert "decode_32k" not in shapes and "long_500k" not in shapes
+
+
+def test_long_context_only_for_subquadratic():
+    from repro.configs import applicable_shapes
+
+    runs = {n: "long_500k" in applicable_shapes(get_arch(n)) for n in ARCH_NAMES}
+    assert runs["rwkv6-7b"] and runs["hymba-1.5b"] and runs["h2o-danube-1.8b"]
+    assert runs["llama4-scout-17b-a16e"]
+    assert not runs["yi-6b"] and not runs["command-r-35b"] and not runs["deepseek-v3-671b"]
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    a = get_arch("command-r-35b")
+    assert (a.n_layers, a.d_model, a.vocab) == (40, 8192, 256000)
+    assert a.stacks[0].attn.heads == 64 and a.stacks[0].attn.kv_heads == 8
+    assert a.stacks[0].d_ff == 22528 and not a.use_bias
+
+    y = get_arch("yi-6b")
+    assert (y.n_layers, y.d_model, y.stacks[0].d_ff, y.vocab) == (32, 4096, 11008, 64000)
+
+    d = get_arch("deepseek-v3-671b")
+    assert d.n_layers == 61 and d.d_model == 7168 and d.vocab == 129280
+    moe = d.stacks[1].moe
+    assert moe.n_experts == 256 and moe.top_k == 8 and moe.d_ff == 2048
+    assert d.stacks[1].attn.kind == "mla" and d.mtp_depth == 1
+
+    l4 = get_arch("llama4-scout-17b-a16e")
+    assert l4.n_layers == 48 and l4.d_model == 5120 and l4.vocab == 202048
+    assert l4.stacks[0].moe.n_experts == 16 and l4.stacks[0].moe.top_k == 1
+
+    r = get_arch("rwkv6-7b")
+    assert r.n_layers == 32 and r.d_model == 4096 and r.vocab == 65536
+
+    h = get_arch("hymba-1.5b")
+    assert h.d_model == 1600 and h.stacks[0].attn.heads == 25 and h.stacks[0].ssm.state_dim == 16
+
+    hb = get_arch("hubert-xlarge")
+    assert hb.n_layers == 48 and hb.d_model == 1280 and hb.n_classes == 504
+
+    lv = get_arch("llava-next-34b")
+    assert lv.n_layers == 60 and lv.d_model == 7168 and lv.stacks[0].d_ff == 20480
+
+    sm = get_arch("smollm-135m")
+    assert sm.n_layers == 30 and sm.d_model == 576 and sm.vocab == 49152
+
+    dn = get_arch("h2o-danube-1.8b")
+    assert dn.n_layers == 24 and dn.stacks[0].attn.window == 4096

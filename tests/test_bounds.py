@@ -1,0 +1,83 @@
+"""Accumulator bound equations (paper Sec. 3, Fig. 3)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bounds
+
+
+def test_paper_motivating_example():
+    # App. A: K=784, M=8, N=1 unsigned -> 19-bit data-type bound.
+    assert bounds.min_accumulator_bits_data_type(784, 1, 8, signed_input=False) == 19
+
+
+def test_int_range_conventions():
+    assert bounds.int_range(8, True) == (-128, 127)
+    assert bounds.int_range(8, False) == (0, 255)
+    assert bounds.int_range(1, False) == (0, 1)
+
+
+@given(
+    K=st.integers(1, 1 << 20),
+    N=st.integers(1, 16),
+    M=st.integers(2, 16),
+    signed=st.booleans(),
+)
+@settings(max_examples=200, deadline=None)
+def test_data_type_bound_is_sound(K, N, M, signed):
+    """A P-bit accumulator at the bound must hold the worst-case sum exactly."""
+    P = bounds.min_accumulator_bits_data_type(K, N, M, signed)
+    x_mag = 2**N - 1 if not signed else 2 ** (N - 1)
+    w_mag = 2 ** (M - 1)
+    worst = K * x_mag * w_mag
+    assert worst <= 2 ** (P - 1) - 1 or worst <= 2 ** (P - 1)
+    # paper's simplification |x| <= 2^N makes the bound conservative; the
+    # strictly-safe inequality always holds:
+    assert K * (2 ** (N - int(signed))) * w_mag <= 2 ** (P - 1)
+
+
+@given(
+    K=st.integers(1, 4096),
+    N=st.integers(1, 12),
+    M=st.integers(2, 10),
+    signed=st.booleans(),
+)
+@settings(max_examples=100, deadline=None)
+def test_weight_bound_tighter_than_datatype(K, N, M, signed):
+    """Eq. 12 with the worst-case l1 norm equals/never exceeds Eq. 8 usage."""
+    rng = np.random.default_rng(K * 31 + N)
+    w = rng.integers(-(2 ** (M - 1)), 2 ** (M - 1), K)
+    l1 = float(np.abs(w).sum())
+    if l1 == 0:
+        return
+    p_w = bounds.min_accumulator_bits_weights(l1, N, signed)
+    p_d = bounds.min_accumulator_bits_data_type(K, N, M, signed)
+    assert p_w <= p_d
+
+
+@given(P=st.integers(2, 32), N=st.integers(1, 12), signed=st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_l1_budget_inverts_weight_bound(P, N, signed):
+    """Eq. 15 is the inverse of Eq. 12: a channel exactly at the budget needs
+    exactly P bits (never more)."""
+    budget = bounds.l1_budget(P, N, signed)
+    if budget < 1:
+        return
+    p_needed = bounds.min_accumulator_bits_weights(budget, N, signed)
+    assert p_needed <= P
+
+
+def test_verify_no_overflow():
+    w = np.array([[10, -20, 30]])
+    # worst |sum| = 60 * (2^8-1 <= 2^8) for unsigned 8b input
+    assert bounds.verify_no_overflow(w, N=8, signed_input=False, P=16)
+    assert not bounds.verify_no_overflow(w * 1000, N=8, signed_input=False, P=16)
+
+
+def test_phi_limits():
+    assert float(bounds.phi(0.0)) == pytest.approx(1.0)
+    assert float(bounds.phi(40.0)) == pytest.approx(0.0, abs=1e-9)

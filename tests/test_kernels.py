@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# int_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,N", [(8, 16, 8), (65, 200, 77), (128, 512, 128), (33, 129, 257)])
+@pytest.mark.parametrize("mode", ["exact", "wrap", "saturate"])
+def test_int_matmul_matches_ref(M, K, N, mode):
+    x = jnp.asarray(RNG.integers(-128, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-128, 128, (K, N)), jnp.int8)
+    got = ops.int_matmul(x, w, acc_bits=16, mode=mode, block_k=128)
+    want = ref.ref_int_matmul(x, w, acc_bits=16, mode=mode, block_k=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("acc_bits", [12, 16, 20, 32])
+def test_int_matmul_acc_bits(acc_bits):
+    x = jnp.asarray(RNG.integers(-16, 16, (32, 96)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-16, 16, (96, 48)), jnp.int8)
+    for mode in ("wrap", "saturate"):
+        got = ops.int_matmul(x, w, acc_bits=acc_bits, mode=mode, block_k=32)
+        want = ref.ref_int_matmul(x, w, acc_bits=acc_bits, mode=mode, block_k=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int_matmul_int16_spill_lossless_under_a2q_bound():
+    """The A2Q-enabled kernel optimization: P<=16 guarantees the int16 carry
+    is exact."""
+    # weights with per-column l1 * input max <= 2^15-1  (the Eq. 15 budget)
+    w = jnp.asarray(RNG.integers(-2, 3, (256, 64)), jnp.int8)
+    x = jnp.asarray(RNG.integers(0, 8, (64, 256)), jnp.int8)
+    got = ops.int_matmul(x, w, acc_bits=16, mode="exact", spill_int16=True, block_k=64)
+    want = ref.ref_int_matmul(x, w, acc_bits=32, mode="exact")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int16_spill_rejected_for_wide_acc():
+    x = jnp.zeros((8, 8), jnp.int8)
+    w = jnp.zeros((8, 8), jnp.int8)
+    with pytest.raises(ValueError):
+        ops.int_matmul(x, w, acc_bits=24, spill_int16=True)
+
+
+# ---------------------------------------------------------------------------
+# a2q_quantize
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K,C", [(300, 130), (512, 256), (17, 5), (1024, 64)])
+@pytest.mark.parametrize("acc_bits,input_signed", [(16, False), (20, True), (12, False)])
+def test_a2q_quantize_kernel(K, C, acc_bits, input_signed):
+    v = jnp.asarray(RNG.normal(size=(K, C)), jnp.float32)
+    t = jnp.asarray(RNG.normal(size=(C,)) + 3, jnp.float32)
+    d = jnp.asarray(RNG.normal(size=(C,)) - 6, jnp.float32)
+    deq, q = ops.a2q_quantize(
+        v, t, d, weight_bits=8, acc_bits=acc_bits, input_bits=8, input_signed=input_signed
+    )
+    deq_r, q_r = ref.ref_a2q_quantize(v, t, d, 8, acc_bits, 8, input_signed)
+    np.testing.assert_array_equal(np.asarray(q, np.int32), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(deq_r), atol=1e-6)
+
+
+def test_a2q_quantize_kernel_budget_invariant():
+    from repro.core.bounds import l1_budget
+
+    v = jnp.asarray(RNG.normal(size=(640, 256)), jnp.float32)
+    t = jnp.asarray(RNG.normal(size=(256,)) + 6, jnp.float32)  # over the cap
+    d = jnp.asarray(RNG.normal(size=(256,)) - 5, jnp.float32)
+    _, q = ops.a2q_quantize(v, t, d, weight_bits=8, acc_bits=14, input_bits=8, input_signed=False)
+    l1 = np.abs(np.asarray(q, np.int64)).sum(0)
+    assert (l1 <= l1_budget(14, 8, False)).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Tq,Tk,causal,window", [
+    (100, 100, True, None),
+    (100, 100, True, 17),
+    (64, 64, False, None),
+    (1, 100, True, None),     # decode
+    (1, 100, True, 32),       # windowed decode
+    (96, 128, True, None),    # Tq < Tk end-aligned
+])
+def test_flash_attention_vs_ref(Tq, Tk, causal, window):
+    B, H, D = 2, 3, 64
+    q = jnp.asarray(RNG.normal(size=(B, H, Tq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, H, Tk, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, H, Tk, D)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window, block_q=32, block_k=32)
+    want = ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    B, H, T, D = 1, 2, 48, 32
+    q = jnp.asarray(RNG.normal(size=(B, H, T, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, H, T, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, H, T, D)), dtype)
+    got = ops.flash_attention(q, k, v, block_q=16, block_k=16)
+    want = ref.ref_flash_attention(q, k, v)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,chunk", [(50, 16), (64, 64), (33, 8)])
+def test_rwkv6_kernel_vs_ref(T, chunk):
+    B, H, Dk, Dv = 2, 2, 16, 16
+    r = jnp.asarray(RNG.normal(size=(B, H, T, Dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, H, T, Dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, H, T, Dv)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.5, 0.999, size=(B, H, T, Dk)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(H, Dk)), jnp.float32)
+    y, sT = ops.rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    for h in range(H):
+        y_r, s_r = ref.ref_rwkv6(r[:, h], k[:, h], v[:, h], w[:, h], u[h])
+        np.testing.assert_allclose(np.asarray(y[:, h]), np.asarray(y_r), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sT[:, h]), np.asarray(s_r), atol=1e-4)
+
+
+def test_rwkv6_kernel_initial_state_carry():
+    B, H, T, Dk = 1, 1, 32, 8
+    r = jnp.asarray(RNG.normal(size=(B, H, T, Dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, H, T, Dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, H, T, Dk)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.7, 0.99, size=(B, H, T, Dk)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(H, Dk)), jnp.float32)
+    # run in two halves, carrying state, must equal the single pass
+    y_full, s_full = ops.rwkv6_scan(r, k, v, w, u, chunk=8)
+    y1, s1 = ops.rwkv6_scan(r[:, :, :16], k[:, :, :16], v[:, :, :16], w[:, :, :16], u, chunk=8)
+    y2, s2 = ops.rwkv6_scan(
+        r[:, :, 16:], k[:, :, 16:], v[:, :, 16:], w[:, :, 16:], u,
+        initial_state=s1, chunk=8,
+    )
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 2)), np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)

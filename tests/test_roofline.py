@@ -1,0 +1,115 @@
+"""Roofline machinery: HLO collective parsing, term math, and the XLA
+while-body costing property the extrapolation methodology depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import collective_bytes_from_hlo, model_flops, roofline_terms
+
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+  %ar = f32[8,1024]{1,0} all-reduce(f32[8,1024]{1,0} %x), replica_groups={}
+  %ag = bf16[16,256]{1,0} all-gather(bf16[2,256]{1,0} %y), dimensions={0}
+  %rs = f32[2,256]{1,0} reduce-scatter(f32[16,256]{1,0} %z), dimensions={0}
+  %cp = s8[64]{0} collective-permute(s8[64]{0} %w), source_target_pairs={{0,1}}
+  %other = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+    """
+    r = collective_bytes_from_hlo(hlo)
+    assert r["counts"]["all-reduce"] == 1
+    assert r["bytes_by_kind"]["all-reduce"] == 8 * 1024 * 4
+    assert r["bytes_by_kind"]["all-gather"] == 16 * 256 * 2
+    assert r["bytes_by_kind"]["reduce-scatter"] == 2 * 256 * 4
+    assert r["bytes_by_kind"]["collective-permute"] == 64
+    assert r["total_bytes"] == 8 * 1024 * 4 + 16 * 256 * 2 + 2 * 256 * 4 + 64
+
+
+def test_collective_parser_skips_done_ops():
+    hlo = """
+  %s = f32[128]{0} all-reduce-start(f32[128]{0} %x)
+  %d = f32[128]{0} all-reduce-done(f32[128]{0} %s)
+    """
+    r = collective_bytes_from_hlo(hlo)
+    assert r["counts"]["all-reduce"] == 1
+    assert r["total_bytes"] == 128 * 4
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(
+        flops_per_device=197e12,  # exactly one second of compute
+        bytes_per_device=819e9 / 2,  # half a second of HBM
+        collective_bytes_per_device=0.0,
+        n_chips=256,
+    )
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["dominant"] == "compute_s"
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+
+
+def test_model_flops():
+    assert model_flops(1e9, 1e6, "train") == 6e15
+    assert model_flops(1e9, 1e6, "fwd") == 2e15
+
+
+def test_xla_counts_while_body_once():
+    """The property the dry-run's marginal-layer extrapolation corrects for.
+    If XLA ever starts multiplying loop bodies by trip count, this test fails
+    and the costing methodology in launch/dryrun.py must be revisited."""
+    M = 128
+
+    def one(x, w):
+        return jnp.tanh(x @ w)
+
+    def scanned(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (one(c, w), None), x, ws)
+        return y
+
+    xs = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    wL = jax.ShapeDtypeStruct((10, M, M), jnp.float32)
+
+    def flops(c):
+        ca = c.cost_analysis()
+        return (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
+
+    f1 = flops(jax.jit(one).lower(xs, w1).compile())
+    fL = flops(jax.jit(scanned).lower(xs, wL).compile())
+    assert fL == pytest.approx(f1, rel=0.01), (f1, fL)
+
+
+def test_unrolled_stack_flops_scale_with_depth():
+    """Sanity for the extrapolation: unrolled 2-layer model costs ~2x the
+    1-layer model's stack portion."""
+    import dataclasses
+
+    from repro.configs import get_arch, reduced
+    from repro.models import init_lm, lm_loss
+    from repro.nn.module import unbox
+
+    arch1 = dataclasses.replace(
+        reduced(get_arch("yi-6b")),
+        stacks=tuple(dataclasses.replace(s, count=1) for s in reduced(get_arch("yi-6b")).stacks),
+        unroll_stacks=True,
+    )
+    arch2 = dataclasses.replace(
+        arch1, stacks=tuple(dataclasses.replace(s, count=2) for s in arch1.stacks)
+    )
+
+    def flops_for(arch):
+        params = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), arch))
+        from repro.nn.module import unbox as ub
+
+        shapes = ub(params)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+        }
+        c = jax.jit(lambda p, b: lm_loss(p, arch, b)[0]).lower(shapes, batch).compile()
+        ca = c.cost_analysis()
+        return (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
+
+    f1, f2 = flops_for(arch1), flops_for(arch2)
+    assert f2 > f1 * 1.3  # extra layer adds real counted flops

@@ -1,0 +1,239 @@
+"""Sharding rules (divisibility fallback) + real multi-device execution in an
+8-fake-device subprocess (tests must not set XLA_FLAGS in-process)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.dist.sharding import ShardingRules, resolve_pspec
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        out = 1
+        for v in self.shape.values():
+            out *= v
+        return out
+
+
+def test_resolve_divisibility_fallback():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    arch = get_arch("smollm-135m")
+    rules = ShardingRules.default(mesh, arch)
+    # 9 heads don't divide 16 -> replicated; embed 576 FSDPs over data=16
+    spec = resolve_pspec(("embed", "heads"), (576, 576), mesh, rules)
+    assert spec == P("data", None)
+    # d_ff=1536 shards over model
+    spec = resolve_pspec(("embed", "mlp"), (576, 1536), mesh, rules)
+    assert spec == P("data", "model")
+
+
+def test_resolve_unit_counts_respected():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    arch = get_arch("command-r-35b")
+    rules = ShardingRules.default(mesh, arch)
+    # fused (d, H*Dh) = (8192, 8192): heads=64 divisible by 16 -> sharded
+    assert resolve_pspec(("embed", "heads"), (8192, 8192), mesh, rules) == P("data", "model")
+    # kv fused dim: kv_heads=8 not divisible by 16 -> replicated on dim 1
+    assert resolve_pspec(("embed", "kv_heads"), (8192, 1024), mesh, rules) == P("data", None)
+
+
+def test_no_mesh_axis_reused_across_dims():
+    mesh = _FakeMesh({"data": 4, "model": 4})
+    rules = ShardingRules(
+        rules={"a": ("model",), "b": ("model",)}, unit_counts={}
+    )
+    spec = resolve_pspec(("a", "b"), (16, 16), mesh, rules)
+    assert spec == P("model", None)  # second dim can't reuse 'model'
+
+
+def test_batch_axes_multi_pod():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = ShardingRules.default(mesh, None)
+    assert rules.rules["batch"] == ("pod", "data")
+    spec = resolve_pspec(("batch", None, None), (256, 4096, 1), mesh, rules)
+    assert spec == P(("pod", "data"), None, None)
+
+
+def _run_subprocess(body: str, n_dev: int = 8) -> str:
+    code = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=600
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    """The same reduced model + batch gives the same loss on a (2, 4) mesh as
+    on one device — the distribution layer must not change the math."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.dist.sharding import ShardingRules, param_specs
+        from repro.models import Runtime, init_lm
+        from repro.models.steps import build_train_step
+        from repro.nn.module import unbox
+        from repro.optim.optimizers import adamw
+
+        arch = reduced(get_arch("yi-6b"))
+        key = jax.random.PRNGKey(0)
+        boxed = init_lm(key, arch)
+        params = unbox(boxed)
+        opt = adamw()
+        batch = {
+            "tokens": jnp.asarray(np.random.default_rng(0).integers(0, arch.vocab, (8, 32)), jnp.int32),
+            "targets": jnp.asarray(np.random.default_rng(1).integers(0, arch.vocab, (8, 32)), jnp.int32),
+        }
+        state = {"params": params, "opt_state": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+        # single device
+        step1 = jax.jit(build_train_step(arch, opt, Runtime()))
+        _, m1 = step1(jax.tree.map(lambda x: x, state), batch)
+
+        # (data=2, model=4) mesh
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = ShardingRules.default(mesh, arch)
+        rt = Runtime(mesh=mesh, rules=rules)
+        stepm = jax.jit(build_train_step(arch, opt, rt))
+        with mesh:
+            _, m2 = stepm(state, batch)
+        l1, l2 = float(m1["loss"]), float(m2["loss"])
+        assert abs(l1 - l2) < 1e-3, (l1, l2)
+        print("OK", l1, l2)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_moe_ep_shard_map_matches_local():
+    """MoE with experts sharded over 'model' == single-device dispatch."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.base import MoEConfig, QuantConfig
+        from repro.nn import moe
+        from repro.nn.module import unbox
+
+        cfg = MoEConfig(n_experts=8, top_k=2, d_ff=16, capacity_factor=8.0)
+        q = QuantConfig(mode="none")
+        key = jax.random.PRNGKey(0)
+        p = unbox(moe.init_moe(key, 8, cfg, q))
+        x = jax.random.normal(key, (4, 8, 8), jnp.float32)
+        local = moe.apply_moe(p, x, cfg, q, compute_dtype=jnp.float32)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with mesh:
+            ep = jax.jit(lambda p, x: moe.apply_moe(p, x, cfg, q, ep_axis="model",
+                                                    mesh=mesh, compute_dtype=jnp.float32))(p, x)
+        err = float(jnp.abs(local - ep).max())
+        assert err < 1e-4, err
+        print("OK", err)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_moe_ep_over_both_axes_matches_local():
+    """Serving layout: experts sharded over (model, data), 1 expert/shard."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp
+        from repro.configs.base import MoEConfig, QuantConfig
+        from repro.nn import moe
+        from repro.nn.module import unbox
+
+        cfg = MoEConfig(n_experts=8, top_k=2, d_ff=16, capacity_factor=8.0)
+        q = QuantConfig(mode="none")
+        key = jax.random.PRNGKey(0)
+        p = unbox(moe.init_moe(key, 8, cfg, q))
+        x = jax.random.normal(key, (4, 8, 8), jnp.float32)
+        local = moe.apply_moe(p, x, cfg, q, compute_dtype=jnp.float32)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with mesh:
+            ep = jax.jit(lambda p, x: moe.apply_moe(p, x, cfg, q, ep_axis=("model", "data"),
+                                                    mesh=mesh, compute_dtype=jnp.float32))(p, x)
+        err = float(jnp.abs(local - ep).max())
+        assert err < 1e-4, err
+        print("OK", err)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_psum_error_feedback():
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import compressed_psum
+
+        mesh = jax.make_mesh((8,), ("data",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 64), jnp.float32)
+
+        def f(xs, err):
+            return compressed_psum(xs, "data", err, bits=8)
+
+        g = jax.jit(jax.shard_map(f, mesh=mesh,
+                                  in_specs=(P("data"), P("data")),
+                                  out_specs=(P("data"), P("data")), check_vma=False))
+        errs = jnp.zeros_like(x)
+        total, errs = g(x, errs)
+        exact = jnp.sum(x, axis=0, keepdims=True)
+        rel = float(jnp.abs(total[0] - exact[0]).max() / jnp.abs(exact).max())
+        assert rel < 0.05, rel
+        # error feedback: residual equals what compression dropped
+        assert float(jnp.abs(errs).max()) > 0
+        print("OK", rel)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_reshard_restore():
+    """Checkpoint saved unsharded restores onto a live mesh with resharding."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np, tempfile, os
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train import checkpoint as ckpt
+
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        d = tempfile.mkdtemp()
+        ckpt.save(d, tree, 7)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        sh = {"w": NamedSharding(mesh, P("data", "model"))}
+        restored, step = ckpt.restore(d, tree, shardings=sh)
+        assert step == 7
+        assert restored["w"].sharding == sh["w"]
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+        print("OK")
+        """
+    )
+    assert "OK" in out

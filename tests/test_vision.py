@@ -1,0 +1,107 @@
+"""Paper benchmark models: shapes, trainability, A2Q budget after training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import QuantConfig
+from repro.core.bounds import l1_budget
+from repro.data.synthetic import BinaryMnistStream, ImageClassStream, SuperResStream
+from repro.models import vision
+from repro.nn.module import unbox
+from repro.optim.optimizers import adamw
+
+KEY = jax.random.PRNGKey(0)
+Q = QuantConfig(mode="a2q", weight_bits=6, act_bits=6, acc_bits=18)
+
+
+@pytest.mark.parametrize("name,init,apply,inshape,outshape", [
+    ("mobilenetv1", vision.init_mobilenet_v1, vision.apply_mobilenet_v1, (2, 32, 32, 3), (2, 10)),
+    ("resnet18", vision.init_resnet18, vision.apply_resnet18, (2, 32, 32, 3), (2, 10)),
+    ("espcn", vision.init_espcn, vision.apply_espcn, (2, 16, 16, 1), (2, 48, 48, 1)),
+    ("unet", vision.init_unet, vision.apply_unet, (2, 16, 16, 1), (2, 48, 48, 1)),
+])
+def test_vision_shapes(name, init, apply, inshape, outshape):
+    kwargs = {"width": 0.25} if name in ("mobilenetv1", "resnet18") else {}
+    if name == "unet":
+        kwargs = {"base": 8}
+    p = unbox(init(KEY, Q, **kwargs))
+    y = apply(p, jnp.ones(inshape), Q)
+    assert y.shape == outshape
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_linear_classifier_trains_on_binary_mnist():
+    """The paper's App. A setup learns to >85% with a 32-bit accumulator."""
+    q = QuantConfig(mode="qat", weight_bits=8, act_bits=1, acc_bits=32)
+    p = unbox(vision.init_linear_classifier(KEY, q))
+    stream = BinaryMnistStream(global_batch=128, seed=0)
+    opt = adamw()
+    state = opt.init(p)
+
+    def loss_fn(p, x, y):
+        logits = vision.apply_linear_classifier(p, x, q)
+        onehot = jax.nn.one_hot(y, 2)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    @jax.jit
+    def step(p, state, x, y):
+        g = jax.grad(loss_fn)(p, x, y)
+        return opt.update(g, state, p, 5e-3)
+
+    for i in range(60):
+        b = stream.batch(i)
+        p, state = step(p, state, jnp.asarray(b["x"]), jnp.asarray(b["y"]))
+    test = stream.batch(10_000)
+    logits = vision.apply_linear_classifier(p, jnp.asarray(test["x"]), q)
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == jnp.asarray(test["y"]))))
+    assert acc > 0.85, acc
+
+
+def test_a2q_vision_training_preserves_budget():
+    """After real gradient steps, the integer conv weights still satisfy
+    Eq. 15 (the guarantee is architectural, not init-only)."""
+    q = QuantConfig(mode="a2q", weight_bits=6, act_bits=6, acc_bits=14)
+    p = unbox(vision.init_espcn(KEY, q))
+    stream = SuperResStream(global_batch=4, hr=24)
+    opt = adamw()
+    state = opt.init(p)
+
+    def loss_fn(p, lr_img, hr_img):
+        out = vision.apply_espcn(p, lr_img, q)
+        mse = jnp.mean((out - hr_img) ** 2)
+        return mse + q.reg_lambda * vision.vision_penalty(p, q)
+
+    @jax.jit
+    def step(p, state, lr_img, hr_img):
+        g = jax.grad(loss_fn)(p, lr_img, hr_img)
+        return opt.update(g, state, p, 1e-3)
+
+    for i in range(10):
+        b = stream.batch(i)
+        p, state = step(p, state, jnp.asarray(b["lr"]), jnp.asarray(b["hr"]))
+
+    from repro.core.a2q import a2q_int_weights
+
+    def check(node, boundary_ok):
+        if isinstance(node, dict):
+            if "v" in node and "t" in node:
+                M, N = q.weight_bits, q.act_bits
+                qi, _ = a2q_int_weights(
+                    {"v": node["v"], "t": node["t"], "d": node["d"]}, M, q.acc_bits, N, False
+                )
+                l1 = np.abs(np.asarray(qi)).sum(axis=tuple(range(qi.ndim - 1)))
+                assert (l1 <= l1_budget(q.acc_bits, N, False) + 1e-5).all()
+            else:
+                for v in node.values():
+                    check(v, boundary_ok)
+
+    check(p, True)
+
+
+def test_synthetic_streams_deterministic():
+    s = ImageClassStream(global_batch=4)
+    a, b = s.batch(3), s.batch(3)
+    np.testing.assert_array_equal(a["x"], b["x"])
+    assert not np.array_equal(s.batch(3)["x"], s.batch(4)["x"])
