@@ -1,0 +1,49 @@
+"""jax version compatibility shims.
+
+Call-sites across the repo (and the subprocess bodies in the test suite) use
+the modern spellings ``jax.shard_map`` and its ``check_vma=`` keyword.  Older
+jax releases only provide ``jax.experimental.shard_map.shard_map``, and a
+middle window exports ``jax.shard_map`` whose keyword is still named
+``check_rep``.  Importing :mod:`repro` installs a thin adapter so one
+spelling works everywhere.
+
+The adapter is additive only: on a jax whose ``jax.shard_map`` already
+accepts ``check_vma`` nothing is touched.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def _accepts_check_vma(fn) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return True  # can't introspect: assume modern, don't wrap
+    return "check_vma" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+
+
+if not hasattr(jax, "shard_map") or not _accepts_check_vma(jax.shard_map):
+    if hasattr(jax, "shard_map"):
+        _shard_map = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, **kwargs):
+        check = True
+        if check_vma is not None:
+            check = check_vma
+        elif check_rep is not None:
+            check = check_rep
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check, **kwargs,
+        )
+
+    jax.shard_map = shard_map

@@ -1,0 +1,18 @@
+"""Distribution layer: logical-axis sharding rules + compressed collectives.
+
+``sharding``    — logical axis name -> mesh axis resolution with
+                  divisibility-aware fallback (``ShardingRules``,
+                  ``resolve_pspec``, ``param_specs``, ``cache_specs``,
+                  ``constrain``).
+``collectives`` — accumulator-aware compressed all-reduce
+                  (``compressed_psum``) with error-feedback residuals.
+"""
+
+from repro.dist.sharding import (  # noqa: F401
+    ShardingRules,
+    cache_specs,
+    constrain,
+    param_specs,
+    resolve_pspec,
+)
+from repro.dist.collectives import compressed_psum, compressed_psum_tree  # noqa: F401

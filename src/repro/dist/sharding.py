@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Every parameter in the repo is ``Boxed`` with *logical* axis names
+(``nn/module.py``): ``embed``, ``heads``, ``kv_heads``, ``mlp``, ``experts``,
+``vocab``, ``layers``, plus the activation-only ``batch``.  This module maps
+those names onto mesh axes:
+
+* ``ShardingRules.rules[name]``   — ordered tuple of mesh axes the logical
+  axis *wants* to shard over (Megatron-style TP on ``model``, FSDP on
+  ``data``, outer DP on ``pod``);
+* ``ShardingRules.unit_counts[name]`` — how many *semantic units* the axis
+  carries (heads, experts, ffn channels...).  A dim only shards when its unit
+  count divides the mesh extent: smollm's 9 heads never split over a 16-way
+  ``model`` axis even though the fused ``9 * 64 = 576`` dim would divide —
+  splitting mid-head would break per-head attention.  Such dims *replicate*
+  instead (the divisibility fallback), which is always correct, just wider.
+
+``resolve_pspec`` additionally never reuses one mesh axis for two dims of the
+same array (an invalid ``PartitionSpec``): earlier dims win, later dims fall
+back to replication.
+
+``param_specs`` / ``cache_specs`` walk boxed-param / decode-cache pytrees and
+return ``PartitionSpec`` trees; ``constrain`` is the mesh-optional
+``with_sharding_constraint`` used inside the model forward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.module import Boxed
+
+__all__ = [
+    "ShardingRules",
+    "resolve_pspec",
+    "param_specs",
+    "cache_specs",
+    "constrain",
+]
+
+
+def _prod(vals) -> int:
+    out = 1
+    for v in vals:
+        out *= v
+    return out
+
+
+def _gcd_all(vals: Sequence[int]) -> Optional[int]:
+    """gcd of all values (a sharding must divide *every* stack's count)."""
+    out = 0
+    for v in vals:
+        out = math.gcd(out, int(v))
+    return out or None
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping plus per-axis semantic unit counts."""
+
+    rules: dict
+    unit_counts: dict
+
+    @staticmethod
+    def default(
+        mesh,
+        arch,
+        *,
+        fsdp: bool = True,
+        seq_shard_extra: bool = False,
+        tp_extra: bool = False,
+    ) -> "ShardingRules":
+        """Derive the production layout from the mesh axes + arch dims.
+
+        ``data`` carries FSDP (and batch), ``model`` carries TP/EP, ``pod`` is
+        the outer data-parallel axis (batch spans ``("pod", "data")`` on a
+        multi-pod mesh).  ``arch=None`` yields activation-only rules with no
+        unit counts (everything parameter-ish replicates).
+
+        Toggles (dry-run hillclimb levers): ``fsdp=False`` keeps params
+        unsharded over ``data``; ``tp_extra`` widens ``vocab`` onto ``data``
+        as well; ``seq_shard_extra`` marks the activation ``seq`` axis for
+        sharding over ``model``.
+        """
+        names = tuple(mesh.axis_names)
+        model = ("model",) if "model" in names else ()
+        data = ("data",) if "data" in names else ()
+        batch = tuple(a for a in ("pod", "data") if a in names)
+        rules = {
+            "batch": batch,
+            "embed": data if fsdp else (),
+            "heads": model,
+            "kv_heads": model,
+            "mlp": model,
+            "experts": model,
+            "vocab": model + (data if tp_extra else ()),
+            "layers": (),  # scan-over-layers stacked dim: never sharded
+            "seq": model if seq_shard_extra else (),
+        }
+
+        unit_counts: dict = {}
+        if arch is not None:
+            heads: list = []
+            kv_heads: list = []
+            mlp: list = []
+            experts: list = []
+            for s in arch.stacks:
+                if s.attn is not None:
+                    heads.append(s.attn.heads)
+                    kv_heads.append(s.attn.kv_heads)
+                if s.ssm is not None and arch.d_model % s.ssm.head_dim == 0:
+                    heads.append(arch.d_model // s.ssm.head_dim)
+                if s.d_ff:
+                    mlp.append(s.d_ff)
+                if s.moe is not None:
+                    mlp.append(s.moe.d_ff)
+                    experts.append(s.moe.n_experts)
+                    if s.moe.n_shared:
+                        mlp.append(s.moe.shared_d_ff or s.moe.d_ff * s.moe.n_shared)
+            unit_counts["embed"] = arch.d_model
+            unit_counts["vocab"] = arch.vocab
+            for name, count in (
+                ("heads", _gcd_all(heads)),
+                ("kv_heads", _gcd_all(kv_heads)),
+                ("mlp", _gcd_all(mlp)),
+                ("experts", _gcd_all(experts)),
+            ):
+                if count is not None:
+                    unit_counts[name] = count
+        return ShardingRules(rules=rules, unit_counts=unit_counts)
+
+
+def resolve_pspec(dims, shape, mesh, rules: ShardingRules) -> P:
+    """Resolve per-dim logical names to a valid ``PartitionSpec``.
+
+    For each dim: take the rule's mesh axes (skipping axes already used by an
+    earlier dim and trivial size-1 axes), then keep the order-preserving
+    subset with the *largest* mesh extent such that both the dim's unit count
+    and its actual size divide it — so ``batch: ("pod", "data")`` with a
+    batch of 8 on a ``{pod: 2, data: 8}`` mesh shards 8-way over ``data``
+    rather than 2-way over ``pod``.  Ties prefer earlier axes.  No valid
+    subset -> the dim replicates.
+    """
+    used: set = set()
+    entries = []
+    for name, dim in zip(dims, shape):
+        want = rules.rules.get(name) if name is not None else None
+        if not want:
+            entries.append(None)
+            continue
+        candidates = tuple(
+            a for a in want
+            if a in mesh.shape and mesh.shape[a] > 1 and a not in used
+        )
+        units = rules.unit_counts.get(name, dim)
+        axes, best_extent = (), 1
+        for mask in range(1, 1 << len(candidates)):
+            subset = tuple(a for i, a in enumerate(candidates) if mask >> i & 1)
+            extent = _prod(mesh.shape[a] for a in subset)
+            if extent > best_extent and units % extent == 0 and dim % extent == 0:
+                axes, best_extent = subset, extent
+        if not axes:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    return P(*entries)
+
+
+def param_specs(boxed_tree, mesh, rules: ShardingRules):
+    """Boxed-param tree -> ``PartitionSpec`` tree (unboxed structure).
+
+    Works on real arrays and on ``jax.eval_shape`` trees alike (the dry-run
+    never allocates).  Plain (non-boxed) leaves replicate.
+    """
+
+    def one(leaf):
+        if isinstance(leaf, Boxed):
+            return resolve_pspec(leaf.axes, leaf.shape, mesh, rules)
+        return P(*([None] * getattr(leaf, "ndim", 0)))
+
+    return jax.tree.map(one, boxed_tree, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def cache_specs(cache_tree, mesh, rules: ShardingRules):
+    """Decode-cache tree -> ``PartitionSpec`` tree.
+
+    Cache leaves are stacked ``(layers, batch, ...)`` arrays
+    (``init_stack_cache``); the batch dim shards over the batch axes when
+    divisible (``long_500k``'s batch=1 replicates via the same fallback), the
+    sequence/feature dims stay local so a decode step never gathers its cache.
+    """
+
+    def one(leaf):
+        if leaf.ndim < 2:
+            return P(*([None] * leaf.ndim))
+        dims = ("layers", "batch") + (None,) * (leaf.ndim - 2)
+        return resolve_pspec(dims, leaf.shape, mesh, rules)
+
+    return jax.tree.map(one, cache_tree)
+
+
+def constrain(x, mesh, spec: P):
+    """``with_sharding_constraint`` that is a no-op without a mesh (tests /
+    single device) — the model forward pass calls this unconditionally."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,114 @@
+"""Deterministic stand-in for the slice of the hypothesis API the property
+tests use, so they run (as a seeded example sweep) when hypothesis is not
+installed.
+
+Test modules import it as::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings
+        from _hypothesis_fallback import strategies as st
+
+With real hypothesis installed nothing here runs.  The fallback draws
+``max_examples`` (capped at ``_EXAMPLE_CAP`` to keep tier-1 fast) examples
+from a ``numpy`` Generator seeded by the test name — fully deterministic
+across runs, no shrinking, no database.
+"""
+
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_EXAMPLE_CAP = 40
+
+
+class _Strategy:
+    """A draw function ``rng -> value``."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def draw(self, rng):
+        return self._fn(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def _composite(f):
+    def builder(*args, **kwargs):
+        def draw_fn(rng):
+            return f(lambda s: s.draw(rng), *args, **kwargs)
+
+        return _Strategy(draw_fn)
+
+    return builder
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    booleans=_booleans,
+    floats=_floats,
+    lists=_lists,
+    composite=_composite,
+)
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    """Record ``max_examples`` on the test; composes with ``given`` in either
+    decorator order (hypothesis allows both)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test over a deterministic sweep of drawn examples."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper, "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", 20),
+            )
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(min(n, _EXAMPLE_CAP)):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # pytest must not see the original signature (it would resolve the
+        # drawn parameters as fixtures)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

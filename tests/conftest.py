@@ -1,0 +1,30 @@
+"""Shared pytest config: register the ``slow`` marker and the ``--runslow``
+flag.  ``slow`` tests spawn 8-fake-device subprocesses (tests must not set
+``XLA_FLAGS`` in-process) and are skipped by default so the tier-1 command
+stays fast; run them with ``pytest --runslow``."""
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow",
+        action="store_true",
+        default=False,
+        help="run @pytest.mark.slow multi-device subprocess tests",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess test (run with --runslow)"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow subprocess test: needs --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

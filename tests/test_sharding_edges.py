@@ -1,0 +1,123 @@
+"""Edge cases for repro.dist beyond the seed contract tests: degenerate
+meshes, fused-QKV unit counts, boxed-tree spec derivation, and the
+compressed-psum quantization contract on a single device (fast, in-process)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.dist.collectives import compressed_psum, compressed_psum_tree
+from repro.dist.sharding import ShardingRules, param_specs, resolve_pspec
+from repro.nn.module import box
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_one_axis_mesh_data_only():
+    """No 'model' axis: TP-ish dims replicate, FSDP/batch still shard."""
+    mesh = _FakeMesh({"data": 8})
+    arch = get_arch("smollm-135m")
+    rules = ShardingRules.default(mesh, arch)
+    assert rules.rules["batch"] == ("data",)
+    assert resolve_pspec(("embed", "heads"), (576, 576), mesh, rules) == P("data", None)
+    # mlp wants 'model' which doesn't exist -> replicated
+    assert resolve_pspec(("embed", "mlp"), (576, 1536), mesh, rules) == P("data", None)
+
+
+def test_mesh_size_one_everything_replicated():
+    """Size-1 axes are skipped: single-device specs are fully replicated."""
+    mesh = _FakeMesh({"data": 1, "model": 1})
+    arch = get_arch("smollm-135m")
+    rules = ShardingRules.default(mesh, arch)
+    assert resolve_pspec(("embed", "mlp"), (576, 1536), mesh, rules) == P(None, None)
+    assert resolve_pspec(("batch", None, None), (8, 64, 1), mesh, rules) == P(None, None, None)
+
+
+def test_fused_qkv_heads_divide_kv_heads_do_not():
+    """yi-6b on a (2, 16) mesh: 32 heads shard 16-way, 4 kv_heads cannot —
+    even though the fused kv dim 4*128=512 itself divides 16."""
+    mesh = _FakeMesh({"data": 2, "model": 16})
+    arch = get_arch("yi-6b")
+    rules = ShardingRules.default(mesh, arch)
+    assert rules.unit_counts["heads"] == 32 and rules.unit_counts["kv_heads"] == 4
+    assert resolve_pspec(("embed", "heads"), (4096, 4096), mesh, rules) == P("data", "model")
+    assert (512 % 16) == 0  # raw-dim divisibility would wrongly shard...
+    assert resolve_pspec(("embed", "kv_heads"), (4096, 512), mesh, rules) == P("data", None)
+
+
+def test_multi_axis_rule_prefers_largest_valid_subset():
+    """batch rule ('pod', 'data') with batch=8 on {pod: 2, data: 8}: the full
+    16-way extent doesn't divide, and 'data' alone (8-way) beats 'pod' (2-way)."""
+    mesh = _FakeMesh({"pod": 2, "data": 8})
+    rules = ShardingRules.default(mesh, None)
+    assert rules.rules["batch"] == ("pod", "data")
+    assert resolve_pspec(("batch", None), (8, 4), mesh, rules) == P("data", None)
+    # divisible by the full extent -> both axes, earlier-first
+    assert resolve_pspec(("batch", None), (16, 4), mesh, rules) == P(("pod", "data"), None)
+
+
+def test_param_specs_on_boxed_tree():
+    mesh = _FakeMesh({"data": 2, "model": 4})
+    arch = get_arch("yi-6b")
+    rules = ShardingRules.default(mesh, arch)
+    tree = {
+        "wq": box(jnp.zeros((4096, 4096)), ("embed", "heads")),
+        "norm": box(jnp.zeros((4096,)), (None,)),
+        "plain": jnp.zeros((3, 3)),  # non-boxed leaves replicate
+    }
+    specs = param_specs(tree, mesh, rules)
+    assert specs["wq"] == P("data", "model")
+    assert specs["norm"] == P(None)
+    assert specs["plain"] == P(None, None)
+
+
+def test_compressed_psum_single_device_contract():
+    """On a 1-device mesh the psum is an identity: the 'total' is the
+    dequantized payload, the residual is exactly what quantization dropped,
+    and total + err reconstructs the payload bit-for-bit."""
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32), jnp.float32)
+    err0 = jnp.zeros_like(x)
+
+    f = jax.shard_map(
+        lambda xs, es: compressed_psum(xs, "data", es, bits=8),
+        mesh=mesh,
+        in_specs=(P("data"), P("data")),
+        out_specs=(P("data"), P("data")),
+        check_vma=False,
+    )
+    total, err = f(x, err0)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.abs(total - x).max()) <= scale / 2 + 1e-7
+    np.testing.assert_allclose(np.asarray(total + err), np.asarray(x), rtol=0, atol=1e-7)
+    assert float(jnp.abs(err).max()) > 0  # normal data never quantizes exactly
+
+
+def test_compressed_psum_tree_structure():
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"a": jnp.ones((2, 4)), "b": {"c": jnp.full((3,), 0.3)}}
+    errs = jax.tree.map(jnp.zeros_like, tree)
+
+    f = jax.shard_map(
+        lambda t, e: compressed_psum_tree(t, "data", e, bits=8),
+        mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    total, new_errs = f(tree, errs)
+    assert jax.tree_util.tree_structure(total) == jax.tree_util.tree_structure(tree)
+    assert jax.tree_util.tree_structure(new_errs) == jax.tree_util.tree_structure(tree)
+    assert float(jnp.abs(total["a"] - 1.0).max()) < 1e-2
+
+
+def test_compressed_psum_rejects_bad_bits():
+    with pytest.raises(ValueError):
+        compressed_psum(jnp.ones((2,)), "data", jnp.zeros((2,)), bits=1)
