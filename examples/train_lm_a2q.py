@@ -10,6 +10,30 @@ The same entrypoint on a TPU fleet builds the production mesh (this is just
 slow, so ``--scale`` optionally narrows the network (same depth/structure).
 After training, verifies the A2Q invariant over every layer: integer-weight
 l1 norms within the Eq. 15 budget for P=16.
+
+Multi-device gradient compression (A2Q's accumulator argument applied to the
+cross-device wire): on a mesh, put the data-parallel gradient all-reduce on
+an int8 wire with error feedback by giving the Runtime a GradCompressConfig
+and carrying the residual pair in the train state::
+
+    from repro.dist.collectives import GradCompressConfig, resolve_grad_compress
+    from repro.dist.sharding import ShardingRules, param_specs
+    from repro.train.state import init_grad_err
+
+    mesh  = jax.make_mesh((8,), ("data",))
+    rules = ShardingRules.default(mesh, arch)
+    gc    = GradCompressConfig(bits=8, scale_axis="column")   # A2Q+-style scales
+    rt    = Runtime(mesh=mesh, rules=rules, grad_compress=gc)
+    step_fn = build_train_step(arch, opt, rt, lr_schedule=sched)
+
+    pspecs = param_specs(jax.eval_shape(lambda: init_lm(key, arch)), mesh, rules)
+    axis   = resolve_grad_compress(gc, mesh).axis
+    state["grad_err"] = init_grad_err(params, mesh.shape[axis], pspecs=pspecs, axis=axis)
+
+(or just pass ``--grad-compress-bits 8`` to ``repro.launch.train``).  The
+20-step parity test in tests/test_sharding.py shows the compressed run
+tracking fp32 within ~0.05 loss; ``launch/dryrun.py`` records the measured
+wire-byte savings per train cell.
 """
 
 import argparse

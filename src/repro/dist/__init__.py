@@ -15,4 +15,10 @@ from repro.dist.sharding import (  # noqa: F401
     param_specs,
     resolve_pspec,
 )
-from repro.dist.collectives import compressed_psum, compressed_psum_tree  # noqa: F401
+from repro.dist.collectives import (  # noqa: F401
+    GradCompressConfig,
+    compressed_psum,
+    compressed_psum_tree,
+    quantize_shared_scale,
+    resolve_grad_compress,
+)

@@ -193,17 +193,31 @@ def cache_specs(cache_tree, mesh, rules: ShardingRules):
 
     Cache leaves are stacked ``(layers, batch, ...)`` arrays
     (``init_stack_cache``); the batch dim shards over the batch axes when
-    divisible (``long_500k``'s batch=1 replicates via the same fallback), the
-    sequence/feature dims stay local so a decode step never gathers its cache.
+    divisible (``long_500k``'s batch=1 replicates via the same fallback) and
+    the sequence dims stay local so a decode step never gathers its cache.
+    Head-carrying leaves additionally shard their head dim over the model
+    axis, mirroring the TP layout of the K/V projections that fill them:
+    GQA ``k``/``v`` are ``(layers, batch, slots, kv_heads, head_dim)`` and
+    take the ``kv_heads`` rule on dim 3; SSM states ``S`` are
+    ``(layers, batch, heads, ...)`` and take the ``heads`` rule on dim 2.
+    The unit-count fallback applies as everywhere: smollm's 3 kv_heads never
+    split over a 16-way model axis — those leaves replicate the head dim.
     """
 
-    def one(leaf):
+    def one(path, leaf):
         if leaf.ndim < 2:
             return P(*([None] * leaf.ndim))
-        dims = ("layers", "batch") + (None,) * (leaf.ndim - 2)
-        return resolve_pspec(dims, leaf.shape, mesh, rules)
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1] if keys else None
+        dims = ["layers", "batch"] + [None] * (leaf.ndim - 2)
+        if name in ("k", "v") and leaf.ndim == 5:
+            dims[3] = "kv_heads"
+        elif name == "S" and leaf.ndim == 5:
+            dims[2] = "heads"
+        return resolve_pspec(tuple(dims), leaf.shape, mesh, rules)
 
-    return jax.tree.map(one, cache_tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])
 
 
 def constrain(x, mesh, spec: P):

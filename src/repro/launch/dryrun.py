@@ -49,13 +49,19 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, applicable_shapes, get_arch, input_specs
+from repro.dist.collectives import GradCompressConfig, resolve_grad_compress
 from repro.dist.sharding import ShardingRules, cache_specs, param_specs
 from repro.launch.mesh import make_production_mesh
 from repro.models.lm import Runtime, init_cache, init_lm
 from repro.models.steps import build_prefill_step, build_serve_step, build_train_step
 from repro.nn.module import unbox
 from repro.optim.optimizers import adafactor
-from repro.roofline.analysis import collective_bytes_from_hlo, model_flops, roofline_terms
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+    wire_bytes,
+)
 
 _COST_KEYS = ("flops", "bytes accessed", "transcendentals")
 
@@ -94,7 +100,16 @@ def _make_runtime(arch, mesh, opts):
     if any(s.moe is not None for s in arch.stacks):
         # 'ep_both': experts over (model, data) — 1 expert/chip serving layout
         ep_axis = ("model", "data") if "ep_both" in opts else "model"
-    rt = Runtime(mesh=mesh, ep_axis=ep_axis, rules=rules, mla_absorb="mla_absorb" in opts)
+    grad_compress = None
+    if "grad_compress" in opts:
+        grad_compress = GradCompressConfig(
+            bits=8,
+            scale_axis="column" if "grad_compress_column" in opts else "tensor",
+        )
+    rt = Runtime(
+        mesh=mesh, ep_axis=ep_axis, rules=rules,
+        mla_absorb="mla_absorb" in opts, grad_compress=grad_compress,
+    )
     return rules, rt
 
 
@@ -127,14 +142,21 @@ def _lower_compile(arch, shape, mesh, rules, rt, opts=frozenset()) -> dict:
         if shape.kind == "train":
             optimizer = adafactor()
             opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
-            from repro.train.state import make_state_specs
+            from repro.train.state import init_grad_err, make_state_specs
 
-            state_spec = make_state_specs(boxed_shapes, optimizer, mesh, rules)
+            gc = resolve_grad_compress(rt.grad_compress, mesh)
+            state_spec = make_state_specs(boxed_shapes, optimizer, mesh, rules, grad_compress=gc)
             state_shapes = {
                 "params": param_shapes,
                 "opt_state": opt_shapes,
                 "step": jax.ShapeDtypeStruct((), jnp.int32),
             }
+            if gc is not None:
+                state_shapes["grad_err"] = jax.eval_shape(
+                    lambda: init_grad_err(
+                        param_shapes, mesh.shape[gc.axis], pspecs=pspecs, axis=gc.axis
+                    )
+                )
             jitted = jax.jit(
                 build_train_step(arch, optimizer, rt),
                 in_shardings=(_sharding(mesh, state_spec), batch_sharding),
@@ -281,6 +303,43 @@ def run_cell(
 
     # 1) the required dry-run pass: full scanned graph must lower + compile
     full = _lower_compile(arch, shape, mesh, rules, rt, opts)
+
+    # 1b) train cells price the compressed-gradient wire: compile the cell
+    # with grad_compress toggled the other way and diff the collective
+    # schedules.  The int8 all-gather/all-to-all traffic is classified as
+    # gradient bytes by roofline.analysis; `wire_bytes_saved` is the
+    # measured s8 gradient payload against the fp32 wire the same payload
+    # costs uncompressed (32/bits ratio) — the per-cell proof that the
+    # gradient traffic crosses the wire `bits`-wide.  `program_wire_delta`
+    # is the whole-program ring-convention diff vs the other variant: an
+    # honest, noisier number (the grouped-vmap bwd can shift GSPMD's
+    # strategies elsewhere in the graph — see dist/README.md).
+    grad_compress_cmp = None
+    if shape.kind == "train":
+        gc_on = "grad_compress" in opts
+        bits = 8
+        alt_opts = set(opts) ^ {"grad_compress"}
+        alt_rules, alt_rt = _make_runtime(arch, mesh, alt_opts)
+        alt = _lower_compile(arch, shape, mesh, alt_rules, alt_rt, alt_opts)
+        comp_info, base_info = (full, alt) if gc_on else (alt, full)
+        grad_wire = comp_info["collectives"]["gradient_wire_bytes"]
+        fp32_equiv = grad_wire * (32 // bits)
+        grad_compress_cmp = {
+            "enabled": gc_on,
+            "bits": bits,
+            "scale_axis": "column" if "grad_compress_column" in opts else "tensor",
+            "gradient_wire_bytes": grad_wire,
+            "fp32_equivalent_bytes": fp32_equiv,
+            "wire_bytes_saved": fp32_equiv - grad_wire,
+            "baseline_program_wire": wire_bytes(base_info["collectives"]),
+            "compressed_program_wire": wire_bytes(comp_info["collectives"]),
+            "program_wire_delta": wire_bytes(base_info["collectives"])
+            - wire_bytes(comp_info["collectives"]),
+            "baseline_f32_allreduce_bytes": base_info["collectives"]["bytes_by_kind"]["all-reduce"],
+            "compressed_f32_allreduce_bytes": comp_info["collectives"]["bytes_by_kind"]["all-reduce"],
+        }
+        record["grad_compress"] = grad_compress_cmp
+
     record.update(
         lower_s=full["lower_s"],
         compile_s=full["compile_s"],
@@ -313,6 +372,9 @@ def run_cell(
             "total_bytes": full["collectives"]["total_bytes"],
             "bytes_by_kind": full["collectives"]["bytes_by_kind"],
         }
+    if grad_compress_cmp is not None:
+        record["collectives"]["wire_bytes_saved"] = grad_compress_cmp["wire_bytes_saved"]
+        record["collectives"]["gradient_wire_bytes"] = full["collectives"]["gradient_wire_bytes"]
 
     if shape.kind == "train":
         mf = model_flops(record["params_active"], shape.global_batch * shape.seq_len, "train")
@@ -336,12 +398,20 @@ def run_cell(
     fn = os.path.join(out_dir, tag, f"{arch_name}__{shape_name}__{record['mesh']}.json")
     with open(fn, "w") as f:
         json.dump(record, f, indent=1)
-    print(
+    # NB: no bare ternary around the whole f-string here — `f"..." if x else
+    # "[ok]"` binds the conditional to the entire print argument and drops the
+    # arch/shape/compile info whenever useful_flops_ratio is None.
+    useful = record["useful_flops_ratio"]
+    line = (
         f"[ok] {arch_name:24s} {shape_name:12s} {record['mesh']:8s} "
         f"compile={record['compile_s']}s dominant={terms['dominant']} "
-        f"bound={terms['bound_s']:.4f}s useful="
-        f"{record['useful_flops_ratio']:.3f}" if record["useful_flops_ratio"] else "[ok]"
+        f"bound={terms['bound_s']:.4f}s"
     )
+    if useful is not None:
+        line += f" useful={useful:.3f}"
+    if grad_compress_cmp is not None:
+        line += f" wire_saved={grad_compress_cmp['wire_bytes_saved']:.3g}B"
+    print(line)
     return record
 
 

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.data.synthetic import TokenStream
+from repro.dist.collectives import GradCompressConfig, resolve_grad_compress
 from repro.dist.sharding import ShardingRules
 from repro.launch.mesh import make_production_mesh
 from repro.models.lm import Runtime, init_lm
@@ -33,6 +34,7 @@ from repro.nn.module import unbox
 from repro.optim.optimizers import adamw, adafactor, sgdm
 from repro.optim.schedules import cosine_with_warmup
 from repro.train.elastic import StragglerWatchdog, plan_mesh
+from repro.train.state import init_grad_err
 from repro.train.trainer import Trainer
 
 _OPTS = {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}
@@ -51,6 +53,16 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", choices=["auto", "none"], default="auto")
+    ap.add_argument(
+        "--grad-compress-bits", type=int, default=0,
+        help="int wire width for the data-parallel gradient all-reduce "
+             "(0 = off, fp32; 8 = int8 wire with error feedback)",
+    )
+    ap.add_argument(
+        "--grad-compress-scale", choices=["tensor", "column"], default="tensor",
+        help="compressed-gradient scale granularity: one scale per leaf, or "
+             "one per output column (A2Q+-style)",
+    )
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
@@ -66,13 +78,27 @@ def main(argv=None):
         rules = ShardingRules.default(mesh, arch)
         print(f"mesh: {dict(zip(plan['axes'], plan['shape']))}")
     ep_axis = "model" if (mesh is not None and any(s.moe for s in arch.stacks)) else None
-    rt = Runtime(mesh=mesh, ep_axis=ep_axis, rules=rules)
+    grad_compress = None
+    if args.grad_compress_bits:
+        grad_compress = GradCompressConfig(
+            bits=args.grad_compress_bits, scale_axis=args.grad_compress_scale
+        )
+    rt = Runtime(mesh=mesh, ep_axis=ep_axis, rules=rules, grad_compress=grad_compress)
 
     key = jax.random.PRNGKey(args.seed)
     boxed = init_lm(key, arch)
     params = unbox(boxed)
     optimizer = _OPTS[args.optimizer]()
     state = {"params": params, "opt_state": optimizer.init(params), "step": jnp.zeros((), jnp.int32)}
+    gc = resolve_grad_compress(grad_compress, mesh)
+    if grad_compress is not None and gc is None:
+        print("grad-compress requested but no multi-device data axis: running uncompressed")
+    if gc is not None:
+        from repro.dist.sharding import param_specs
+
+        pspecs = param_specs(boxed, mesh, rules) if rules is not None else None
+        state["grad_err"] = init_grad_err(params, mesh.shape[gc.axis], pspecs=pspecs, axis=gc.axis)
+        print(f"grad-compress: int{gc.bits} wire over '{gc.axis}' ({gc.scale_axis} scale)")
 
     sched = cosine_with_warmup(args.lr, warmup=max(args.steps // 20, 1), total=args.steps)
     step_fn = build_train_step(arch, optimizer, rt, lr_schedule=sched)
@@ -85,7 +111,8 @@ def main(argv=None):
         ckpt_every=args.ckpt_every,
         watchdog=StragglerWatchdog(),
     )
-    state, start = trainer.maybe_restore(state)
+    # older checkpoints have no grad_err leaves; residuals restart from zeros
+    state, start = trainer.maybe_restore(state, allow_missing=gc is not None)
     if start:
         print(f"resumed from step {start}")
     from repro.train.checkpoint import install_signal_handler

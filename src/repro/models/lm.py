@@ -36,13 +36,21 @@ __all__ = ["init_lm", "apply_lm", "lm_loss", "init_cache", "Runtime"]
 
 class Runtime:
     """Static (hashable) execution context threaded through the model: mesh,
-    EP axis, activation-sharding rules, beyond-paper toggles."""
+    EP axis, activation-sharding rules, beyond-paper toggles.
 
-    def __init__(self, mesh=None, ep_axis=None, rules=None, mla_absorb=False):
+    ``grad_compress`` (an optional ``dist.collectives.GradCompressConfig``)
+    routes the data-parallel gradient reduction of ``build_train_step``
+    through the int-quantized ``compressed_psum_tree`` instead of the fp32
+    all-reduce GSPMD would emit.
+    """
+
+    def __init__(self, mesh=None, ep_axis=None, rules=None, mla_absorb=False,
+                 grad_compress=None):
         self.mesh = mesh
         self.ep_axis = ep_axis
         self.rules = rules
         self.mla_absorb = mla_absorb
+        self.grad_compress = grad_compress
 
     def batch_spec(self, ndim: int) -> P:
         if self.rules is None:

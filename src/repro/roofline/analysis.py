@@ -16,6 +16,16 @@ optimizes are convention-independent).
 
 ``MODEL_FLOPS = 6*N*D`` (dense) / ``6*N_active*D`` (MoE) gives the useful-work
 ratio that catches remat/redundancy waste.
+
+Compressed-gradient classification: ``dist.collectives.compressed_psum`` puts
+the data-parallel gradient on the wire as s8/s16 integers (an all-to-all plus
+an all-gather per leaf).  No other path in the repo moves low-bit *integers*
+through a collective, so an s8/s16/u8/u16 all-gather / all-to-all IS gradient
+traffic — ``collective_bytes_from_hlo`` reports it separately as
+``gradient_wire_bytes`` so the dry-run can price the gradient path on its own.
+``wire_bytes`` converts raw result bytes into the ring-algorithm wire
+convention (all-reduce moves ~2x its buffer, everything else ~1x), which is
+the basis for the ``wire_bytes_saved`` number the dry-run records.
 """
 
 from __future__ import annotations
@@ -26,7 +36,7 @@ from typing import Optional
 
 from repro.roofline import hw
 
-__all__ = ["collective_bytes_from_hlo", "roofline_terms", "model_flops"]
+__all__ = ["collective_bytes_from_hlo", "wire_bytes", "roofline_terms", "model_flops"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -51,10 +61,20 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
+_GRADIENT_WIRE_DTYPES = ("s8", "u8", "s16", "u16")
+
+
 def collective_bytes_from_hlo(hlo_text: str) -> dict:
-    """Sum collective result bytes by op kind over an optimized HLO module."""
+    """Sum collective result bytes by op kind over an optimized HLO module.
+
+    Low-bit integer (s8/s16) all-gather / all-to-all results are additionally
+    classified as compressed-gradient traffic (``gradient_wire_bytes``): only
+    ``dist.collectives`` puts integer payloads that narrow on the wire.
+    """
     per_kind = {k: 0 for k in _COLLECTIVES}
     counts = {k: 0 for k in _COLLECTIVES}
+    gradient_wire = 0
+    gradient_count = 0
     for line in hlo_text.splitlines():
         stripped = line.strip()
         kind = None
@@ -73,15 +93,44 @@ def collective_bytes_from_hlo(hlo_text: str) -> dict:
             continue
         header = lhs[1].split(kind)[0]
         total = 0
+        int_bytes = 0
         for dtype, dims in _TUPLE_RE.findall(header):
-            total += _shape_bytes(dtype, dims)
+            nbytes = _shape_bytes(dtype, dims)
+            total += nbytes
+            if dtype in _GRADIENT_WIRE_DTYPES:
+                int_bytes += nbytes
         per_kind[kind] += total
         counts[kind] += 1
+        if int_bytes and kind in ("all-gather", "all-to-all"):
+            gradient_wire += int_bytes
+            gradient_count += 1
     return {
         "bytes_by_kind": per_kind,
         "counts": counts,
         "total_bytes": sum(per_kind.values()),
+        "gradient_wire_bytes": gradient_wire,
+        "gradient_wire_counts": gradient_count,
     }
+
+
+# Ring-algorithm wire weight per result byte: a ring all-reduce moves
+# ~2x its buffer (reduce-scatter pass + all-gather pass); gather/scatter/
+# permute collectives move ~1x their result.
+_WIRE_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def wire_bytes(collectives: dict) -> float:
+    """Result-byte record -> estimated per-chip wire bytes (ring convention)."""
+    return sum(
+        _WIRE_WEIGHT.get(kind, 1.0) * b
+        for kind, b in collectives["bytes_by_kind"].items()
+    )
 
 
 def model_flops(n_params: float, tokens: float, kind: str = "train") -> float:

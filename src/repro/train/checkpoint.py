@@ -107,12 +107,18 @@ def restore(
     like: Any,
     step: Optional[int] = None,
     shardings: Any = None,
+    allow_missing: bool = False,
 ) -> tuple[Any, int]:
     """Load a checkpoint into the structure of ``like``.
 
     ``shardings`` (optional pytree of NamedSharding matching ``like``) re-lays
     the global arrays onto the *current* mesh — which may have a different
     shape than the mesh that saved them (elastic restart).
+
+    ``allow_missing`` keeps the ``like`` value for leaves the checkpoint does
+    not record instead of raising — the path that turns on gradient
+    compression mid-run: the ``grad_err`` residual tree is absent from older
+    checkpoints and simply restarts from zeros.
     """
     if step is None:
         step = latest_step(directory)
@@ -134,8 +140,12 @@ def restore(
     for i, (path, leaf) in enumerate(flat_like):
         key = _leafkey(path)
         if key not in by_path:
-            raise KeyError(f"checkpoint missing leaf {key}")
-        val = arrays[by_path[key]["key"]]
+            if allow_missing:
+                val = np.asarray(jax.device_get(leaf))
+            else:
+                raise KeyError(f"checkpoint missing leaf {key}")
+        else:
+            val = arrays[by_path[key]["key"]]
         if tuple(val.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: ckpt {val.shape} vs expected {np.shape(leaf)}")
         if shard_flat is not None:

@@ -10,11 +10,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.collectives import GradCompressConfig, owner_dim, server_shape, strip_axis
 from repro.dist.sharding import ShardingRules, param_specs
 from repro.nn.module import axes_tree, unbox
 from repro.optim.optimizers import Optimizer
 
-__all__ = ["TrainState", "make_state_specs"]
+__all__ = ["TrainState", "make_state_specs", "init_grad_err"]
 
 
 @dataclasses.dataclass
@@ -36,12 +37,84 @@ def init_state(boxed_params, optimizer: Optimizer) -> TrainState:
     return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
 
 
-def make_state_specs(boxed_params, optimizer: Optimizer, mesh: Mesh, rules: ShardingRules):
+def init_grad_err(params, n_shards: int, pspecs=None, axis: Optional[str] = None):
+    """Zero error-feedback residuals for the compressed gradient reduction.
+
+    The residual *pair* of ``dist.collectives.compressed_allreduce``:
+
+    * ``local``  — phase-1 (quantization) residual, one fp32 row per
+      compression shard per param leaf: leaf ``(d0, ...)`` ->
+      ``(n_shards, d0, ...)``; row ``i`` is shard ``i``'s private residual.
+    * ``server`` — phase-2 (requantization) residual kept by each owner:
+      param-shaped with the ownership dim padded to a multiple of
+      ``n_shards`` (``server_shape``), owner-sharded over the compression
+      axis.  ``pspecs``/``axis`` (the param PartitionSpec tree and the
+      compression axis) pick the same per-leaf ownership dim the reduction
+      uses; omitted = dim 0 everywhere (unsharded layouts).
+
+    Works on real arrays and ``jax.eval_shape`` trees alike.
+    """
+    local = jax.tree.map(
+        lambda p: jnp.zeros((n_shards,) + tuple(p.shape), jnp.float32), params
+    )
+    if pspecs is None:
+        server = jax.tree.map(
+            lambda p: jnp.zeros(server_shape(p.shape, n_shards), jnp.float32), params
+        )
+    else:
+        server = jax.tree.map(
+            lambda p, s: jnp.zeros(
+                server_shape(p.shape, n_shards, owner_dim(s, len(p.shape), axis)),
+                jnp.float32,
+            ),
+            params,
+            pspecs,
+        )
+    return {"local": local, "server": server}
+
+
+def _grad_err_specs(pspecs, axis: str):
+    """Residual specs: both trees lead with the compression axis (``local``
+    on its per-shard stack dim, ``server`` on the post-all-to-all owner dim);
+    trailing dims inherit the param's spec — minus any reuse of the
+    compression axis (a PartitionSpec may not mention one mesh axis twice)."""
+
+    def local_one(spec: P) -> P:
+        return P(axis, *strip_axis(spec, axis))
+
+    def server_one(spec: P) -> P:
+        # server leaves are param-shaped (ownership dim padded): that dim
+        # takes `axis`, every other dim keeps the param layout
+        entries = strip_axis(spec, axis)
+        if not entries:  # scalar param: server is (n_shards,)
+            return P(axis)
+        od = owner_dim(spec, len(entries), axis)
+        entries[od] = axis
+        return P(*entries)
+
+    is_spec = lambda x: isinstance(x, P)
+    return {
+        "local": jax.tree.map(local_one, pspecs, is_leaf=is_spec),
+        "server": jax.tree.map(server_one, pspecs, is_leaf=is_spec),
+    }
+
+
+def make_state_specs(
+    boxed_params,
+    optimizer: Optimizer,
+    mesh: Mesh,
+    rules: ShardingRules,
+    grad_compress: Optional[GradCompressConfig] = None,
+):
     """PartitionSpec tree for a TrainState.tree().
 
     Optimizer states mirror param structure leaf-for-leaf (momentum/variance)
     or reduce a trailing axis (adafactor vr/vc); both inherit the param's spec
     (trimmed for reduced axes) — ZeRO-1 + ZeRO-3 by construction.
+
+    ``grad_compress`` (with a resolved ``axis``) adds the ``grad_err``
+    residual tree: per-shard rows over the compression axis, trailing dims
+    sharded like the params they mirror.
     """
     pspecs = param_specs(boxed_params, mesh, rules)
     params = unbox(boxed_params)
@@ -77,6 +150,10 @@ def make_state_specs(boxed_params, optimizer: Optimizer, mesh: Mesh, rules: Shar
         "opt_state": opt_spec,
         "step": P(),
     }
+    if grad_compress is not None:
+        if grad_compress.axis is None:
+            raise ValueError("grad_compress.axis must be resolved (resolve_grad_compress)")
+        state_spec["grad_err"] = _grad_err_specs(pspecs, grad_compress.axis)
     return state_spec
 
 

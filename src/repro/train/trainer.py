@@ -52,15 +52,19 @@ class Trainer:
         self.step_fn = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
         self._last_state = None
 
-    def maybe_restore(self, state):
+    def maybe_restore(self, state, allow_missing: bool = False):
         """Resume from the latest valid checkpoint if one exists (the data
-        stream is stateless, so the step index fully restores the run)."""
+        stream is stateless, so the step index fully restores the run).
+
+        ``allow_missing`` tolerates state leaves absent from the checkpoint
+        (e.g. resuming with gradient compression newly enabled: the
+        ``grad_err`` residuals restart from zeros)."""
         if self.ckpt_dir is None:
             return state, 0
         latest = ckpt.latest_step(self.ckpt_dir)
         if latest is None:
             return state, 0
-        tree, step = ckpt.restore(self.ckpt_dir, state)
+        tree, step = ckpt.restore(self.ckpt_dir, state, allow_missing=allow_missing)
         return tree, int(step)
 
     def emergency_save(self):

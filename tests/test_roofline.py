@@ -6,7 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.roofline.analysis import collective_bytes_from_hlo, model_flops, roofline_terms
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+    wire_bytes,
+)
 
 
 def test_collective_parser_on_synthetic_hlo():
@@ -34,6 +39,36 @@ def test_collective_parser_skips_done_ops():
     r = collective_bytes_from_hlo(hlo)
     assert r["counts"]["all-reduce"] == 1
     assert r["total_bytes"] == 128 * 4
+
+
+def test_collective_parser_classifies_gradient_wire():
+    """s8/s16 all-gather / all-to-all results are compressed-gradient
+    traffic (only dist.collectives narrows integers onto the wire); f32
+    collectives and s8 collective-permutes are not."""
+    hlo = """
+  %ag = s8[1024,64]{1,0} all-gather(s8[64,64]{1,0} %q), dimensions={0}
+  %a2a = s8[16,64]{1,0} all-to-all(s8[16,64]{1,0} %p), dimensions={0}
+  %ag16 = s16[128]{0} all-gather(s16[8]{0} %r), dimensions={0}
+  %arf = f32[1024]{0} all-reduce(f32[1024]{0} %x)
+  %cp = s8[64]{0} collective-permute(s8[64]{0} %w), source_target_pairs={{0,1}}
+    """
+    r = collective_bytes_from_hlo(hlo)
+    assert r["gradient_wire_bytes"] == 1024 * 64 + 16 * 64 + 128 * 2
+    assert r["gradient_wire_counts"] == 3
+    # existing accounting is untouched
+    assert r["bytes_by_kind"]["all-reduce"] == 1024 * 4
+    assert r["bytes_by_kind"]["collective-permute"] == 64
+
+
+def test_wire_bytes_ring_convention():
+    """all-reduce moves ~2x its result on a ring; everything else ~1x."""
+    r = collective_bytes_from_hlo(
+        """
+  %ar = f32[100]{0} all-reduce(f32[100]{0} %x)
+  %ag = s8[100]{0} all-gather(s8[10]{0} %y), dimensions={0}
+    """
+    )
+    assert wire_bytes(r) == 2 * 400 + 100
 
 
 def test_roofline_terms_math():

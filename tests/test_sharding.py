@@ -216,6 +216,200 @@ def test_compressed_psum_error_feedback():
 
 
 @pytest.mark.slow
+def test_compressed_grad_training_tracks_uncompressed():
+    """20 training steps on an 8-device data mesh: int8-compressed gradient
+    reduction (error feedback on) stays within tolerance of the fp32 path,
+    both residual trees are live, and the residual pair survives a
+    checkpoint save/restore cycle (plus allow_missing restore from an
+    uncompressed checkpoint)."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import TokenStream
+        from repro.dist.collectives import GradCompressConfig
+        from repro.dist.sharding import ShardingRules, param_specs
+        from repro.models import Runtime, init_lm
+        from repro.models.steps import build_train_step
+        from repro.nn.module import unbox
+        from repro.optim.optimizers import adamw
+        from repro.train import checkpoint as ckpt
+        from repro.train.state import init_grad_err
+
+        arch = reduced(get_arch("smollm-135m"))
+        mesh = jax.make_mesh((8,), ("data",))
+        rules = ShardingRules.default(mesh, arch)
+        params = unbox(init_lm(jax.random.PRNGKey(0), arch))
+        boxed = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), arch))
+        pspecs = param_specs(boxed, mesh, rules)
+        opt = adamw()
+        stream = TokenStream(vocab=arch.vocab, seq_len=32, global_batch=8)
+
+        def run(rt, extra):
+            state = {"params": params, "opt_state": opt.init(params),
+                     "step": jnp.zeros((), jnp.int32), **extra}
+            step = jax.jit(build_train_step(arch, opt, rt,
+                                            lr_schedule=lambda s: jnp.float32(2e-3)))
+            losses = []
+            for i in range(20):
+                batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+                state, m = step(state, batch)
+                losses.append(float(m["loss"]))
+            return losses, state
+
+        base, _ = run(Runtime(mesh=mesh, rules=rules), {})
+        gc = GradCompressConfig(bits=8, axis="data")
+        err0 = init_grad_err(params, 8, pspecs=pspecs, axis="data")
+        comp, st = run(Runtime(mesh=mesh, rules=rules, grad_compress=gc),
+                       {"grad_err": err0})
+        # both learn, trajectories track (error feedback keeps the int8
+        # path from drifting)
+        assert base[-1] < base[0] - 0.5 and comp[-1] < comp[0] - 0.5
+        diff = max(abs(a - b) for a, b in zip(base, comp))
+        assert diff < 0.05, (diff, base[-1], comp[-1])
+        local_nz = sum(float(jnp.abs(e).sum()) for e in jax.tree.leaves(st["grad_err"]["local"]))
+        server_nz = sum(float(jnp.abs(e).sum()) for e in jax.tree.leaves(st["grad_err"]["server"]))
+        assert local_nz > 0 and server_nz > 0
+
+        # the residual pair round-trips through a checkpoint
+        d = tempfile.mkdtemp()
+        ckpt.save(d, st, 20)
+        like = {"params": params, "opt_state": opt.init(params),
+                "step": jnp.zeros((), jnp.int32),
+                "grad_err": init_grad_err(params, 8, pspecs=pspecs, axis="data")}
+        restored, step_no = ckpt.restore(d, like)
+        assert step_no == 20
+        for a, b in zip(jax.tree.leaves(restored["grad_err"]),
+                        jax.tree.leaves(st["grad_err"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # enabling compression mid-run: an uncompressed checkpoint restores
+        # with allow_missing and the residuals restart from zeros
+        d2 = tempfile.mkdtemp()
+        no_gc = {k: v for k, v in st.items() if k != "grad_err"}
+        ckpt.save(d2, no_gc, 5)
+        restored2, _ = ckpt.restore(d2, like, allow_missing=True)
+        assert sum(float(jnp.abs(e).sum()) for e in jax.tree.leaves(restored2["grad_err"])) == 0.0
+        try:
+            ckpt.restore(d2, like)
+            raise SystemExit("expected KeyError")
+        except KeyError:
+            pass
+        print("OK", diff)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_grad_training_on_tp_mesh():
+    """Same contract on a (data=2, model=4) mesh: the compressed reduction
+    must coexist with tensor parallelism (per-column scales here)."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import TokenStream
+        from repro.dist.collectives import GradCompressConfig
+        from repro.dist.sharding import ShardingRules, param_specs
+        from repro.models import Runtime, init_lm
+        from repro.models.steps import build_train_step
+        from repro.nn.module import unbox
+        from repro.optim.optimizers import adamw
+        from repro.train.state import init_grad_err
+
+        arch = reduced(get_arch("smollm-135m"))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = ShardingRules.default(mesh, arch)
+        params = unbox(init_lm(jax.random.PRNGKey(0), arch))
+        boxed = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), arch))
+        pspecs = param_specs(boxed, mesh, rules)
+        opt = adamw()
+        stream = TokenStream(vocab=arch.vocab, seq_len=32, global_batch=8)
+
+        def run(rt, extra):
+            state = {"params": params, "opt_state": opt.init(params),
+                     "step": jnp.zeros((), jnp.int32), **extra}
+            step = jax.jit(build_train_step(arch, opt, rt,
+                                            lr_schedule=lambda s: jnp.float32(2e-3)))
+            losses = []
+            for i in range(12):
+                batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+                state, m = step(state, batch)
+                losses.append(float(m["loss"]))
+            return losses
+
+        base = run(Runtime(mesh=mesh, rules=rules), {})
+        gc = GradCompressConfig(bits=8, scale_axis="column", axis="data")
+        comp = run(Runtime(mesh=mesh, rules=rules, grad_compress=gc),
+                   {"grad_err": init_grad_err(params, 2, pspecs=pspecs, axis="data")})
+        diff = max(abs(a - b) for a, b in zip(base, comp))
+        assert diff < 0.05, diff
+        print("OK", diff)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_decode_with_kv_sharded_cache_matches_unsharded():
+    """Decode with the KV-cache head dim sharded over `model` (kv_heads=4 on
+    a 4-way model axis) compiles and matches the single-device decode
+    numerics — the cache_specs change must not alter the math."""
+    out = _run_subprocess(
+        """
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.dist.sharding import ShardingRules, cache_specs, param_specs
+        from repro.models import Runtime, init_cache, init_lm
+        from repro.models.steps import build_serve_step
+        from repro.nn.module import unbox
+
+        arch = reduced(get_arch("yi-6b"))
+        s0 = arch.stacks[0]
+        arch = dataclasses.replace(
+            arch,
+            stacks=(dataclasses.replace(s0, attn=dataclasses.replace(s0.attn, kv_heads=4)),)
+            + arch.stacks[1:],
+        )
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = ShardingRules.default(mesh, arch)
+        params = unbox(init_lm(jax.random.PRNGKey(0), arch))
+        cache = init_cache(arch, 8, 32)
+        cspecs = cache_specs(cache, mesh, rules)
+        assert cspecs["0"]["attn"]["k"][3] == "model", cspecs["0"]["attn"]["k"]
+
+        tokens = jnp.asarray(np.random.default_rng(0).integers(0, arch.vocab, (8, 1)), jnp.int32)
+        pos = jnp.zeros((), jnp.int32)
+
+        # single device reference
+        logits_ref, _ = build_serve_step(arch, Runtime())(params, tokens, cache, pos)
+
+        pspecs = param_specs(jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), arch)), mesh, rules)
+        sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                    is_leaf=lambda x: isinstance(x, P))
+        rt = Runtime(mesh=mesh, rules=rules)
+        with mesh:
+            step = jax.jit(
+                build_serve_step(arch, rt),
+                in_shardings=(sh(pspecs), NamedSharding(mesh, P("data")),
+                              sh(cspecs), NamedSharding(mesh, P())),
+                out_shardings=(None, sh(cspecs)),
+            )
+            logits, new_cache = step(params, tokens, cache, pos)
+        err = float(jnp.abs(logits.astype(jnp.float32) - logits_ref.astype(jnp.float32)).max())
+        assert err < 1e-2, err
+        # the cache was actually written at pos 0
+        assert int(new_cache["0"]["attn"]["kpos"][0, 0, 0]) == 0
+        print("OK", err)
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_elastic_reshard_restore():
     """Checkpoint saved unsharded restores onto a live mesh with resharding."""
     out = _run_subprocess(

@@ -90,6 +90,38 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         ckpt.restore(d, {"a": jnp.ones((4,))})
 
 
+def test_checkpoint_allow_missing_keeps_like_values(tmp_path):
+    """Turning on grad compression mid-run: the grad_err residuals are not
+    in older checkpoints; allow_missing restores them from the `like` tree
+    (zeros) instead of raising."""
+    d = str(tmp_path / "c4")
+    ckpt.save(d, {"a": jnp.arange(3.0)}, 1)
+    like = {"a": jnp.zeros((3,)), "grad_err": {"local": jnp.full((2, 3), 7.0)}}
+    with pytest.raises(KeyError):
+        ckpt.restore(d, like)
+    restored, step = ckpt.restore(d, like, allow_missing=True)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(3.0))
+    np.testing.assert_array_equal(np.asarray(restored["grad_err"]["local"]), np.full((2, 3), 7.0))
+
+
+def test_grad_compress_without_mesh_falls_back_to_plain_step():
+    """grad_compress on a single device (no mesh / axis extent 1) resolves
+    to the uncompressed path: no grad_err in the returned state."""
+    from repro.dist.collectives import GradCompressConfig
+
+    arch = reduced(get_arch("smollm-135m"))
+    params = unbox(init_lm(KEY, arch))
+    opt = adamw()
+    rt = Runtime(grad_compress=GradCompressConfig(bits=8))
+    step = build_train_step(arch, opt, rt, lr_schedule=lambda s: jnp.float32(1e-3))
+    state = {"params": params, "opt_state": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+    stream = TokenStream(vocab=arch.vocab, seq_len=16, global_batch=2)
+    new_state, metrics = jax.jit(step)(state, {k: jnp.asarray(v) for k, v in stream.batch(0).items()})
+    assert set(new_state) == {"params", "opt_state", "step"}
+    assert float(metrics["loss"]) > 0
+
+
 def test_plan_mesh_elastic():
     # full fleet
     assert plan_mesh(512, prefer_model=16)["shape"] == (2, 16, 16)
