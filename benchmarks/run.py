@@ -31,7 +31,15 @@ def main(argv=None):
     steps = 25 if args.fast else 40
     fig2_steps = 40 if args.fast else 60
 
-    from benchmarks import bounds_table, fig2_overflow, fig4_pareto, fig5_sparsity, fig6_resources, kernels_bench
+    from benchmarks import (
+        bounds_table,
+        fig2_overflow,
+        fig4_pareto,
+        fig5_sparsity,
+        fig6_resources,
+        kernels_bench,
+        serve_bench,
+    )
 
     t0 = time.time()
     results = {}
@@ -65,6 +73,11 @@ def main(argv=None):
     print("=" * 72)
     results["kernels"] = kernels_bench.run()
 
+    print("=" * 72)
+    print("serving bench (paged vs contiguous engines)")
+    print("=" * 72)
+    results["serve"] = serve_bench.run(requests=4 if args.fast else 8)
+
     claims = {
         "fig2_wrap_collapses": results["fig2"]["wrap_collapses"],
         "fig2_a2q_holds_accuracy": results["fig2"]["a2q_holds"],
@@ -76,6 +89,7 @@ def main(argv=None):
         "fig5_sparsity_monotone": results["fig5"]["sparsity_monotone_up"],
         "fig6_bound_ordering": results["fig6"]["bound_ordering_ok"],
         "fig6_a2q_dominates_fixed32": results["fig6"]["a2q_dominates_fixed32"],
+        "serve_paged_prefill_faster": results["serve"]["prefill_speedup"] > 1.0,
     }
     print("=" * 72)
     print("PAPER CLAIMS SUMMARY")

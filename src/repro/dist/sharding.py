@@ -202,6 +202,14 @@ def cache_specs(cache_tree, mesh, rules: ShardingRules):
     ``(layers, batch, heads, ...)`` and take the ``heads`` rule on dim 2.
     The unit-count fallback applies as everywhere: smollm's 3 kv_heads never
     split over a 16-way model axis — those leaves replicate the head dim.
+
+    Paged layouts (``serve/paged_cache.py``) have no batch dim: block pools
+    ``kp``/``vp`` are ``(layers, num_blocks, block_size, kv_heads, head_dim)``
+    — any sequence may own any block, so the block axis stays *local*
+    (replicated over the batch axes) while the head dim keeps the same TP
+    sharding as the projections that fill it.  MLA latent pools
+    ``ckvp``/``kpep`` and the block table ``bt (slots, max_blocks)`` carry no
+    shardable parameter dim at all (the table rides with the batch).
     """
 
     def one(path, leaf):
@@ -209,6 +217,13 @@ def cache_specs(cache_tree, mesh, rules: ShardingRules):
             return P(*([None] * leaf.ndim))
         keys = [k.key for k in path if hasattr(k, "key")]
         name = keys[-1] if keys else None
+        if name == "bt":
+            return resolve_pspec(("batch",) + (None,) * (leaf.ndim - 1), leaf.shape, mesh, rules)
+        if name in ("kp", "vp", "ckvp", "kpep"):
+            dims = ["layers"] + [None] * (leaf.ndim - 1)
+            if name in ("kp", "vp") and leaf.ndim == 5:
+                dims[3] = "kv_heads"
+            return resolve_pspec(tuple(dims), leaf.shape, mesh, rules)
         dims = ["layers", "batch"] + [None] * (leaf.ndim - 2)
         if name in ("k", "v") and leaf.ndim == 5:
             dims[3] = "kv_heads"

@@ -19,9 +19,10 @@ from repro.kernels import ref
 from repro.kernels.a2q_quantize import a2q_quantize_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.int_matmul import int_matmul_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 
-__all__ = ["int_matmul", "a2q_quantize", "flash_attention", "rwkv6_scan"]
+__all__ = ["int_matmul", "a2q_quantize", "flash_attention", "paged_attention", "rwkv6_scan"]
 
 
 def _default_interpret(interpret: Optional[bool]) -> bool:
@@ -158,6 +159,36 @@ def flash_attention(
         interpret=_default_interpret(interpret),
     )
     return out[:, :Tq].reshape(B, H, Tq, D)
+
+
+def paged_attention(
+    q: jnp.ndarray,
+    kp: jnp.ndarray,
+    vp: jnp.ndarray,
+    bt: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Paged-attention decode: one query token per row against block-table
+    K/V pools.  ``q (B, H, Dh)``, pools ``(NB, bs, KV, Dh)``, table
+    ``bt (B, MB)``, ``lengths (B,)`` counting valid tokens (including this
+    step's write).  Returns ``(B, H, Dh)``.  Oracle:
+    ``ref.ref_paged_attention``."""
+    B, H, Dh = q.shape
+    KV = kp.shape[2]
+    G = H // KV
+    out = paged_attention_pallas(
+        q.reshape(B, KV, G, Dh),
+        kp,
+        vp,
+        bt,
+        lengths,
+        scale=scale,
+        interpret=_default_interpret(interpret),
+    )
+    return out.reshape(B, H, Dh)
 
 
 def rwkv6_scan(

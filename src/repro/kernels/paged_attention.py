@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: paged-attention decode over block-table KV pools.
+
+One query token per sequence attends to K/V scattered across fixed-size token
+blocks (``serve/paged_cache.py`` owns the layout): pool ``(NB, bs, KV, Dh)``,
+per-sequence block table ``bt (B, MB)``, per-sequence length.  The kernel
+walks each row's table with the KV-block axis innermost and *gathers through
+the table at the BlockSpec level*: the block table is a scalar-prefetch
+operand (``pltpu.PrefetchScalarGridSpec``), so the index map of the K/V
+operands reads ``bt[b, j]`` to pick which pool block the next grid step DMAs
+into VMEM — the ``(B, MB * bs, ...)`` contiguous view is never materialized
+(the jnp twin ``ref.ref_paged_attention`` materializes it; `ops.py` picks).
+
+Softmax is the same fp32 online (running max / sum / accumulator) scheme as
+``flash_attention.py``; GQA is handled by gridding over KV heads with the
+``G = H // KV`` query group as the row dim of each score panel.  Key validity
+comes from the per-row length: position ``j * bs + o`` participates iff it is
+``< length`` — dead rows (length 0) produce a zero output via the flush-time
+denominator guard, never a NaN.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attention_kernel", "paged_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def paged_attention_kernel(
+    bt_ref,  # (B, MB) scalar-prefetch block table
+    len_ref,  # (B,)   scalar-prefetch per-row lengths
+    q_ref,  # (1, 1, G, Dh)
+    k_ref,  # (1, bs, 1, Dh) — the pool block bt[b, j]
+    v_ref,  # (1, bs, 1, Dh)
+    o_ref,  # (1, 1, G, Dh)
+    m_ref,  # (G, 1) scratch
+    l_ref,  # (G, 1) scratch
+    acc_ref,  # (G, Dh) scratch
+    *,
+    scale: float,
+    block_size: int,
+    mb_steps: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, bs)
+
+    length = len_ref[b]
+    kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+    s = jnp.where(kpos < length, s, _NEG_INF)  # (G, bs) via broadcast
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(kpos < length, p, 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(
+        p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = alpha * acc_ref[...] + pv
+
+    @pl.when(j == mb_steps - 1)
+    def _flush():
+        l = l_ref[...]
+        norm = jnp.where(l > 0.0, 1.0 / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0, 0] = (acc_ref[...] * norm).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jnp.ndarray,  # (B, KV, G, Dh)
+    kp: jnp.ndarray,  # (NB, bs, KV, Dh)
+    vp: jnp.ndarray,  # (NB, bs, KV, Dh)
+    bt: jnp.ndarray,  # (B, MB) int32
+    lengths: jnp.ndarray,  # (B,) int32
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns ``(B, KV, G, Dh)`` attention outputs for one decode token per
+    row.  ``lengths`` counts valid tokens (including this step's freshly
+    written one); table entries past a row's length may point anywhere — they
+    are loaded and fully masked."""
+    B, KV, G, Dh = q.shape
+    NB, bs, _, _ = kp.shape
+    MB = bt.shape[1]
+    if scale is None:
+        scale = Dh**-0.5
+
+    kernel = functools.partial(
+        paged_attention_kernel, scale=scale, block_size=bs, mb_steps=MB
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, Dh), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, Dh), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Dh), q.dtype),
+        interpret=interpret,
+    )(bt.astype(jnp.int32), lengths.astype(jnp.int32), q, kp, vp)

@@ -20,6 +20,7 @@ __all__ = [
     "ref_int_matmul",
     "ref_a2q_quantize",
     "ref_flash_attention",
+    "ref_paged_attention",
     "ref_rwkv6",
 ]
 
@@ -134,6 +135,42 @@ def ref_flash_attention(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def ref_paged_attention(
+    q: jnp.ndarray,  # (B, H, Dh)
+    kp: jnp.ndarray,  # (NB, bs, KV, Dh) paged key pool
+    vp: jnp.ndarray,  # (NB, bs, KV, Dh) paged value pool
+    bt: jnp.ndarray,  # (B, MB) int32 block table
+    lengths: jnp.ndarray,  # (B,) int32 valid tokens per row
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Paged-attention decode oracle: gather the per-row contiguous K/V view
+    through the block table, then dense fp32 softmax over the valid prefix.
+
+    One query token per row (decode); ``lengths`` includes the current step's
+    token.  GQA: ``H = KV * G`` query heads share each KV head.  Rows with
+    ``lengths == 0`` return zeros (masked denominator guard), matching the
+    kernel's flush semantics.
+    """
+    B, H, Dh = q.shape
+    NB, bs, KV, _ = kp.shape
+    MB = bt.shape[1]
+    G = H // KV
+    if scale is None:
+        scale = Dh**-0.5
+    k = kp[bt].reshape(B, MB * bs, KV, Dh).astype(jnp.float32)  # (B, S, KV, Dh)
+    v = vp[bt].reshape(B, MB * bs, KV, Dh).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, Dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k)
+    valid = jnp.arange(MB * bs)[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0.0, p / jnp.maximum(denom, 1e-30), 0.0)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return out.reshape(B, H, Dh).astype(q.dtype)
 
 
 def ref_rwkv6(

@@ -42,15 +42,20 @@ class Runtime:
     routes the data-parallel gradient reduction of ``build_train_step``
     through the int-quantized ``compressed_psum_tree`` instead of the fp32
     all-reduce GSPMD would emit.
+
+    ``decode_kernel`` routes paged-attention decode reads through the Pallas
+    kernel (``kernels/paged_attention.py``) instead of the gathered-view jnp
+    path — the TPU serving fast path.
     """
 
     def __init__(self, mesh=None, ep_axis=None, rules=None, mla_absorb=False,
-                 grad_compress=None):
+                 grad_compress=None, decode_kernel=False):
         self.mesh = mesh
         self.ep_axis = ep_axis
         self.rules = rules
         self.mla_absorb = mla_absorb
         self.grad_compress = grad_compress
+        self.decode_kernel = decode_kernel
 
     def batch_spec(self, ndim: int) -> P:
         if self.rules is None:
@@ -134,7 +139,11 @@ def apply_lm(
     rt: Optional[Runtime] = None,
     return_hidden: bool = False,
 ):
-    """Forward pass.  ``cache`` given => single-token decode (tokens (B, 1)).
+    """Forward pass.  ``cache`` given => cached step: ``tokens (B, T)`` with
+    ``T == 1`` (decode) or ``T > 1`` (chunked prefill), written at each row's
+    ``start_pos``.  A paged cache carries its block-table view under the
+    reserved key ``"_paged"`` (see ``serve/paged_cache.py``); the returned
+    cache holds only the per-stack state — the caller re-attaches the view.
 
     Returns (logits, new_cache, penalty[, hidden]).
     """
@@ -150,10 +159,14 @@ def apply_lm(
     B, S, _ = x.shape
     x = constrain(x, rt.mesh, rt.batch_spec(3))
 
+    view = cache.get("_paged") if cache is not None else None
     if cache is not None:
         assert start_pos is not None
         sp = jnp.asarray(start_pos, jnp.int32).reshape(-1)  # scalar or per-row (B,)
-        positions = jnp.broadcast_to(sp[:, None] if sp.shape[0] == B else sp.reshape(1, 1), (B, 1))
+        base = sp[:, None] if sp.shape[0] == B else sp.reshape(1, 1)
+        positions = jnp.broadcast_to(
+            base + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S)
+        )
     else:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
 
@@ -165,6 +178,7 @@ def apply_lm(
         x, nc, pen = apply_stack(
             sp, x, arch, s, positions, sc,
             mesh=rt.mesh, ep_axis=rt.ep_axis, mla_absorb=rt.mla_absorb,
+            view=view, decode_kernel=rt.decode_kernel,
         )
         x = constrain(x, rt.mesh, rt.batch_spec(3))
         if nc is not None:

@@ -9,16 +9,28 @@ The softmax path is the memory-bounded *query-chunked* jnp implementation —
 oracle for the Pallas flash kernel (``kernels/flash_attention.py``, the TPU
 fast path).
 
-KV caches:
+KV caches (the *cache view* interface — all layouts share one ``_sdpa``):
 * full      — ``(B, S_max, KV, Dh)``, decode writes at ``pos``;
 * ring      — ``(B, W, KV, Dh)`` for sliding-window / chunked-local layers;
   slot ``pos % W`` plus an explicit per-slot absolute-position array, so a
   500k-token decode holds only W entries (this is what makes h2o-danube /
   hymba / llama4-local long-context cells runnable);
-* MLA       — compressed latent ``(B, S_max, kv_lora)`` + shared rope key.
+* MLA       — compressed latent ``(B, S_max, kv_lora)`` + shared rope key;
+* paged     — pools of fixed-size token blocks ``(NB, bs, KV, Dh)`` (keys
+  ``kp``/``vp``; MLA: ``ckvp``/``kpep``) indexed through a per-sequence block
+  table ``view["bt"] (B, MB)`` owned by ``serve/paged_cache.py``.  Cache
+  memory scales with live tokens instead of ``batch x max_seq``.
+
+Cache updates accept ``T >= 1`` tokens per call (chunked prefill): non-ring
+caches write a contiguous span at each row's start position, ring caches
+scatter modulo the window, paged caches scatter through the block table.
 
 Masking is always computed from *absolute* positions (slot positions for ring
-caches), so full/ring/decode paths share one `_sdpa`.
+caches, block-table positions for paged ones), so every layout and decode
+path shares one `_sdpa`.  The paged decode read has two executions: the
+gathered-view ``_sdpa`` (portable truth, bit-identical to the contiguous
+layout) and the Pallas kernel ``kernels/paged_attention.py`` selected with
+``decode_kernel=True`` (the TPU fast path — no materialized gather).
 """
 
 from __future__ import annotations
@@ -171,26 +183,82 @@ def init_attn_cache(
 
 
 def _write_cache(cache: dict, updates: dict, pos: jnp.ndarray, ring: bool) -> dict:
-    """Write one decode step (T=1) into the cache.
+    """Write a ``T``-token update into the cache (``T == 1`` decode, ``T > 1``
+    chunked prefill).
 
-    ``pos`` may be a scalar or a per-row ``(B,)`` vector — the serve engine's
-    continuous batching advances slots at different positions, so writes are
-    vmapped per batch row.
+    ``pos`` may be a scalar or a per-row ``(B,)`` vector of *start* positions
+    — the serve engine's continuous batching advances slots at different
+    positions, so writes are vmapped per batch row.  Non-ring caches take a
+    contiguous ``[pos, pos + T)`` span; ring caches scatter at
+    ``(pos + t) % slots``.
     """
     new = dict(cache)
     B, slots = cache["kpos"].shape
+    T = next(iter(updates.values())).shape[1]
     pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
-    slot = pos_vec % slots if ring else pos_vec
+    abs_pos = pos_vec[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B, T)
 
-    def write_row(c_row, u_row, s):
-        start = (s,) + (0,) * (c_row.ndim - 1)
-        return jax.lax.dynamic_update_slice(c_row, u_row, start)
+    if ring:
+        slot_idx = abs_pos % slots
+        if T > slots:
+            # A chunk longer than the ring maps several tokens to one slot
+            # (t and t + slots).  Scatter order for duplicate indices is
+            # implementation-defined, so drop every write a later token in
+            # this chunk supersedes: only t >= T - slots survive (redirected
+            # out of range otherwise, removed by mode="drop").
+            keep = jnp.arange(T, dtype=jnp.int32) >= T - slots
+            slot_idx = jnp.where(keep[None, :], slot_idx, slots)
 
-    for name, val in updates.items():  # val (B, 1, ...)
-        new[name] = jax.vmap(write_row)(cache[name], val.astype(cache[name].dtype), slot)
-    posu = pos_vec[:, None]
-    new["kpos"] = jax.vmap(write_row)(cache["kpos"], posu, slot)
+        def write_row(c_row, u_row, s):
+            return c_row.at[s].set(u_row, mode="drop")
+
+    else:
+        slot_idx = abs_pos
+
+        def write_row(c_row, u_row, s):
+            start = (s[0],) + (0,) * (c_row.ndim - 1)
+            return jax.lax.dynamic_update_slice(c_row, u_row, start)
+
+    for name, val in updates.items():  # val (B, T, ...)
+        new[name] = jax.vmap(write_row)(cache[name], val.astype(cache[name].dtype), slot_idx)
+    new["kpos"] = jax.vmap(write_row)(cache["kpos"], abs_pos, slot_idx)
     return new
+
+
+# ---------------------------------------------------------------------------
+# Paged cache view: block pools indexed through per-sequence block tables.
+# ---------------------------------------------------------------------------
+
+
+def _paged_write(pool: jnp.ndarray, val: jnp.ndarray, bt: jnp.ndarray, abs_pos: jnp.ndarray) -> jnp.ndarray:
+    """Scatter ``val (B, T, ...)`` into ``pool (NB, bs, ...)`` at the blocks the
+    table assigns: token at absolute position p lands in
+    ``pool[bt[b, p // bs], p % bs]``.  Rows never share live blocks (the
+    allocator hands each sequence its own), so writes cannot collide except in
+    the reserved trash block that dead slots point at."""
+    bs = pool.shape[1]
+    blk = jnp.take_along_axis(bt, abs_pos // bs, axis=1)  # (B, T)
+    off = abs_pos % bs
+    return pool.at[blk, off].set(val.astype(pool.dtype), mode="drop")
+
+
+def _paged_gather(pool: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the per-row contiguous view ``(B, MB * bs, ...)`` of a pool
+    through the block table.  Because the allocator assigns a sequence's
+    blocks in logical order, row b of the result is exactly the contiguous
+    cache lane the non-paged layout would hold — the portable decode path and
+    the oracle for the Pallas paged-attention kernel."""
+    B, MB = bt.shape
+    g = pool[bt]  # (B, MB, bs, ...)
+    return g.reshape(B, MB * pool.shape[1], *pool.shape[2:])
+
+
+def _paged_kpos(positions: jnp.ndarray, S: int) -> jnp.ndarray:
+    """Absolute key positions of the gathered view: ``[0, len)`` valid, -1
+    beyond, where ``len`` = each row's position after this call's write."""
+    new_len = positions[:, -1] + 1  # (B,)
+    ar = jnp.arange(S, dtype=jnp.int32)[None, :]
+    return jnp.where(ar < new_len[:, None], ar, -1)
 
 
 def apply_attention(
@@ -204,12 +272,20 @@ def apply_attention(
     q_chunk: int = 256,
     compute_dtype=jnp.bfloat16,
     mla_absorb: bool = False,
+    view: Optional[dict] = None,
+    decode_kernel: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
-    """Returns (output, updated cache).  ``cache`` given => decode (T == 1)."""
+    """Returns (output, updated cache).  ``cache`` given => cached step over
+    ``T >= 1`` new tokens (decode or chunked prefill).  A paged cache (keys
+    ``kp``/``vp`` or ``ckvp``/``kpep``) additionally needs the block-table
+    ``view``; ``decode_kernel=True`` routes the paged ``T == 1`` read through
+    the Pallas paged-attention kernel instead of the gathered-view ``_sdpa``.
+    """
     if a.kind == "mla":
         return _apply_mla(
             params, x, a, q, positions, cache,
             q_chunk=q_chunk, compute_dtype=compute_dtype, absorb=mla_absorb,
+            view=view,
         )
     B, T, D = x.shape
     H, KV, Dh = a.heads, a.kv_heads, a.head_dim
@@ -228,11 +304,45 @@ def apply_attention(
             causal=a.causal, window=a.window, chunk=a.chunk, q_chunk=q_chunk,
         )
         new_cache = None
+    elif "kp" in cache:  # paged view
+        assert view is not None, "paged attention cache needs a block-table view"
+        bt = view["bt"]
+        new_cache = {
+            "kp": _paged_write(cache["kp"], kh, bt, positions),
+            "vp": _paged_write(cache["vp"], vh, bt, positions),
+        }
+        if decode_kernel and T == 1 and a.causal and a.window is None and a.chunk is None:
+            from repro.kernels import ops
+
+            out = ops.paged_attention(
+                qh[:, 0], new_cache["kp"], new_cache["vp"], bt, positions[:, 0] + 1
+            )[:, None]
+        else:
+            k_all = _paged_gather(new_cache["kp"], bt)
+            v_all = _paged_gather(new_cache["vp"], bt)
+            kpos = _paged_kpos(positions, k_all.shape[1])
+            out = _sdpa(
+                qh, k_all, v_all, positions, kpos,
+                causal=a.causal, window=a.window, chunk=a.chunk, q_chunk=q_chunk,
+            )
     else:
         ring = (a.window or a.chunk) is not None
         new_cache = _write_cache(cache, {"k": kh, "v": vh}, positions[:, 0], ring)
+        if ring and T > 1:
+            # Chunked prefill over a ring: the chunk's own writes overwrite
+            # slots whose keys the chunk's *early* queries still need (any
+            # position in [start - W + T', start) for later offsets T').
+            # Attend the pre-write ring snapshot + the chunk's fresh K/V
+            # instead — absolute-position masking drops stale/out-of-window
+            # entries, and ctx positions (< start) never collide with chunk
+            # positions.
+            k_all = jnp.concatenate([cache["k"], kh.astype(cache["k"].dtype)], axis=1)
+            v_all = jnp.concatenate([cache["v"], vh.astype(cache["v"].dtype)], axis=1)
+            kpos = jnp.concatenate([cache["kpos"], positions], axis=1)
+        else:
+            k_all, v_all, kpos = new_cache["k"], new_cache["v"], new_cache["kpos"]
         out = _sdpa(
-            qh, new_cache["k"], new_cache["v"], positions, new_cache["kpos"],
+            qh, k_all, v_all, positions, kpos,
             causal=a.causal, window=a.window, chunk=a.chunk, q_chunk=q_chunk,
         )
     out = out.reshape(B, T, H * Dh)
@@ -255,6 +365,7 @@ def _apply_mla(
     q_chunk: int,
     compute_dtype,
     absorb: bool,
+    view: Optional[dict] = None,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     B, T, D = x.shape
     H = a.heads
@@ -271,7 +382,17 @@ def _apply_mla(
     kpe = kv_a[..., a.kv_lora_rank :].reshape(B, T, 1, rope)
     kpe = apply_rope(kpe, positions, a.rope_theta or 10000.0).reshape(B, T, rope)
 
-    if cache is not None:
+    if cache is not None and "ckvp" in cache:  # paged latent cache
+        assert view is not None, "paged MLA cache needs a block-table view"
+        bt = view["bt"]
+        cache = {
+            "ckvp": _paged_write(cache["ckvp"], ckv, bt, positions),
+            "kpep": _paged_write(cache["kpep"], kpe, bt, positions),
+        }
+        ckv_all = _paged_gather(cache["ckvp"], bt)
+        kpe_all = _paged_gather(cache["kpep"], bt)
+        kpos = _paged_kpos(positions, ckv_all.shape[1])
+    elif cache is not None:
         cache = _write_cache(cache, {"ckv": ckv, "kpe": kpe}, positions[:, 0], ring=False)
         ckv_all, kpe_all, kpos = cache["ckv"], cache["kpe"], cache["kpos"]
     else:

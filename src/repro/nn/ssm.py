@@ -232,7 +232,12 @@ def apply_rwkv6_timemix(
     *,
     compute_dtype=jnp.bfloat16,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
-    """state = {'S': (B,H,Dk,Dv), 'shift': (B,1,d)} for decode; None = parallel."""
+    """state = {'S': (B,H,Dk,Dv), 'shift': (B,1,d)} for decode; None = parallel.
+
+    With a state, ``T`` may exceed 1 (chunked prefill): the recurrence starts
+    from the carried ``S`` and the updated state reflects all ``T`` steps, so
+    feeding a prompt in chunks is equivalent to feeding it token by token.
+    """
     B, T, D = x.shape
     Dk = ssm.head_dim
     H = D // Dk
@@ -256,9 +261,16 @@ def apply_rwkv6_timemix(
         S0 = jnp.zeros((B, H, Dk, Dk), jnp.float32)
         y, S = rwkv6_chunked(r, k, v, w, u, S0, chunk=ssm.chunk)
         new_state = None
-    else:
+    elif T == 1:
         y1, S = rwkv6_decode_step(r[:, :, 0], k[:, :, 0], v[:, :, 0], w[:, :, 0], u, state["S"])
         y = y1[:, :, None, :]
+        new_state = {"S": S, "shift": new_shift}
+    else:
+        S0 = state["S"].astype(jnp.float32)
+        if T % ssm.chunk == 0:
+            y, S = rwkv6_chunked(r, k, v, w, u, S0, chunk=ssm.chunk)
+        else:
+            y, S = rwkv6_sequential(r, k, v, w, u, S0)
         new_state = {"S": S, "shift": new_shift}
     y = y.transpose(0, 2, 1, 3).reshape(B, T, D)
     # per-head groupnorm then silu(g) gate
@@ -347,9 +359,16 @@ def apply_mamba_heads(
         S0 = jnp.zeros((B, H, Dh, N), jnp.float32)
         y, S = ssd_chunked(xh, a, Bm, Cm, S0, chunk=ssm.chunk)
         new_state = None
-    else:
+    elif T == 1:
         y1, S = ssd_decode_step(xh[:, :, 0], a[:, :, 0], Bm[:, :, 0], Cm[:, :, 0], state["S"])
         y = y1[:, :, None, :]
+        new_state = {"S": S}
+    else:
+        S0 = state["S"].astype(jnp.float32)
+        if T % ssm.chunk == 0:
+            y, S = ssd_chunked(xh, a, Bm, Cm, S0, chunk=ssm.chunk)
+        else:
+            y, S = ssd_sequential(xh, a, Bm, Cm, S0)
         new_state = {"S": S}
     skip = params["D"].astype(jnp.float32)[None, :, None, :] * xh
     y = (y + skip).transpose(0, 2, 1, 3).reshape(B, T, D).astype(compute_dtype)

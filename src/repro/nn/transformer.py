@@ -115,6 +115,8 @@ def _apply_block(
     mesh=None,
     ep_axis: Optional[str] = None,
     mla_absorb: bool = False,
+    view: Optional[dict] = None,
+    decode_kernel: bool = False,
 ):
     q = arch.quant
     cd = jnp.dtype(arch.compute_dtype)
@@ -125,6 +127,7 @@ def _apply_block(
         attn_out, c = apply_attention(
             p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
             q_chunk=arch.attn_q_chunk, compute_dtype=cd, mla_absorb=mla_absorb,
+            view=view, decode_kernel=decode_kernel,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -158,6 +161,7 @@ def _apply_block(
         attn_out, c = apply_attention(
             p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
             q_chunk=arch.attn_q_chunk, compute_dtype=cd,
+            view=view, decode_kernel=decode_kernel,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -230,8 +234,14 @@ def apply_stack(
     mesh=None,
     ep_axis: Optional[str] = None,
     mla_absorb: bool = False,
+    view: Optional[dict] = None,
+    decode_kernel: bool = False,
 ):
-    """Scan ``s.count`` blocks.  Returns (x, new_cache, total_penalty)."""
+    """Scan ``s.count`` blocks.  Returns (x, new_cache, total_penalty).
+
+    ``view`` (the paged block-table, shared by every layer) and
+    ``decode_kernel`` pass straight through to the attention layers.
+    """
 
     def body(carry, layer_in):
         xc = carry
@@ -239,6 +249,7 @@ def apply_stack(
         xn, new_cache, pen = _apply_block(
             layer_params, xc, arch, s, positions, layer_cache,
             mesh=mesh, ep_axis=ep_axis, mla_absorb=mla_absorb,
+            view=view, decode_kernel=decode_kernel,
         )
         return xn, (new_cache, pen)
 

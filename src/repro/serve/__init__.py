@@ -1,1 +1,10 @@
-from repro.serve.engine import ServeEngine, deploy_params  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    PagedServeEngine,
+    Request,
+    ServeEngine,
+    deploy_boxed,
+    deploy_params,
+)
+from repro.serve.paged_cache import PagedKVCache  # noqa: F401
+from repro.serve.sampling import SampleConfig, sample_tokens  # noqa: F401
+from repro.serve.scheduler import Scheduler, ServeRequest  # noqa: F401

@@ -1,19 +1,34 @@
-"""Batched decode engine: continuous batching over KV caches.
+"""Serving engines: continuous batching over contiguous or paged KV caches.
 
-The engine owns a fixed slot layout of ``batch`` concurrent sequences, a
-jitted prefill and a jitted decode step.  Requests are admitted into free
-slots (their prompt prefilled into the cache at slot granularity), every
-engine tick advances all live slots one token, and finished sequences release
-their slot.  Deployment option ``deploy=True`` swaps trained A2Q params for
-int8 weights + per-channel scales — the artifact whose l1 norms provably fit
-the target accumulator (the serving payoff of the paper's guarantee; also the
+Two engines share the scheduler/request machinery (``serve/scheduler.py``):
+
+* :class:`ServeEngine` — the seed engine, kept as the measured baseline: one
+  contiguous ``max_seq`` cache lane per slot, prompts prefilled one token per
+  jit call, logits round-tripped to the host for argmax every tick.
+* :class:`PagedServeEngine` — the serving subsystem: block-table paged KV
+  memory (``serve/paged_cache.py``), chunked one-shot prefill (whole prompt
+  chunks per jit call on an isolated B=1 cache view), on-device sampling
+  (``serve/sampling.py``; the host only ever fetches token ids), and an
+  optional Pallas paged-attention decode kernel (``Runtime(decode_kernel=
+  True)``).  Continuous batching works for recurrent stacks too — per-slot
+  prefill never touches other rows' states — with the scheduler's lockstep
+  mode kept as the conservative equal-length-group fallback.
+
+Deployment option ``deploy_params`` swaps trained A2Q params for int8 weights
++ per-channel scales — the artifact whose l1 norms provably fit the target
+accumulator (the serving payoff of the paper's guarantee; also the
 memory-roofline lever recorded in EXPERIMENTS.md SPerf).
+
+Both engines keep ``stats`` = {prefill_tokens, decode_tokens, prefill_s,
+decode_s} so launchers and benchmarks report prefill and decode throughput
+separately instead of one aggregate tok/s.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +37,11 @@ import numpy as np
 from repro.configs.base import ArchConfig, QuantConfig
 from repro.models.lm import Runtime, apply_lm, init_cache
 from repro.nn.linear import deploy_linear
+from repro.serve.paged_cache import PagedKVCache
+from repro.serve.sampling import SampleConfig, sample_tokens
+from repro.serve.scheduler import Scheduler, ServeRequest
 
-__all__ = ["ServeEngine", "deploy_params"]
+__all__ = ["ServeEngine", "PagedServeEngine", "Request", "deploy_params", "deploy_boxed"]
 
 
 def deploy_params(params: dict, q: QuantConfig) -> dict:
@@ -100,16 +118,47 @@ def deploy_boxed(boxed_tree, q: QuantConfig):
     return walk(boxed_tree)
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (T,) int32
-    max_new: int = 16
-    generated: list = dataclasses.field(default_factory=list)
-    done: bool = False
+# Back-compat alias: the seed engine's request type is the scheduler's.
+Request = ServeRequest
 
 
-class ServeEngine:
+def _normalize_prompt(prompt, bos_id: int) -> np.ndarray:
+    """Empty prompts synthesize a BOS token: the model needs at least one
+    position of context before it can emit logits (the seed engine raised a
+    ``NameError`` here — ``logits`` unbound when the prefill loop never ran)."""
+    arr = np.asarray(prompt, np.int32).reshape(-1)
+    if arr.size == 0:
+        arr = np.asarray([bos_id], np.int32)
+    return arr
+
+
+def _fresh_stats() -> dict:
+    return {"prefill_tokens": 0, "decode_tokens": 0, "prefill_s": 0.0, "decode_s": 0.0}
+
+
+class _StatsMixin:
+    def reset_stats(self) -> None:
+        """Zero the throughput counters (benchmarks call this after a warmup
+        pass so compile time stays out of steady-state numbers)."""
+        self.stats = _fresh_stats()
+
+    def throughput(self) -> dict:
+        """Derived tok/s split — the one place the stats contract turns into
+        reportable numbers (launcher and benchmark both consume this)."""
+        st = self.stats
+        total_s = st["prefill_s"] + st["decode_s"]
+        total_tok = st["prefill_tokens"] + st["decode_tokens"]
+        return {
+            **st,
+            "prefill_tok_s": st["prefill_tokens"] / st["prefill_s"] if st["prefill_s"] > 0 else 0.0,
+            "decode_tok_s": st["decode_tokens"] / st["decode_s"] if st["decode_s"] > 0 else 0.0,
+            "tok_s": total_tok / total_s if total_s > 0 else 0.0,
+        }
+
+
+class ServeEngine(_StatsMixin):
+    """Contiguous-cache baseline: per-token prefill + host-side argmax."""
+
     def __init__(
         self,
         arch: ArchConfig,
@@ -119,6 +168,7 @@ class ServeEngine:
         max_seq: int = 512,
         rt: Optional[Runtime] = None,
         greedy: bool = True,
+        bos_id: int = 0,
     ):
         self.arch = arch
         self.params = params
@@ -126,20 +176,23 @@ class ServeEngine:
         self.max_seq = max_seq
         self.rt = rt or Runtime()
         self.greedy = greedy
+        self.bos_id = bos_id
         self.cache = init_cache(arch, batch, max_seq, dtype=jnp.dtype(arch.compute_dtype))
         self.pos = np.zeros((batch,), np.int32)  # per-slot next position
         self.slots: list[Optional[Request]] = [None] * batch
         # Recurrent mixers (rwkv6/hymba) advance a non-positional state for
         # every row on every call, so slot-at-a-time prefill would pollute
         # other live rows irreversibly.  Those archs run in synchronized-batch
-        # mode: equal-length prompt groups prefilled in lockstep.
+        # mode: equal-length prompt groups prefilled in lockstep.  (The paged
+        # engine lifts this: its prefill runs on an isolated B=1 cache view.)
         self.recurrent = any(s.kind in ("rwkv6", "hymba") for s in arch.stacks)
+        self.stats = _fresh_stats()
         self._decode = jax.jit(self._decode_fn)
 
     # Prefill is implemented as sequential cached steps over the prompt so the
     # slot-granular cache stays consistent under continuous batching (a
-    # batch-wide one-shot prefill would clobber other live slots).  The
-    # one-shot prefill path exists for benchmarking (models/steps.py).
+    # batch-wide one-shot prefill would clobber other live slots).  The paged
+    # engine's chunked prefill replaces this with whole-chunk jit calls.
     def _decode_fn(self, params, tokens, cache, pos):
         logits, new_cache, _ = apply_lm(
             self.params_struct(params), self.arch, tokens=tokens, cache=cache,
@@ -151,6 +204,7 @@ class ServeEngine:
         return params
 
     def admit(self, req: Request) -> bool:
+        req.prompt = _normalize_prompt(req.prompt, self.bos_id)
         for i, s in enumerate(self.slots):
             if s is None:
                 self.slots[i] = req
@@ -162,6 +216,7 @@ class ServeEngine:
         # Feed prompt tokens one at a time into this slot's cache lane.  Other
         # rows receive transient garbage at their *current* position, which
         # their own next real token overwrites before it is ever attended.
+        t0 = time.perf_counter()
         self.pos[slot] = 0
         for t in req.prompt:
             tok = np.zeros((self.batch, 1), np.int32)
@@ -171,6 +226,8 @@ class ServeEngine:
             )
             self.pos[slot] += 1
         req._last_logits = np.asarray(jax.device_get(logits[slot, 0]))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += len(req.prompt)
 
     def tick(self) -> int:
         """Advance every live slot one token; returns number of live slots.
@@ -181,11 +238,14 @@ class ServeEngine:
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return 0
+        t0 = time.perf_counter()
         tok = np.zeros((self.batch, 1), np.int32)
         for i in live:
             req = self.slots[i]
             last = getattr(req, "_last_logits")
             nxt = int(np.argmax(last))
+            if not req.generated:
+                req.first_token_at = time.perf_counter()
             req.generated.append(nxt)
             tok[i, 0] = nxt
         logits, self.cache = self._decode(self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy()))
@@ -196,12 +256,19 @@ class ServeEngine:
             self.pos[i] += 1
             if len(req.generated) >= req.max_new:
                 req.done = True
+                req.finished_at = time.perf_counter()
                 self.slots[i] = None
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_tokens"] += len(live)
         return len(live)
 
-    def generate(self, prompts: list[np.ndarray], max_new: int = 16) -> list[list[int]]:
+    def generate(self, prompts: list, max_new: int = 16) -> list[list[int]]:
         """Convenience batch API: admit all, tick until drained."""
-        reqs = [Request(uid=i, prompt=p, max_new=max_new) for i, p in enumerate(prompts)]
+        reqs = [
+            Request(uid=i, prompt=_normalize_prompt(p, self.bos_id), max_new=max_new,
+                    submitted_at=time.perf_counter())
+            for i, p in enumerate(prompts)
+        ]
         if self.recurrent:
             return self._generate_lockstep(reqs)
         pending = list(reqs)
@@ -217,6 +284,11 @@ class ServeEngine:
         lens = {len(r.prompt) for r in reqs}
         assert len(lens) == 1, "recurrent archs require equal-length prompt groups"
         T = lens.pop()
+        t0 = time.perf_counter()
+        # groups start from an empty engine: drop whatever recurrent S/shift
+        # (and ring kpos) the previous group's drain left in the cache
+        self.cache = init_cache(self.arch, self.batch, self.max_seq,
+                                dtype=jnp.dtype(self.arch.compute_dtype))
         self.pos[:] = 0
         for i, r in enumerate(reqs):
             self.slots[i] = r
@@ -231,6 +303,212 @@ class ServeEngine:
         ln = np.asarray(jax.device_get(logits[:, 0]))
         for i, r in enumerate(reqs):
             r._last_logits = ln[i]
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += T * len(reqs)
         while any(s is not None for s in self.slots):
             self.tick()
+        return [r.generated for r in reqs]
+
+
+class PagedServeEngine(_StatsMixin):
+    """Paged-KV serving engine: scheduler-driven continuous batching, chunked
+    prefill on isolated cache views, on-device sampling.
+
+    ``num_blocks`` bounds KV memory (default: worst case, every slot at
+    ``max_seq``); admission stalls — never crashes — when blocks run out,
+    resuming as finished sequences release theirs.
+    """
+
+    def __init__(
+        self,
+        arch: ArchConfig,
+        params: dict,
+        *,
+        batch: int = 4,
+        max_seq: int = 512,
+        block_size: int = 16,
+        prefill_chunk: int = 32,
+        num_blocks: Optional[int] = None,
+        rt: Optional[Runtime] = None,
+        sample: Optional[SampleConfig] = None,
+        lockstep: Optional[bool] = None,
+        bos_id: int = 0,
+        seed: int = 0,
+    ):
+        self.arch = arch
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.rt = rt or Runtime()
+        self.sample_cfg = sample or SampleConfig()
+        self.bos_id = bos_id
+        self.recurrent = any(s.kind in ("rwkv6", "hymba") for s in arch.stacks)
+        self.cache = PagedKVCache(
+            arch, batch, block_size=block_size, num_blocks=num_blocks,
+            max_seq=max_seq, dtype=jnp.dtype(arch.compute_dtype),
+        )
+        self.sched = Scheduler(
+            batch, prefill_chunk=prefill_chunk,
+            lockstep=bool(lockstep) if lockstep is not None else False,
+        )
+        self._key = jax.random.PRNGKey(seed)
+        self.stats = _fresh_stats()
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(2,))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+
+    def params_struct(self, params):
+        return params
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- jitted steps (sampling fused: only token ids leave the device) -----
+
+    def _prefill_fn(self, params, tokens, pools, bt, start, key):
+        cache = {**pools, "_paged": {"bt": bt}}
+        logits, new_cache, _ = apply_lm(
+            self.params_struct(params), self.arch, tokens=tokens, cache=cache,
+            start_pos=start, rt=self.rt,
+        )
+        tok = sample_tokens(logits[:, -1], self.sample_cfg, key)
+        return tok, new_cache
+
+    def _decode_fn(self, params, tokens, pools, bt, pos, key):
+        cache = {**pools, "_paged": {"bt": bt}}
+        logits, new_cache, _ = apply_lm(
+            self.params_struct(params), self.arch, tokens=tokens, cache=cache,
+            start_pos=pos, rt=self.rt,
+        )
+        tok = sample_tokens(logits[:, 0], self.sample_cfg, key)
+        return tok, new_cache
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.prompt = _normalize_prompt(req.prompt, self.bos_id)
+        total = len(req.prompt) + req.max_new
+        if total > self.max_seq:
+            raise ValueError(f"request needs {total} positions > max_seq={self.max_seq}")
+        if self.cache.blocks_needed(total) > self.cache.num_blocks - 1:
+            raise ValueError("request exceeds the paged cache's total block budget")
+        self.sched.submit(req)
+
+    def _admission_gate(self):
+        """Round-local block budget: each admitted request reserves its
+        worst-case blocks against the same free pool, so a round can never
+        jointly over-commit what ``allocate`` will actually hand out (two
+        requests that fit individually but not together must stall the
+        second, not crash it)."""
+        budget = self.cache.free_blocks
+
+        def can_admit(req: Request) -> bool:
+            nonlocal budget
+            need = self.cache.blocks_needed(len(req.prompt) + req.max_new)
+            if need > budget:
+                return False
+            budget -= need
+            return True
+
+        return can_admit
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Isolated chunked prefill: whole prompt chunks through a B=1 cache
+        view of this slot — other live rows' caches and recurrent states are
+        never touched, so admission composes with continuous batching on
+        every arch (incl. recurrent stacks)."""
+        self.cache.reset_slot(slot)
+        self.cache.allocate(slot, len(req.prompt) + req.max_new)
+        t0 = time.perf_counter()
+        tok = None
+        for chunk, start in self.sched.prefill_plan(slot):
+            sub = self.cache.slice_slot(slot)
+            tok, new_pools = self._prefill(
+                self.params, jnp.asarray(chunk[None, :]), sub,
+                self.cache.bt_row(slot), jnp.int32(start), self._next_key(),
+            )
+            self.cache.merge_slot(slot, new_pools)
+        self.cache.lens[slot] = len(req.prompt)
+        first = int(jax.device_get(tok)[0])
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += len(req.prompt)
+        if self.sched.record_token(slot, first):
+            self.cache.release(slot)
+
+    def _admit_group(self, group: list) -> None:
+        """Lockstep fallback: equal-length group prefilled together in one
+        batched chunked pass (all rows share every position)."""
+        L = len(group[0][1].prompt)
+        assert all(len(r.prompt) == L for _, r in group), "lockstep needs equal lengths"
+        toks = np.zeros((self.batch, L), np.int32)
+        for slot, req in group:
+            self.cache.reset_slot(slot)
+            self.cache.allocate(slot, L + req.max_new)
+            toks[slot] = req.prompt
+            req.prefilled = L
+        t0 = time.perf_counter()
+        tok = None
+        for lo in range(0, L, self.sched.prefill_chunk):
+            hi = min(lo + self.sched.prefill_chunk, L)
+            tok, pools = self._prefill(
+                self.params, jnp.asarray(toks[:, lo:hi]), self.cache.pools,
+                self.cache.bt(), jnp.int32(lo), self._next_key(),
+            )
+            self.cache.pools = pools
+        firsts = np.asarray(jax.device_get(tok))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += L * len(group)
+        for slot, req in group:
+            self.cache.lens[slot] = L
+            if self.sched.record_token(slot, int(firsts[slot])):
+                self.cache.release(slot)
+
+    def tick(self) -> int:
+        """One decode step for every live slot (dead rows ride along writing
+        into the trash block); returns the number of live slots advanced."""
+        live = self.sched.live
+        if not live:
+            return 0
+        tok_in = np.zeros((self.batch,), np.int32)
+        for i in live:
+            tok_in[i] = self.sched.slots[i].last_token
+        t0 = time.perf_counter()
+        toks, pools = self._decode(
+            self.params, jnp.asarray(tok_in[:, None]), self.cache.pools,
+            self.cache.bt(), jnp.asarray(self.cache.lens.copy()), self._next_key(),
+        )
+        self.cache.pools = pools
+        out = np.asarray(jax.device_get(toks))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_tokens"] += len(live)
+        for i in live:
+            self.cache.lens[i] += 1
+            if self.sched.record_token(i, int(out[i])):
+                self.cache.release(i)
+        return len(live)
+
+    def step(self) -> int:
+        """Admit what fits, then advance one decode tick."""
+        admitted = self.sched.admissions(self._admission_gate())
+        if self.sched.lockstep:
+            if admitted:
+                self._admit_group(admitted)
+        else:
+            for slot, req in admitted:
+                self._admit(slot, req)
+        n = self.tick()
+        if n == 0 and not admitted and self.sched.queue:
+            raise RuntimeError("scheduler stalled: queued work but nothing admittable")
+        return n
+
+    def generate(self, prompts: list, max_new: int = 16) -> list[list[int]]:
+        """Convenience batch API: submit all, step until drained."""
+        reqs = [
+            Request(uid=i, prompt=_normalize_prompt(p, self.bos_id), max_new=max_new)
+            for i, p in enumerate(prompts)
+        ]
+        for r in reqs:
+            self.submit(r)
+        while not self.sched.idle():
+            self.step()
         return [r.generated for r in reqs]

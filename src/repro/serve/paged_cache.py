@@ -1,0 +1,247 @@
+"""Paged KV cache: fixed-size token blocks + per-sequence block tables.
+
+Instead of pinning every serve slot to a contiguous ``max_seq`` cache lane
+(``models/lm.init_cache``: memory = ``batch x max_seq`` regardless of load),
+seq-indexed K/V lives in *pools* of ``block_size``-token blocks shared by all
+slots.  A host-side free-list allocator hands each sequence just the blocks
+its tokens need, recorded in a per-slot *block table*; releasing a finished
+sequence returns its blocks immediately.  Cache memory therefore scales with
+live tokens, which is what lets a fixed memory budget admit many more mixed-
+length requests (the vLLM insight, composed here with the A2Q int8 artifact).
+
+Layout per stack (leading dim = layer count, exactly like
+``init_stack_cache``):
+
+* full-attention GQA   — ``kp``/``vp``: ``(count, NB, bs, KV, Dh)`` pools;
+* MLA                  — ``ckvp``/``kpep``: ``(count, NB, bs, rank)`` pools
+  (the compressed latent is seq-indexed and pages the same way);
+* sliding-window / chunked-local — the existing *ring* cache (already bounded
+  by the window, nothing to page) stays per-slot contiguous;
+* recurrent state (rwkv6 / mamba shift + S) — O(1) per slot, per-slot rows.
+
+Block 0 of every pool is the reserved **trash block**: the block tables of
+dead slots point at it, so a full-batch decode step can include dead rows
+(they scatter into trash and attend garbage that is never read).
+
+All layers share one block table — block ``b`` holds the same token span in
+every layer's pool — so the allocator runs once per sequence, not per layer.
+The device-facing view is attached to the cache tree under the reserved key
+``"_paged"`` (consumed by ``models/lm.apply_lm``).
+
+Invariants the allocator maintains:
+* a sequence's blocks appear in its table row in logical order, so the
+  gathered view equals the contiguous layout bit-for-bit;
+* live slots never share a block; unowned table entries stay 0 (trash);
+* ``lens[slot]`` counts tokens written for the slot (its next write position).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, AttnConfig, StackConfig
+from repro.nn.attention import init_attn_cache
+
+__all__ = ["PagedKVCache", "init_paged_stack_cache", "POOL_KEYS", "TRASH_BLOCK"]
+
+# Leaves indexed (count, NB, bs, ...) — everything else is (count, B, ...).
+POOL_KEYS = frozenset({"kp", "vp", "ckvp", "kpep"})
+TRASH_BLOCK = 0
+
+
+def _leaf_name(path) -> Optional[str]:
+    keys = [k.key for k in path if hasattr(k, "key")]
+    return keys[-1] if keys else None
+
+
+def init_paged_attn_cache(
+    a: AttnConfig, slots: int, num_blocks: int, block_size: int, max_seq: int, dtype
+) -> dict:
+    """Paged cache for one attention layer; ring layers keep their bounded
+    per-slot layout (a window-sized ring is already token-proportional)."""
+    if a.kind == "mla":
+        return {
+            "ckvp": jnp.zeros((num_blocks, block_size, a.kv_lora_rank), dtype),
+            "kpep": jnp.zeros((num_blocks, block_size, a.qk_rope_dim), dtype),
+        }
+    if (a.window or a.chunk) is not None:
+        return init_attn_cache(slots, a, max_seq, dtype)
+    return {
+        "kp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), dtype),
+        "vp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), dtype),
+    }
+
+
+def init_paged_stack_cache(
+    arch: ArchConfig, s: StackConfig, slots: int, num_blocks: int, block_size: int,
+    max_seq: int, dtype,
+):
+    """Paged twin of ``nn.transformer.init_stack_cache`` (leading ``count``)."""
+    d = arch.d_model
+
+    def one():
+        if s.kind in ("attn_mlp", "moe"):
+            return {"attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype)}
+        if s.kind == "rwkv6":
+            H = d // s.ssm.head_dim
+            return {
+                "tm": {
+                    "S": jnp.zeros((slots, H, s.ssm.head_dim, s.ssm.head_dim), jnp.float32),
+                    "shift": jnp.zeros((slots, 1, d), dtype),
+                },
+                "cm": {"shift": jnp.zeros((slots, 1, d), dtype)},
+            }
+        if s.kind == "hymba":
+            H = d // s.ssm.head_dim
+            return {
+                "attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype),
+                "mamba": {"S": jnp.zeros((slots, H, s.ssm.head_dim, s.ssm.state_dim), jnp.float32)},
+            }
+        raise ValueError(s.kind)
+
+    cache = one()
+    return jax.tree.map(lambda a_: jnp.broadcast_to(a_[None], (s.count, *a_.shape)), cache)
+
+
+class PagedKVCache:
+    """Device pools + host-side block-table allocator for ``slots`` sequences."""
+
+    def __init__(
+        self,
+        arch: ArchConfig,
+        slots: int,
+        *,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        max_seq: int = 512,
+        dtype=jnp.bfloat16,
+    ):
+        self.arch = arch
+        self.slots = slots
+        self.block_size = block_size
+        self.max_seq = max_seq
+        self.max_blocks_per_seq = -(-max_seq // block_size)
+        if num_blocks is None:
+            # worst case every slot runs to max_seq, plus the trash block
+            num_blocks = slots * self.max_blocks_per_seq + 1
+        if num_blocks < 2:
+            raise ValueError("need at least one non-trash block")
+        self.num_blocks = num_blocks
+        self.pools = {
+            str(i): init_paged_stack_cache(arch, s, slots, num_blocks, block_size, max_seq, dtype)
+            for i, s in enumerate(arch.stacks)
+        }
+        # LIFO free list; low ids handed out first so fresh tables are ordered
+        self.free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        self.tables = np.zeros((slots, self.max_blocks_per_seq), np.int32)
+        self.lens = np.zeros((slots,), np.int32)
+        self._owned: list[list[int]] = [[] for _ in range(slots)]
+        self.peak_blocks = 0  # high-water mark of simultaneously owned blocks
+        self._bt_dev = None  # device copy of tables; invalidated on mutation
+
+    # -- allocator ----------------------------------------------------------
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self.free)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.blocks_needed(n_tokens) <= len(self.free)
+
+    def allocate(self, slot: int, n_tokens: int) -> None:
+        """Grow ``slot``'s table to cover ``n_tokens`` total tokens."""
+        need = self.blocks_needed(n_tokens)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens exceeds max_seq={self.max_seq}"
+            )
+        owned = self._owned[slot]
+        while len(owned) < need:
+            if not self.free:
+                raise RuntimeError("paged KV cache out of blocks")
+            b = self.free.pop()
+            self.tables[slot, len(owned)] = b
+            owned.append(b)
+            self._bt_dev = None
+        self.peak_blocks = max(self.peak_blocks, self.allocated_blocks())
+
+    def release(self, slot: int) -> None:
+        self.free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.tables[slot] = TRASH_BLOCK
+        self.lens[slot] = 0
+        self._bt_dev = None
+
+    def live_tokens(self) -> int:
+        return int(self.lens.sum())
+
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - 1 - len(self.free)
+
+    # -- per-slot state (recurrent / ring leaves) ---------------------------
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero ``slot``'s rows of every per-slot (non-pool) leaf, so a fresh
+        sequence starts from empty ring (``kpos = -1``) and zero recurrent
+        state regardless of what the slot's previous occupant left behind."""
+
+        def one(path, leaf):
+            name = _leaf_name(path)
+            if name in POOL_KEYS:
+                return leaf
+            return leaf.at[:, slot].set(-1 if name == "kpos" else 0)
+
+        self.pools = jax.tree_util.tree_map_with_path(one, self.pools)
+
+    def slice_slot(self, slot: int) -> dict:
+        """B=1 cache view for an isolated per-slot prefill: pools whole (the
+        slot's blocks live there), per-slot leaves sliced to the single row.
+        Pair with ``bt_row(slot)`` for the matching block-table view."""
+
+        def one(path, leaf):
+            if _leaf_name(path) in POOL_KEYS:
+                return leaf
+            return leaf[:, slot : slot + 1]
+
+        return jax.tree_util.tree_map_with_path(one, self.pools)
+
+    def merge_slot(self, slot: int, new_pools: dict) -> None:
+        """Fold a B=1 prefill result back: pool leaves replace wholesale,
+        per-slot leaves write their single row into ``slot``."""
+
+        def one(path, old, new):
+            if _leaf_name(path) in POOL_KEYS:
+                return new
+            if old.shape[1] == new.shape[1]:
+                # single-slot engine: the B=1 "slice" was the whole leaf (jax
+                # returns the original buffer for full slices, which the jit
+                # call then donated) — the result replaces it wholesale
+                return new
+            return old.at[:, slot].set(new[:, 0])
+
+        self.pools = jax.tree_util.tree_map_with_path(one, self.pools, new_pools)
+
+    # -- device view --------------------------------------------------------
+
+    def bt(self) -> jnp.ndarray:
+        """Full block table ``(slots, MB)`` as a device array.  Tables only
+        change at allocate/release, so the decode loop's per-tick call reuses
+        one upload between admissions."""
+        if self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self.tables)
+        return self._bt_dev
+
+    def bt_row(self, slot: int) -> jnp.ndarray:
+        """Single-row block-table view ``(1, MB)`` matching ``slice_slot``."""
+        return jnp.asarray(self.tables[slot : slot + 1])
+
+    def attach(self) -> dict:
+        """Full-batch cache tree for ``apply_lm``: pools + block-table view."""
+        return {**self.pools, "_paged": {"bt": self.bt()}}

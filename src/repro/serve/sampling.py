@@ -1,0 +1,53 @@
+"""On-device token sampling for the serve engines.
+
+The seed engine round-tripped full ``(B, V)`` logits to the host and ran
+``np.argmax`` every tick.  Here sampling runs *inside* the jitted decode /
+prefill step: the step returns ``(B,)`` int32 token ids, the host fetches a
+few bytes of ids for bookkeeping, and the sampled tokens feed straight back
+into the next step without ever materializing logits off-device.
+
+``SampleConfig`` is a frozen (hashable) dataclass so a jitted step closing
+over it re-traces only when the sampling mode actually changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SampleConfig", "sample_tokens"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleConfig:
+    """``greedy`` (argmax), ``temperature`` (softmax sampling), or ``topk``
+    (mask to the ``top_k`` highest logits, then temperature-sample)."""
+
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.method not in ("greedy", "temperature", "topk"):
+            raise ValueError(f"unknown sampling method {self.method!r}")
+        if self.method == "topk" and self.top_k <= 0:
+            raise ValueError("topk sampling needs top_k > 0")
+
+
+def sample_tokens(logits: jnp.ndarray, cfg: SampleConfig, key) -> jnp.ndarray:
+    """``(..., V)`` logits -> ``(...,)`` int32 token ids, fully on device.
+
+    Greedy ignores ``key`` (deterministic argmax, first-index tie-break —
+    identical to ``np.argmax`` on the same logits, which is what the
+    paged-vs-contiguous parity gates rely on).
+    """
+    lf = logits.astype(jnp.float32)
+    if cfg.method == "greedy":
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    if cfg.method == "topk":
+        vals = jax.lax.top_k(lf, cfg.top_k)[0]
+        lf = jnp.where(lf < vals[..., -1:], -jnp.inf, lf)
+    t = max(cfg.temperature, 1e-6)
+    return jax.random.categorical(key, lf / t, axis=-1).astype(jnp.int32)

@@ -1,0 +1,144 @@
+"""Serving scheduler: admission queue, chunked prefill plans, slot recycling.
+
+Pure host-side policy — no jax in here.  The engine owns execution (jitted
+prefill / decode steps, the paged cache); the scheduler owns *which* request
+occupies *which* slot *when*:
+
+* **continuous mode** (default): any freed slot is immediately refilled from
+  the FIFO queue, so long requests never stall short ones behind them.
+  Prefill is per-slot and isolated (the engine runs it on a B=1 cache view),
+  which is also what makes continuous batching sound for recurrent stacks —
+  admitting into a live batch never touches other rows' states.
+* **lockstep mode** (the conservative fallback for recurrent stacks, and the
+  batched-prefill fast path): requests are admitted in equal-prompt-length
+  groups into an *empty* engine, prefilled together in one batched chunked
+  pass, and decoded until the whole group drains.
+
+Requests also carry their latency bookkeeping (submit / first-token / finish
+timestamps) so the benchmark derives p50/p99 without instrumenting engines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ServeRequest", "Scheduler"]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    uid: int
+    prompt: np.ndarray  # (T,) int32, non-empty (engine normalizes)
+    max_new: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    prefilled: int = 0  # prompt tokens already in the cache
+    last_token: int = -1  # most recent sampled token (next decode input)
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.submitted_at
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, *, prefill_chunk: int = 32, lockstep: bool = False):
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.n_slots = n_slots
+        self.prefill_chunk = prefill_chunk
+        self.lockstep = lockstep
+        self.queue: deque[ServeRequest] = deque()
+        self.slots: List[Optional[ServeRequest]] = [None] * n_slots
+
+    # -- state --------------------------------------------------------------
+
+    @property
+    def live(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def idle(self) -> bool:
+        return not self.queue and not self.live
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> None:
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def admissions(self, can_admit: Callable[[ServeRequest], bool]) -> List[Tuple[int, "ServeRequest"]]:
+        """Assign queued requests to slots; returns the new (slot, request)
+        pairs.  ``can_admit`` gates on engine capacity (free KV blocks).
+
+        FIFO is strict: if the head of the queue does not fit, nothing behind
+        it is admitted either (no starvation of large requests).
+        """
+        if self.lockstep:
+            return self._admit_lockstep(can_admit)
+        out = []
+        free = (i for i, r in enumerate(self.slots) if r is None)
+        for slot in free:
+            if not self.queue or not can_admit(self.queue[0]):
+                break
+            req = self.queue.popleft()
+            self.slots[slot] = req
+            out.append((slot, req))
+        return out
+
+    def _admit_lockstep(self, can_admit) -> List[Tuple[int, "ServeRequest"]]:
+        """Equal-length group into an empty engine (recurrent-stack fallback:
+        every row advances through identical positions, so a batched prefill
+        never desynchronizes the non-positional states)."""
+        if self.live or not self.queue:
+            return []
+        group_len = len(self.queue[0].prompt)
+        out = []
+        for slot in range(self.n_slots):
+            if not self.queue or len(self.queue[0].prompt) != group_len:
+                break
+            if not can_admit(self.queue[0]):
+                break
+            req = self.queue.popleft()
+            self.slots[slot] = req
+            out.append((slot, req))
+        return out
+
+    # -- prefill ------------------------------------------------------------
+
+    def prefill_plan(self, slot: int) -> Iterator[Tuple[np.ndarray, int]]:
+        """Yield ``(tokens, start)`` chunks remaining for this slot's prompt;
+        consuming a chunk marks it prefilled."""
+        req = self.slots[slot]
+        while req.prefilled < len(req.prompt):
+            lo = req.prefilled
+            hi = min(lo + self.prefill_chunk, len(req.prompt))
+            req.prefilled = hi
+            yield req.prompt[lo:hi], lo
+
+    # -- decode bookkeeping -------------------------------------------------
+
+    def record_token(self, slot: int, token: int) -> bool:
+        """Append a sampled token; returns True (and frees the slot) when the
+        request just completed.  The engine releases cache blocks on True."""
+        req = self.slots[slot]
+        if not req.generated:
+            req.first_token_at = time.perf_counter()
+        req.generated.append(token)
+        req.last_token = token
+        if len(req.generated) >= req.max_new:
+            req.done = True
+            req.finished_at = time.perf_counter()
+            self.slots[slot] = None
+            return True
+        return False

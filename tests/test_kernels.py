@@ -121,6 +121,68 @@ def test_flash_attention_dtypes(dtype):
 
 
 # ---------------------------------------------------------------------------
+# paged attention (decode through block tables)
+# ---------------------------------------------------------------------------
+
+
+def _paged_setup(B, KV, Dh, NB, bs, MB, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    kp = jnp.asarray(rng.normal(size=(NB, bs, KV, Dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(NB, bs, KV, Dh)), jnp.float32)
+    bt = np.zeros((B, MB), np.int32)
+    nxt = 1  # block 0 = trash
+    for b, ln in enumerate(lens):
+        for j in range(-(-ln // bs)):
+            bt[b, j] = nxt
+            nxt += 1
+    assert nxt <= NB
+    return kp, vp, jnp.asarray(bt), jnp.asarray(np.asarray(lens, np.int32))
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (6, 1)])  # MHA, GQA, MQA
+def test_paged_attention_matches_ref(H, KV):
+    B, Dh, NB, bs, MB = 3, 32, 16, 8, 4
+    lens = [19, 1, 32]
+    kp, vp, bt, ln = _paged_setup(B, KV, Dh, NB, bs, MB, lens)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kp, vp, bt, ln)
+    want = ref.ref_paged_attention(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_matches_contiguous_flash_ref():
+    """A fully-packed paged layout is plain causal decode: the kernel must
+    agree with the dense attention oracle on the gathered view."""
+    B, H, Dh, bs, MB = 2, 4, 16, 4, 3
+    L = bs * MB
+    kp, vp, bt, ln = _paged_setup(B, H, Dh, 1 + B * MB, bs, MB, [L, L], seed=3)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kp, vp, bt, ln)
+    k = np.asarray(kp)[np.asarray(bt)].reshape(B, L, H, Dh).transpose(0, 2, 1, 3)
+    v = np.asarray(vp)[np.asarray(bt)].reshape(B, L, H, Dh).transpose(0, 2, 1, 3)
+    want = ref.ref_flash_attention(
+        jnp.asarray(q)[:, :, None, :], jnp.asarray(k), jnp.asarray(v), causal=True
+    )[:, :, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_ignores_trash_entries():
+    """Table entries past a row's length may point at any block (dead slots
+    point at trash): they must not leak into the output."""
+    B, H, Dh, NB, bs, MB = 2, 2, 16, 8, 4, 4
+    kp, vp, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [6, 6], seed=4)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    base = np.asarray(ops.paged_attention(q, kp, vp, bt, ln))
+    bt2 = np.asarray(bt).copy()
+    bt2[:, 2:] = 7  # garbage beyond the 6-token prefix
+    redirected = np.asarray(ops.paged_attention(q, kp, vp, jnp.asarray(bt2), ln))
+    np.testing.assert_array_equal(base, redirected)
+    # zero-length rows produce zeros, not NaNs
+    z = np.asarray(ops.paged_attention(q, kp, vp, bt, jnp.asarray([0, 6], jnp.int32)))
+    assert np.isfinite(z).all() and np.abs(z[0]).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
 # rwkv6 scan
 # ---------------------------------------------------------------------------
 

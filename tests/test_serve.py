@@ -60,6 +60,29 @@ def test_recurrent_arch_lockstep_generation():
     assert all(len(o) == 3 for o in outs)
 
 
+def test_empty_prompt_synthesizes_bos():
+    """Regression: admitting a zero-length prompt raised NameError (``logits``
+    unbound in ``_prefill_slot``); admit now synthesizes a BOS token."""
+    arch = reduced(get_arch("yi-6b"))
+    params = unbox(init_lm(KEY, arch))
+    engine = ServeEngine(arch, params, batch=2, max_seq=32)
+    outs = engine.generate([np.zeros((0,), np.int32), np.arange(3, dtype=np.int32)], max_new=2)
+    assert all(len(o) == 2 for o in outs)
+    assert outs[0] == _greedy_reference(arch, params, [engine.bos_id], 2)
+
+
+def test_engine_stats_split_prefill_vs_decode():
+    arch = reduced(get_arch("yi-6b"))
+    params = unbox(init_lm(KEY, arch))
+    engine = ServeEngine(arch, params, batch=2, max_seq=32)
+    engine.generate([np.arange(5, dtype=np.int32)], max_new=3)
+    assert engine.stats["prefill_tokens"] == 5
+    assert engine.stats["decode_tokens"] == 3
+    assert engine.stats["prefill_s"] > 0 and engine.stats["decode_s"] > 0
+    engine.reset_stats()
+    assert engine.stats["prefill_tokens"] == 0
+
+
 def test_deploy_int8_weights_respect_budget_and_serve():
     arch = reduced(get_arch("yi-6b"))
     q = arch.quant

@@ -339,6 +339,38 @@ def test_cache_specs_kv_heads_sharding():
     assert s_spec[2] == "model"
 
 
+def test_cache_specs_paged_layout():
+    """Paged pools: block axis local (any row may own any block), head dim
+    keeps the TP sharding of the projections that fill it; MLA latent pools
+    replicate; the block table rides with the batch axes."""
+    from repro.serve.paged_cache import init_paged_stack_cache
+
+    mesh = _FakeMesh({"data": 2, "model": 4})
+    arch = get_arch("yi-6b")
+    rules = ShardingRules.default(mesh, arch)
+    cache = jax.eval_shape(
+        lambda: {
+            "0": init_paged_stack_cache(arch, arch.stacks[0], 8, 32, 16, 64, jnp.bfloat16),
+            "_paged": {"bt": jnp.zeros((8, 4), jnp.int32)},
+        }
+    )
+    specs = cache_specs(cache, mesh, rules)
+    # (layers, NB, bs, kv_heads, head_dim): only the head dim shards
+    assert specs["0"]["attn"]["kp"] == P(None, None, None, "model", None)
+    assert specs["0"]["attn"]["vp"] == P(None, None, None, "model", None)
+    assert specs["_paged"]["bt"] == P("data", None)
+
+    ds = get_arch("deepseek-v3-671b")
+    rules_ds = ShardingRules.default(mesh, ds)
+    mla = next(s for s in ds.stacks if s.attn is not None and s.attn.kind == "mla")
+    cache_ds = jax.eval_shape(
+        lambda: {"0": init_paged_stack_cache(ds, mla, 8, 32, 16, 64, jnp.bfloat16)}
+    )
+    specs_ds = cache_specs(cache_ds, mesh, rules_ds)
+    assert specs_ds["0"]["attn"]["ckvp"] == P(None, None, None, None)
+    assert specs_ds["0"]["attn"]["kpep"] == P(None, None, None, None)
+
+
 def test_make_state_specs_and_init_grad_err_layout():
     """grad_err residual pair: local = P(axis, param-spec minus axis);
     server = param layout with the ownership dim on the axis; shapes from
