@@ -13,11 +13,17 @@ Prints each module's CSV, then a claims summary asserting the paper's
          QAT can reach, and dominates it.
   Fig 5: sparsity rises monotonically as P falls.
   Fig 6: LUT ordering fixed32 >= dtype-bound >= PTM; A2Q dominates.
+
+``--json [PATH]`` additionally writes a ``BENCH_<date>.json`` perf snapshot
+(serve throughput/latency percentiles, kernel VMEM claims + oracle flags, KV
+bytes-per-token fp32 vs int8, the claims table) so the perf trajectory of the
+repo is recorded PR over PR; CI uploads it as a build artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import sys
 import time
@@ -27,6 +33,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="fewer training steps")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--json", nargs="?", const="auto", default=None,
+                    help="write a BENCH_<date>.json perf snapshot (optionally to PATH)")
     args = ap.parse_args(argv)
     steps = 25 if args.fast else 40
     fig2_steps = 40 if args.fast else 60
@@ -79,6 +87,8 @@ def main(argv=None):
     results["serve"] = serve_bench.run(requests=4 if args.fast else 8)
 
     claims = {
+        "serve_int8_kv_bytes_3x_plus": results["serve"]["kv_bytes_ratio"] >= 3.0,
+        "kernel_oracles_ok": results["kernels"]["all_ok"],
         "fig2_wrap_collapses": results["fig2"]["wrap_collapses"],
         "fig2_a2q_holds_accuracy": results["fig2"]["a2q_holds"],
         "fig2_a2q_beats_wrap_at_low_P": results["fig2"]["a2q_beats_wrap_at_low_P"],
@@ -104,6 +114,22 @@ def main(argv=None):
         slim = {k: {kk: vv for kk, vv in v.items() if kk != "rows"} for k, v in results.items()}
         with open(args.json_out, "w") as f:
             json.dump({"claims": claims, "results": slim}, f, indent=1, default=str)
+    if args.json:
+        date = datetime.date.today().isoformat()
+        path = f"BENCH_{date}.json" if args.json == "auto" else args.json
+        snapshot = {
+            "date": date,
+            "fast": args.fast,
+            "wall_s": round(time.time() - t0, 1),
+            # the perf trajectory: serve throughput/latency + KV bytes/token
+            # (fp32 vs int8 blocks) and the kernel VMEM/oracle rows
+            "serve": results["serve"],
+            "kernels": results["kernels"]["rows"],
+            "claims": claims,
+        }
+        with open(path, "w") as f:
+            json.dump(snapshot, f, indent=1, default=str)
+        print(f"wrote perf snapshot {path}")
     if failed:
         print(f"FAILED claims: {failed}", file=sys.stderr)
         return 1

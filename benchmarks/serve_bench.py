@@ -1,12 +1,15 @@
 """Serving benchmark: contiguous per-token-prefill baseline vs the paged
-engine on a mixed-length workload.
+engine (fp32 and int8 KV blocks) on a mixed-length workload.
 
 Reports continuous-batching throughput (tok/s, split prefill vs decode) and
-per-request end-to-end latency p50/p99 for both engines, plus the paged
+per-request end-to-end latency p50/p99 for all three engines, the paged
 engine's peak KV block usage vs the contiguous engine's fixed
-``batch x max_seq`` footprint.  Prints a CSV like the other ``benchmarks/``
-modules and returns a headline dict (``run.py``-aggregatable); ``--json``
-writes the same dict to disk.
+``batch x max_seq`` footprint, and the KV bytes-per-token the int8 block
+pools save (~4x: int8 codes + one fp32 scale per head-slot vs fp32 values).
+The int8 engine's greedy tokens are held to the parity bound (token-identical
+up to sub-margin quantization ties — see ``launch/serve.py``).  Prints a CSV
+like the other ``benchmarks/`` modules and returns a headline dict
+(``run.py``-aggregatable); ``--json`` writes the same dict to disk.
 
 Wall-clock on CPU/interpret is not TPU-meaningful in absolute terms, but the
 *relative* contiguous-vs-paged comparison is structural: the baseline spends
@@ -25,7 +28,7 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.models.lm import init_lm
 from repro.nn.module import unbox
-from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine, parity_up_to_ties
 
 
 def _percentiles(reqs) -> dict:
@@ -107,32 +110,57 @@ def run(
         arch, params, batch=batch, max_seq=max_seq,
         block_size=block_size, prefill_chunk=prefill_chunk, num_blocks=num_blocks,
     )
+    paged_q8 = PagedServeEngine(
+        arch, params, batch=batch, max_seq=max_seq,
+        block_size=block_size, prefill_chunk=prefill_chunk, num_blocks=num_blocks,
+        kv_quant=True,
+    )
     # Warmup pass covers every jit shape (the paged engine compiles one
     # prefill per distinct chunk length), so the timed pass measures
     # steady-state serving throughput rather than XLA compile time.
     _drive_contiguous(contig, workload())
     _drive_paged(paged, workload())
-    contig.reset_stats()
-    paged.reset_stats()
+    _drive_paged(paged_q8, workload())
+    for e in (contig, paged, paged_q8):
+        e.reset_stats()
     paged.cache.peak_blocks = 0
+    paged_q8.cache.peak_blocks = 0
 
-    reqs_c, reqs_p = workload(), workload()
+    reqs_c, reqs_p, reqs_q = workload(), workload(), workload()
     _drive_contiguous(contig, reqs_c)
     _drive_paged(paged, reqs_p)
+    _drive_paged(paged_q8, reqs_q)
 
     assert [r.generated for r in reqs_c] == [r.generated for r in reqs_p], \
         "engines diverged on the benchmark workload"
+    # int8 KV is lossy: hold it to the parity bound instead of bit equality
+    ok, ties, detail = parity_up_to_ties(
+        reqs_p, [r.generated for r in reqs_q], eps=0.05
+    )
+    assert ok, f"int8-KV engine broke the parity bound: {detail}"
 
     out = {
         "arch": arch_name,
         "requests": requests,
         "contiguous": _stats_row(contig, reqs_c),
         "paged": _stats_row(paged, reqs_p),
+        "paged_int8_kv": _stats_row(paged_q8, reqs_q),
         # fixed lanes vs token-proportional blocks (same dtype, so the slot
         # count ratio is the memory ratio for the seq-indexed leaves)
         "contiguous_cache_slots": batch * max_seq,
         "paged_peak_block_tokens": paged.cache.peak_blocks * paged.cache.block_size,
+        # the int8-KV headline: HBM bytes one cached token costs, summed over
+        # every seq-indexed pool (codes + scales), fp32 blocks vs int8 blocks
+        "kv_bytes_per_token_fp32": paged.cache.kv_bytes_per_token(),
+        "kv_bytes_per_token_int8": paged_q8.cache.kv_bytes_per_token(),
+        "int8_kv_sub_margin_ties": ties,
     }
+    # recurrent archs (rwkv6) have no seq-indexed pools at all — nothing to
+    # quantize, both byte counts are 0, ratio is the identity
+    out["kv_bytes_ratio"] = (
+        out["kv_bytes_per_token_fp32"] / out["kv_bytes_per_token_int8"]
+        if out["kv_bytes_per_token_int8"] > 0 else 1.0
+    )
     out["prefill_speedup"] = (
         out["paged"]["prefill_tok_s"] / out["contiguous"]["prefill_tok_s"]
         if out["contiguous"]["prefill_tok_s"] > 0 else float("inf")
@@ -141,14 +169,24 @@ def run(
         out["paged"]["tok_s"] / out["contiguous"]["tok_s"]
         if out["contiguous"]["tok_s"] > 0 else float("inf")
     )
+    # steady-state decode throughput of int8 blocks vs fp32 blocks: on TPU
+    # this is the ~4x-bandwidth win; on CPU/interpret it only proves the
+    # quantize/dequant work does not sink the decode path
+    out["int8_kv_decode_ratio"] = (
+        out["paged_int8_kv"]["decode_tok_s"] / out["paged"]["decode_tok_s"]
+        if out["paged"]["decode_tok_s"] > 0 else float("inf")
+    )
 
     print("engine,tok_s,prefill_tok_s,decode_tok_s,latency_p50_s,latency_p99_s")
-    for name in ("contiguous", "paged"):
+    for name in ("contiguous", "paged", "paged_int8_kv"):
         r = out[name]
         print(f"{name},{r['tok_s']:.1f},{r['prefill_tok_s']:.1f},{r['decode_tok_s']:.1f},"
               f"{r['latency_p50_s']:.3f},{r['latency_p99_s']:.3f}")
     print(f"prefill_speedup,{out['prefill_speedup']:.2f},throughput_speedup,"
           f"{out['throughput_speedup']:.2f}")
+    print(f"kv_bytes_per_token,{out['kv_bytes_per_token_fp32']}B fp32,"
+          f"{out['kv_bytes_per_token_int8']}B int8,ratio {out['kv_bytes_ratio']:.2f}x,"
+          f"decode_ratio {out['int8_kv_decode_ratio']:.2f}")
     return out
 
 

@@ -279,10 +279,16 @@ def owner_dim(pspec, ndim: int, axis: str) -> int:
     device ends up with exactly its gradient slice).  Otherwise the first
     dim that claims no other mesh axis — a TP-sharded dim (e.g. ``vocab``
     over ``model`` on the embedding table) keeps its sharding on the wire
-    and only ``1/tp``-th of the payload crosses each link."""
+    and only ``1/tp``-th of the payload crosses each link.
+
+    A dim counts as the FSDP dim whether the spec spells it bare
+    (``P("data", ...)``) or inside a multi-axis tuple (``P(("pod", "data"),
+    ...)`` — the multi-pod batch layout): missing the tuple form used to
+    push ownership onto a free dim and cost an extra all-gather on the wire
+    for every FSDP leaf of a multi-pod mesh."""
     entries = (list(pspec or ()) + [None] * ndim)[:ndim]
     for i, e in enumerate(entries):
-        if e == axis or e == (axis,):
+        if e == axis or (isinstance(e, tuple) and axis in e):
             return i
     for i, e in enumerate(entries):
         if e is None:

@@ -210,6 +210,13 @@ def cache_specs(cache_tree, mesh, rules: ShardingRules):
     sharding as the projections that fill it.  MLA latent pools
     ``ckvp``/``kpep`` and the block table ``bt (slots, max_blocks)`` carry no
     shardable parameter dim at all (the table rides with the batch).
+
+    int8 pools (``kv_quant``) change dtype, not layout — the same specs
+    apply — and add per-slot fp32 scale pools: GQA ``kps``/``vps``
+    ``(layers, NB, bs, kv_heads)`` shard their trailing head dim over
+    ``model`` exactly like the code pools they scale (a TP shard must hold
+    the scales for its own heads); MLA ``ckvs``/``kpes`` ``(layers, NB, bs)``
+    carry nothing shardable and replicate.
     """
 
     def one(path, leaf):
@@ -219,9 +226,11 @@ def cache_specs(cache_tree, mesh, rules: ShardingRules):
         name = keys[-1] if keys else None
         if name == "bt":
             return resolve_pspec(("batch",) + (None,) * (leaf.ndim - 1), leaf.shape, mesh, rules)
-        if name in ("kp", "vp", "ckvp", "kpep"):
+        if name in ("kp", "vp", "ckvp", "kpep", "kps", "vps", "ckvs", "kpes"):
             dims = ["layers"] + [None] * (leaf.ndim - 1)
             if name in ("kp", "vp") and leaf.ndim == 5:
+                dims[3] = "kv_heads"
+            elif name in ("kps", "vps") and leaf.ndim == 4:
                 dims[3] = "kv_heads"
             return resolve_pspec(tuple(dims), leaf.shape, mesh, rules)
         dims = ["layers", "batch"] + [None] * (leaf.ndim - 2)

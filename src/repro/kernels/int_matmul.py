@@ -18,6 +18,15 @@ partial sum fits ``P`` bits unlocks:
 Grid: ``(M/bm, N/bn, K/bk)`` with K innermost (sequential on TPU); the
 accumulator lives in VMEM scratch across K steps.  Per-tile dots use the MXU
 via ``jax.lax.dot_general(..., preferred_element_type=int32)``.
+
+Fused epilogue (the W8A8 serve path): with ``scale`` (one fp32 scalar per
+output column — the per-channel weight scale ``s8`` with the activation scale
+already folded in) and optionally ``bias``, the final K step rescales the
+int32 accumulator in VMEM and writes the floating-point output directly:
+``out = acc * scale + bias``.  The deployed layer then runs
+``act_quant(x) -> int8 @ int8 -> int32 -> scaled fp`` in ONE ``pallas_call``
+instead of dequantizing ``q8`` to fp32 and paying a bf16 matmul — the int32
+accumulator never round-trips through HBM.
 """
 
 from __future__ import annotations
@@ -51,14 +60,22 @@ def _saturate_bits_i32(v: jnp.ndarray, bits: int) -> jnp.ndarray:
 def int_matmul_kernel(
     x_ref,
     w_ref,
-    o_ref,
-    acc_ref,
-    *,
+    *rest,
     k_steps: int,
     acc_bits: int,
     mode: str,
+    fused: bool,
+    has_bias: bool,
 ):
-    """Kernel body. acc_ref dtype is int32 or int16 (the spill path)."""
+    """Kernel body. acc_ref dtype is int32 or int16 (the spill path).
+
+    ``rest`` is ``(scale_ref[, bias_ref], o_ref, acc_ref)`` when ``fused``
+    else ``(o_ref, acc_ref)`` — operands precede outputs precede scratch.
+    """
+    if fused:
+        scale_ref = rest[0]
+        bias_ref = rest[1] if has_bias else None
+    o_ref, acc_ref = rest[-2:]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -85,12 +102,21 @@ def int_matmul_kernel(
 
     @pl.when(k == k_steps - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(jnp.int32)
+        acc = acc_ref[...].astype(jnp.int32)
+        if fused:
+            out = acc.astype(jnp.float32) * scale_ref[...]
+            if has_bias:
+                out = out + bias_ref[...]
+            o_ref[...] = out.astype(o_ref.dtype)
+        else:
+            o_ref[...] = acc
 
 
 def int_matmul_pallas(
     x: jnp.ndarray,
     w: jnp.ndarray,
+    scale: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
     *,
     acc_bits: int = 32,
     mode: str = "exact",
@@ -98,6 +124,7 @@ def int_matmul_pallas(
     block_n: int = 128,
     block_k: int = 512,
     spill_dtype: Optional[jnp.dtype] = None,
+    out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Tiled integer matmul.  Inputs must already be padded to block multiples
@@ -105,6 +132,10 @@ def int_matmul_pallas(
 
     ``spill_dtype=jnp.int16`` requires ``acc_bits <= 16`` — the A2Q guarantee
     is what makes the narrow carry lossless.
+
+    ``scale``/``bias`` (``(1, N)`` fp32) enable the fused epilogue: the output
+    is ``acc * scale (+ bias)`` in ``out_dtype`` instead of raw int32.
+    ``bias`` requires ``scale``.
     """
     M, K = x.shape
     K2, N = w.shape
@@ -116,21 +147,33 @@ def int_matmul_pallas(
         spill_dtype = jnp.int32
     if jnp.dtype(spill_dtype) == jnp.dtype(jnp.int16) and acc_bits > 16:
         raise ValueError("int16 partial-sum spill is only sound when acc_bits <= 16 (A2Q bound)")
+    fused = scale is not None
+    if bias is not None and not fused:
+        raise ValueError("fused bias requires an epilogue scale")
 
     k_steps = K // block_k
     grid = (M // block_m, N // block_n, k_steps)
     kernel = functools.partial(
-        int_matmul_kernel, k_steps=k_steps, acc_bits=acc_bits, mode=mode
+        int_matmul_kernel, k_steps=k_steps, acc_bits=acc_bits, mode=mode,
+        fused=fused, has_bias=bias is not None,
     )
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, w]
+    if fused:
+        epilogue_spec = pl.BlockSpec((1, block_n), lambda i, j, k: (0, j))
+        for arr in (scale, bias) if bias is not None else (scale,):
+            assert arr.shape == (1, N), (arr.shape, N)
+            in_specs.append(epilogue_spec)
+            operands.append(arr.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype if fused else jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), spill_dtype)],
         interpret=interpret,
-    )(x, w)
+    )(*operands)

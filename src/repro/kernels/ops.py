@@ -50,6 +50,9 @@ def int_matmul(
     *,
     acc_bits: int = 32,
     mode: str = "exact",
+    scale: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    out_dtype=jnp.float32,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 512,
@@ -58,23 +61,41 @@ def int_matmul(
 ) -> jnp.ndarray:
     """int8 x int8 -> int32 matmul ``(M, K) @ (K, N)`` with P-bit accumulator
     emulation.  Zero padding is sound for all modes (adding zero then wrapping
-    or saturating an in-range value is the identity)."""
+    or saturating an in-range value is the identity).
+
+    ``scale`` (scalar or per-column ``(N,)`` fp32 — e.g. the deployed layer's
+    ``s8`` with the activation scale folded in) engages the fused epilogue:
+    the int32 accumulator is rescaled (+ ``bias``) in VMEM and the op returns
+    ``out_dtype`` instead of raw int32.  Oracle: ``ref.ref_int_matmul_fused``.
+    """
     M, K = x.shape
     _, N = w.shape
     bm = min(block_m, _round_up(M, 8))
     bn = min(block_n, _round_up(N, 128))
     bk = min(block_k, _round_up(K, 128))
+    Np = _round_up(N, bn)
     xp = _pad_axis(_pad_axis(x, 0, _round_up(M, bm)), 1, _round_up(K, bk))
-    wp = _pad_axis(_pad_axis(w, 0, _round_up(K, bk)), 1, _round_up(N, bn))
+    wp = _pad_axis(_pad_axis(w, 0, _round_up(K, bk)), 1, Np)
+    if scale is not None:
+        scale = _pad_axis(
+            jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (N,)).reshape(1, N), 1, Np
+        )
+    if bias is not None:
+        if scale is None:
+            raise ValueError("int_matmul: bias requires an epilogue scale")
+        bias = _pad_axis(jnp.asarray(bias, jnp.float32).reshape(1, N), 1, Np)
     out = int_matmul_pallas(
         xp,
         wp,
+        scale,
+        bias,
         acc_bits=acc_bits,
         mode=mode,
         block_m=bm,
         block_n=bn,
         block_k=bk,
         spill_dtype=jnp.int16 if spill_int16 else jnp.int32,
+        out_dtype=out_dtype,
         interpret=_default_interpret(interpret),
     )
     return out[:M, :N]
@@ -168,6 +189,8 @@ def paged_attention(
     bt: jnp.ndarray,
     lengths: jnp.ndarray,
     *,
+    kps: Optional[jnp.ndarray] = None,
+    vps: Optional[jnp.ndarray] = None,
     scale: Optional[float] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -175,16 +198,24 @@ def paged_attention(
     K/V pools.  ``q (B, H, Dh)``, pools ``(NB, bs, KV, Dh)``, table
     ``bt (B, MB)``, ``lengths (B,)`` counting valid tokens (including this
     step's write).  Returns ``(B, H, Dh)``.  Oracle:
-    ``ref.ref_paged_attention``."""
+    ``ref.ref_paged_attention``.
+
+    ``kps``/``vps`` (``(NB, bs, KV)`` fp32): the pools are int8 and the
+    kernel dequantizes in-register.  Oracle: ``ref.ref_paged_attention_q8``.
+    """
     B, H, Dh = q.shape
     KV = kp.shape[2]
     G = H // KV
+    if (kps is None) != (vps is None):
+        raise ValueError("paged_attention: kps and vps must be given together")
     out = paged_attention_pallas(
         q.reshape(B, KV, G, Dh),
         kp,
         vp,
         bt,
         lengths,
+        kps,
+        vps,
         scale=scale,
         interpret=_default_interpret(interpret),
     )

@@ -16,6 +16,14 @@ Softmax is the same fp32 online (running max / sum / accumulator) scheme as
 comes from the per-row length: position ``j * bs + o`` participates iff it is
 ``< length`` — dead rows (length 0) produce a zero output via the flush-time
 denominator guard, never a NaN.
+
+Quantized pools (the int8 KV-cache serve path): with ``kps``/``vps`` — one
+fp32 scale per block-slot per KV head, stored in the same ``(NB, bs, KV)``
+block layout and gathered through the same table entry — the K/V operands are
+int8 and the kernel dequantizes *in register* inside the online-softmax loop:
+the int8 block is what DMAs from HBM (~4x less decode bandwidth than fp32),
+the fp32 view never exists outside VMEM.  Oracle:
+``ref.ref_paged_attention_q8``.
 """
 
 from __future__ import annotations
@@ -37,17 +45,17 @@ def paged_attention_kernel(
     bt_ref,  # (B, MB) scalar-prefetch block table
     len_ref,  # (B,)   scalar-prefetch per-row lengths
     q_ref,  # (1, 1, G, Dh)
-    k_ref,  # (1, bs, 1, Dh) — the pool block bt[b, j]
+    k_ref,  # (1, bs, 1, Dh) — the pool block bt[b, j]; int8 when quantized
     v_ref,  # (1, bs, 1, Dh)
-    o_ref,  # (1, 1, G, Dh)
-    m_ref,  # (G, 1) scratch
-    l_ref,  # (G, 1) scratch
-    acc_ref,  # (G, Dh) scratch
-    *,
+    *rest,  # quantized: (ks_ref, vs_ref, o_ref, scratch...) else (o_ref, ...)
     scale: float,
     block_size: int,
     mb_steps: int,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]  # (1, bs, 1) fp32 per-slot scales
+    o_ref, m_ref, l_ref, acc_ref = rest[-4:]
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -59,6 +67,9 @@ def paged_attention_kernel(
 
     q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, Dh)
     k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
+    if quantized:
+        # in-register dequant: the fp32 K block exists only in VMEM
+        k = k * ks_ref[0, :, 0][:, None]
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (G, bs)
@@ -74,8 +85,11 @@ def paged_attention_kernel(
     p = jnp.where(kpos < length, p, 0.0)
     l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
     m_ref[...] = m_new
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if quantized:
+        v = v * vs_ref[0, :, 0][:, None]
     pv = jax.lax.dot_general(
-        p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        p, v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
     acc_ref[...] = alpha * acc_ref[...] + pv
@@ -93,6 +107,8 @@ def paged_attention_pallas(
     vp: jnp.ndarray,  # (NB, bs, KV, Dh)
     bt: jnp.ndarray,  # (B, MB) int32
     lengths: jnp.ndarray,  # (B,) int32
+    kps: Optional[jnp.ndarray] = None,  # (NB, bs, KV) fp32 — int8 pool scales
+    vps: Optional[jnp.ndarray] = None,
     *,
     scale: Optional[float] = None,
     interpret: bool = False,
@@ -100,24 +116,38 @@ def paged_attention_pallas(
     """Returns ``(B, KV, G, Dh)`` attention outputs for one decode token per
     row.  ``lengths`` counts valid tokens (including this step's freshly
     written one); table entries past a row's length may point anywhere — they
-    are loaded and fully masked."""
+    are loaded and fully masked.  ``kps``/``vps`` given => ``kp``/``vp`` are
+    int8 pools dequantized in-kernel against the per-slot scales."""
     B, KV, G, Dh = q.shape
     NB, bs, _, _ = kp.shape
     MB = bt.shape[1]
+    quantized = kps is not None
     if scale is None:
         scale = Dh**-0.5
 
     kernel = functools.partial(
-        paged_attention_kernel, scale=scale, block_size=bs, mb_steps=MB
+        paged_attention_kernel, scale=scale, block_size=bs, mb_steps=MB,
+        quantized=quantized,
     )
+    pool_spec = pl.BlockSpec(
+        (1, bs, 1, Dh), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q, kp, vp]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, bs, 1), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [kps.astype(jnp.float32), vps.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, MB),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, Dh), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, Dh), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
@@ -130,4 +160,4 @@ def paged_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, Dh), q.dtype),
         interpret=interpret,
-    )(bt.astype(jnp.int32), lengths.astype(jnp.int32), q, kp, vp)
+    )(bt.astype(jnp.int32), lengths.astype(jnp.int32), *operands)

@@ -18,9 +18,11 @@ __all__ = [
     "wrap_bits",
     "saturate_bits",
     "ref_int_matmul",
+    "ref_int_matmul_fused",
     "ref_a2q_quantize",
     "ref_flash_attention",
     "ref_paged_attention",
+    "ref_paged_attention_q8",
     "ref_rwkv6",
 ]
 
@@ -76,6 +78,28 @@ def ref_int_matmul(
             acc = saturate_bits(acc + x32[:, lo:hi] @ w32[lo:hi, :], acc_bits)
         return acc
     raise ValueError(f"unknown mode {mode!r}")
+
+
+def ref_int_matmul_fused(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    acc_bits: int = 32,
+    mode: str = "exact",
+    block_k: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fused-epilogue oracle: the integer matmul followed by the per-column
+    rescale (+ bias) in fp32 — exactly ``matmul -> scale``.  The kernel's
+    in-VMEM epilogue matches the scale-only form bit-for-bit (one fp32
+    multiply either way); with ``bias`` the kernel's rescale+add may contract
+    into an FMA (one rounding vs the oracle's two), so agreement is to 1-ulp
+    float tolerance."""
+    acc = ref_int_matmul(x, w, acc_bits=acc_bits, mode=mode, block_k=block_k)
+    out = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    if bias is not None:
+        out = out + jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    return out
 
 
 def ref_a2q_quantize(
@@ -171,6 +195,27 @@ def ref_paged_attention(
     p = jnp.where(denom > 0.0, p / jnp.maximum(denom, 1e-30), 0.0)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v)
     return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+def ref_paged_attention_q8(
+    q: jnp.ndarray,  # (B, H, Dh)
+    kp: jnp.ndarray,  # (NB, bs, KV, Dh) int8 key pool
+    vp: jnp.ndarray,  # (NB, bs, KV, Dh) int8 value pool
+    kps: jnp.ndarray,  # (NB, bs, KV) fp32 per-slot key scales
+    vps: jnp.ndarray,  # (NB, bs, KV) fp32 per-slot value scales
+    bt: jnp.ndarray,  # (B, MB) int32 block table
+    lengths: jnp.ndarray,  # (B,) int32
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """int8-pool paged-attention oracle: dequantize the pools against their
+    per-slot scales (one fp32 scalar per token-slot per KV head, stored in the
+    same block layout as the codes), then the fp32 gathered-view softmax.  The
+    Pallas kernel dequantizes the same values in-register; both paths compute
+    ``k = k8 * s_k`` in fp32 before the dot, so agreement is to float
+    tolerance, not bit-exact."""
+    kd = kp.astype(jnp.float32) * kps.astype(jnp.float32)[..., None]
+    vd = vp.astype(jnp.float32) * vps.astype(jnp.float32)[..., None]
+    return ref_paged_attention(q, kd, vd, bt, lengths, scale=scale)
 
 
 def ref_rwkv6(

@@ -46,16 +46,22 @@ class Runtime:
     ``decode_kernel`` routes paged-attention decode reads through the Pallas
     kernel (``kernels/paged_attention.py``) instead of the gathered-view jnp
     path — the TPU serving fast path.
+
+    ``int_forward`` routes deployed (``q8``/``s8``) linears through the fused
+    W8A8 integer kernel (``kernels/int_matmul.py``) instead of dequant + a
+    ``compute_dtype`` dot — the integer-fast serve path the A2Q accumulator
+    guarantee makes safe.
     """
 
     def __init__(self, mesh=None, ep_axis=None, rules=None, mla_absorb=False,
-                 grad_compress=None, decode_kernel=False):
+                 grad_compress=None, decode_kernel=False, int_forward=False):
         self.mesh = mesh
         self.ep_axis = ep_axis
         self.rules = rules
         self.mla_absorb = mla_absorb
         self.grad_compress = grad_compress
         self.decode_kernel = decode_kernel
+        self.int_forward = int_forward
 
     def batch_spec(self, ndim: int) -> P:
         if self.rules is None:
@@ -106,7 +112,10 @@ def _head_logits(params, arch: ArchConfig, h: jnp.ndarray, rt: Runtime) -> jnp.n
     if arch.tie_embeddings and arch.family != "audio":
         logits = h.astype(cd) @ params["embed"]["table"].astype(cd).T
     else:
-        logits = apply_linear(params["head"], h, arch.quant, boundary=True, compute_dtype=cd)
+        logits = apply_linear(
+            params["head"], h, arch.quant, boundary=True, compute_dtype=cd,
+            int_forward=rt.int_forward,
+        )
     if rt.mesh is not None:
         batch = rt.rules.rules.get("batch") or ()
         # vocab axes minus any axis already carrying the batch dim (tp_extra
@@ -178,7 +187,7 @@ def apply_lm(
         x, nc, pen = apply_stack(
             sp, x, arch, s, positions, sc,
             mesh=rt.mesh, ep_axis=rt.ep_axis, mla_absorb=rt.mla_absorb,
-            view=view, decode_kernel=rt.decode_kernel,
+            view=view, decode_kernel=rt.decode_kernel, int_forward=rt.int_forward,
         )
         x = constrain(x, rt.mesh, rt.batch_spec(3))
         if nc is not None:

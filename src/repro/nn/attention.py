@@ -20,6 +20,12 @@ KV caches (the *cache view* interface — all layouts share one ``_sdpa``):
   ``kp``/``vp``; MLA: ``ckvp``/``kpep``) indexed through a per-sequence block
   table ``view["bt"] (B, MB)`` owned by ``serve/paged_cache.py``.  Cache
   memory scales with live tokens instead of ``batch x max_seq``.
+* paged int8 — the same pools stored as int8 codes next to per-slot fp32
+  scale pools (``kps``/``vps``; MLA: ``ckvs``/``kpes``), detected by the
+  scale keys.  K/V are quantized on write (one scale per token per KV head,
+  absmax over the head dim) and dequantized on read — in-register inside the
+  Pallas decode kernel, on the gathered view otherwise — cutting KV HBM
+  footprint and decode bandwidth ~4x.
 
 Cache updates accept ``T >= 1`` tokens per call (chunked prefill): non-ring
 caches write a contiguous span at each row's start position, ring caches
@@ -261,6 +267,38 @@ def _paged_kpos(positions: jnp.ndarray, S: int) -> jnp.ndarray:
     return jnp.where(ar < new_len[:, None], ar, -1)
 
 
+def _kv_quantize(val: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization of a K/V update along its feature dim:
+    ``val (B, T, ..., D)`` -> (codes int8, per-``(B, T, ...)`` fp32 scales).
+    One scale per written token (per KV head for GQA pools, per latent row
+    for MLA), absmax-calibrated — the write is the only time the fp value
+    exists, so quantize-on-write is the whole encoder."""
+    vf = val.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(vf), axis=-1)
+    scale = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / 127.0
+    codes = jnp.clip(jnp.round(vf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _paged_write_q8(
+    pool: jnp.ndarray,
+    scales: jnp.ndarray,
+    val: jnp.ndarray,
+    bt: jnp.ndarray,
+    abs_pos: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize-on-write into an int8 pool + its per-slot scale pool."""
+    codes, s = _kv_quantize(val)
+    return _paged_write(pool, codes, bt, abs_pos), _paged_write(scales, s, bt, abs_pos)
+
+
+def _paged_gather_deq(pool: jnp.ndarray, scales: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
+    """Gathered contiguous view of an int8 pool, dequantized against its
+    per-slot scales (fp32) — the portable read path and the oracle layout for
+    the q8 decode kernel."""
+    return _paged_gather(pool, bt).astype(jnp.float32) * _paged_gather(scales, bt)[..., None]
+
+
 def apply_attention(
     params: dict,
     x: jnp.ndarray,
@@ -274,22 +312,26 @@ def apply_attention(
     mla_absorb: bool = False,
     view: Optional[dict] = None,
     decode_kernel: bool = False,
+    int_forward: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     """Returns (output, updated cache).  ``cache`` given => cached step over
     ``T >= 1`` new tokens (decode or chunked prefill).  A paged cache (keys
     ``kp``/``vp`` or ``ckvp``/``kpep``) additionally needs the block-table
     ``view``; ``decode_kernel=True`` routes the paged ``T == 1`` read through
     the Pallas paged-attention kernel instead of the gathered-view ``_sdpa``.
+    ``int_forward`` routes deployed projections through the fused W8A8 path.
     """
     if a.kind == "mla":
         return _apply_mla(
             params, x, a, q, positions, cache,
             q_chunk=q_chunk, compute_dtype=compute_dtype, absorb=mla_absorb,
-            view=view,
+            view=view, int_forward=int_forward,
         )
     B, T, D = x.shape
     H, KV, Dh = a.heads, a.kv_heads, a.head_dim
-    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    lin = functools.partial(
+        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+    )
     qh = lin(params["wq"], x=x).reshape(B, T, H, Dh)
     kh = lin(params["wk"], x=x).reshape(B, T, KV, Dh)
     vh = lin(params["wv"], x=x).reshape(B, T, KV, Dh)
@@ -307,19 +349,30 @@ def apply_attention(
     elif "kp" in cache:  # paged view
         assert view is not None, "paged attention cache needs a block-table view"
         bt = view["bt"]
-        new_cache = {
-            "kp": _paged_write(cache["kp"], kh, bt, positions),
-            "vp": _paged_write(cache["vp"], vh, bt, positions),
-        }
+        quant = "kps" in cache  # int8 pools carry per-slot scale pools
+        if quant:
+            kp_new, kps_new = _paged_write_q8(cache["kp"], cache["kps"], kh, bt, positions)
+            vp_new, vps_new = _paged_write_q8(cache["vp"], cache["vps"], vh, bt, positions)
+            new_cache = {"kp": kp_new, "kps": kps_new, "vp": vp_new, "vps": vps_new}
+        else:
+            new_cache = {
+                "kp": _paged_write(cache["kp"], kh, bt, positions),
+                "vp": _paged_write(cache["vp"], vh, bt, positions),
+            }
         if decode_kernel and T == 1 and a.causal and a.window is None and a.chunk is None:
             from repro.kernels import ops
 
             out = ops.paged_attention(
-                qh[:, 0], new_cache["kp"], new_cache["vp"], bt, positions[:, 0] + 1
+                qh[:, 0], new_cache["kp"], new_cache["vp"], bt, positions[:, 0] + 1,
+                kps=new_cache.get("kps"), vps=new_cache.get("vps"),
             )[:, None]
         else:
-            k_all = _paged_gather(new_cache["kp"], bt)
-            v_all = _paged_gather(new_cache["vp"], bt)
+            if quant:
+                k_all = _paged_gather_deq(new_cache["kp"], new_cache["kps"], bt)
+                v_all = _paged_gather_deq(new_cache["vp"], new_cache["vps"], bt)
+            else:
+                k_all = _paged_gather(new_cache["kp"], bt)
+                v_all = _paged_gather(new_cache["vp"], bt)
             kpos = _paged_kpos(positions, k_all.shape[1])
             out = _sdpa(
                 qh, k_all, v_all, positions, kpos,
@@ -366,11 +419,14 @@ def _apply_mla(
     compute_dtype,
     absorb: bool,
     view: Optional[dict] = None,
+    int_forward: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     B, T, D = x.shape
     H = a.heads
     nope, rope, vd = a.qk_nope_dim, a.qk_rope_dim, a.v_head_dim
-    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    lin = functools.partial(
+        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+    )
 
     cq = apply_norm(params["q_norm"], lin(params["wq_a"], x=x))
     qh = lin(params["wq_b"], x=cq).reshape(B, T, H, nope + rope)
@@ -385,12 +441,19 @@ def _apply_mla(
     if cache is not None and "ckvp" in cache:  # paged latent cache
         assert view is not None, "paged MLA cache needs a block-table view"
         bt = view["bt"]
-        cache = {
-            "ckvp": _paged_write(cache["ckvp"], ckv, bt, positions),
-            "kpep": _paged_write(cache["kpep"], kpe, bt, positions),
-        }
-        ckv_all = _paged_gather(cache["ckvp"], bt)
-        kpe_all = _paged_gather(cache["kpep"], bt)
+        if "ckvs" in cache:  # int8 latent pools, per-token fp32 scales
+            ckvp_new, ckvs_new = _paged_write_q8(cache["ckvp"], cache["ckvs"], ckv, bt, positions)
+            kpep_new, kpes_new = _paged_write_q8(cache["kpep"], cache["kpes"], kpe, bt, positions)
+            cache = {"ckvp": ckvp_new, "ckvs": ckvs_new, "kpep": kpep_new, "kpes": kpes_new}
+            ckv_all = _paged_gather_deq(cache["ckvp"], cache["ckvs"], bt)
+            kpe_all = _paged_gather_deq(cache["kpep"], cache["kpes"], bt)
+        else:
+            cache = {
+                "ckvp": _paged_write(cache["ckvp"], ckv, bt, positions),
+                "kpep": _paged_write(cache["kpep"], kpe, bt, positions),
+            }
+            ckv_all = _paged_gather(cache["ckvp"], bt)
+            kpe_all = _paged_gather(cache["kpep"], bt)
         kpos = _paged_kpos(positions, ckv_all.shape[1])
     elif cache is not None:
         cache = _write_cache(cache, {"ckv": ckv, "kpe": kpe}, positions[:, 0], ring=False)

@@ -19,6 +19,14 @@ Deployment: ``deploy_linear`` converts a trained A2Q layer to (int8 weights,
 per-channel scale) — the artifact whose l1 norm provably fits the P-bit
 accumulator — used by the serve path and by the int8-weight-storage roofline
 lever.
+
+Integer-fast serving: with ``int_forward=True`` (``Runtime(int_forward=...)``
+/ ``--int-forward``) a deployed layer skips the dequant + bf16 dot and runs
+``act_quant(x) -> int8 @ int8 -> int32 -> scaled output`` through the fused
+W8A8 kernel (``kernels/int_matmul.py``), with the int16 partial-sum spill
+engaged automatically when the layer's A2Q ``acc_bits <= 16`` — the paper's
+guarantee is exactly what makes both the integer accumulation and the narrow
+carry safe on the serve path.
 """
 
 from __future__ import annotations
@@ -31,6 +39,7 @@ import jax.numpy as jnp
 from repro.configs.base import QuantConfig
 from repro.core.a2q import a2q_int_weights, a2q_norm_cap, apply_a2q, init_a2q
 from repro.core.quantizers import (
+    act_quant_int,
     apply_act_quant,
     apply_weight_qat,
     init_act_quant,
@@ -119,6 +128,54 @@ def _quant_weights(params: dict, cfg: QuantConfig, boundary: bool, input_signed:
     raise ValueError(cfg.mode)
 
 
+def _int_forward_applicable(params: dict, N: int, input_signed: bool) -> bool:
+    """The fused W8A8 path needs deployed int8 storage, an activation
+    quantizer to produce the int8 operand, an int8-representable act code
+    range — signed ``N <= 8`` ([-128, 127]) or unsigned ``N <= 7`` ([0, 127];
+    unsigned 8-bit codes reach 255 and would wrap the int8 operand, so e.g.
+    the rwkv6 channel-mix ``wv`` after squared-relu stays on the dequant
+    path) — and an unstacked (2D) weight: vmapped expert/layer stacks keep
+    the dequant path (a ``pallas_call`` has no batching rule here)."""
+    if "q8" not in params or "aq" not in params or params["q8"].ndim != 2:
+        return False
+    return N <= 8 if input_signed else N <= 7
+
+
+def _apply_linear_int8(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: QuantConfig,
+    *,
+    boundary: bool,
+    input_signed: bool,
+    compute_dtype,
+) -> jnp.ndarray:
+    """Fused W8A8 forward: one ``pallas_call`` from int8 activations to the
+    scaled output.  The activation scale folds into the per-channel weight
+    scale, so the epilogue is a single per-column fp32 rescale (+ bias); the
+    int16 partial-sum spill engages when A2Q guarantees ``acc_bits <= 16``.
+    """
+    from repro.kernels import ops
+
+    M, N = _bits(cfg, boundary)
+    xq, x_scale = act_quant_int(
+        {"log2_scale": params["aq"]["log2_scale"]},
+        x.astype(jnp.float32), N, signed=input_signed,
+    )
+    K = x.shape[-1]
+    a2q = cfg.mode == "a2q"
+    y = ops.int_matmul(
+        xq.astype(jnp.int8).reshape(-1, K),
+        params["q8"],
+        acc_bits=cfg.acc_bits if a2q else 32,
+        mode="exact",
+        spill_int16=a2q and cfg.acc_bits <= 16,
+        scale=x_scale * params["s8"].astype(jnp.float32),
+        bias=params.get("b"),
+    )
+    return y.reshape(*x.shape[:-1], y.shape[-1]).astype(compute_dtype)
+
+
 def apply_linear(
     params: dict,
     x: jnp.ndarray,
@@ -127,9 +184,19 @@ def apply_linear(
     boundary: bool = False,
     input_signed: bool = True,
     compute_dtype=jnp.bfloat16,
+    int_forward: bool = False,
 ) -> jnp.ndarray:
-    """``y = act_quant(x) @ quant(w) (+ b)`` in ``compute_dtype``."""
+    """``y = act_quant(x) @ quant(w) (+ b)`` in ``compute_dtype``.
+
+    ``int_forward=True`` on a deployed layer (``q8``/``s8`` present) runs the
+    fused W8A8 integer path instead of dequant + ``compute_dtype`` dot.
+    """
     M, N = _bits(cfg, boundary)
+    if int_forward and _int_forward_applicable(params, N, input_signed):
+        return _apply_linear_int8(
+            params, x, cfg,
+            boundary=boundary, input_signed=input_signed, compute_dtype=compute_dtype,
+        )
     if cfg.mode != "none" and "aq" in params:
         x = apply_act_quant(
             {"log2_scale": params["aq"]["log2_scale"]}, x, N, signed=input_signed

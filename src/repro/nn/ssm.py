@@ -231,6 +231,7 @@ def apply_rwkv6_timemix(
     state: Optional[dict] = None,
     *,
     compute_dtype=jnp.bfloat16,
+    int_forward: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     """state = {'S': (B,H,Dk,Dv), 'shift': (B,1,d)} for decode; None = parallel.
 
@@ -241,7 +242,9 @@ def apply_rwkv6_timemix(
     B, T, D = x.shape
     Dk = ssm.head_dim
     H = D // Dk
-    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    lin = functools.partial(
+        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+    )
     last = state["shift"] if state is not None else None
     xs, new_shift = _token_shift(x, last)
     mix = params["mix"].astype(x.dtype)
@@ -297,8 +300,11 @@ def apply_rwkv6_channelmix(
     state: Optional[dict] = None,
     *,
     compute_dtype=jnp.bfloat16,
+    int_forward: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
-    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    lin = functools.partial(
+        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+    )
     last = state["shift"] if state is not None else None
     xs, new_shift = _token_shift(x, last)
     xk = x + params["mix"].astype(x.dtype) * (xs - x)
@@ -336,13 +342,16 @@ def apply_mamba_heads(
     state: Optional[dict] = None,
     *,
     compute_dtype=jnp.bfloat16,
+    int_forward: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     """state = {'S': (B,H,Dh,N)} for decode."""
     B, T, D = x.shape
     Dh = ssm.head_dim
     H = D // Dh
     N = ssm.state_dim
-    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+    lin = functools.partial(
+        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+    )
     xz = lin(params["in_proj"], x=x)
     xin, z = xz[..., :D], xz[..., D:]
     bc = lin(params["bc_proj"], x=x).astype(jnp.float32).reshape(B, T, H, 2 * N)

@@ -58,8 +58,10 @@ def _init_mlp(key, d: int, ff: int, q: QuantConfig, gated: bool, use_bias: bool)
     return p
 
 
-def _apply_mlp(p: dict, x, q: QuantConfig, compute_dtype) -> jnp.ndarray:
-    lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
+def _apply_mlp(p: dict, x, q: QuantConfig, compute_dtype, int_forward: bool = False) -> jnp.ndarray:
+    lin = functools.partial(
+        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+    )
     h = lin(p["w_in"], x=x)
     if "w_gate" in p:
         h = jax.nn.silu(lin(p["w_gate"], x=x).astype(jnp.float32)).astype(compute_dtype) * h
@@ -117,6 +119,7 @@ def _apply_block(
     mla_absorb: bool = False,
     view: Optional[dict] = None,
     decode_kernel: bool = False,
+    int_forward: bool = False,
 ):
     q = arch.quant
     cd = jnp.dtype(arch.compute_dtype)
@@ -127,7 +130,7 @@ def _apply_block(
         attn_out, c = apply_attention(
             p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
             q_chunk=arch.attn_q_chunk, compute_dtype=cd, mla_absorb=mla_absorb,
-            view=view, decode_kernel=decode_kernel,
+            view=view, decode_kernel=decode_kernel, int_forward=int_forward,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -135,7 +138,7 @@ def _apply_block(
             if s.kind == "moe":
                 ffn = apply_moe(p["moe"], h, s.moe, q, ep_axis=ep_axis, mesh=mesh, compute_dtype=cd)
             else:
-                ffn = _apply_mlp(p["mlp"], h, q, cd)
+                ffn = _apply_mlp(p["mlp"], h, q, cd, int_forward)
             x = x + attn_out + ffn
         else:
             x = x + attn_out
@@ -143,16 +146,16 @@ def _apply_block(
             if s.kind == "moe":
                 ffn = apply_moe(p["moe"], h2, s.moe, q, ep_axis=ep_axis, mesh=mesh, compute_dtype=cd)
             else:
-                ffn = _apply_mlp(p["mlp"], h2, q, cd)
+                ffn = _apply_mlp(p["mlp"], h2, q, cd, int_forward)
             x = x + ffn
     elif s.kind == "rwkv6":
         h = norm(p["ln1"], x)
-        y, c = apply_rwkv6_timemix(p["tm"], h, s.ssm, q, (cache or {}).get("tm"), compute_dtype=cd)
+        y, c = apply_rwkv6_timemix(p["tm"], h, s.ssm, q, (cache or {}).get("tm"), compute_dtype=cd, int_forward=int_forward)
         if c is not None:
             new_cache["tm"] = c
         x = x + y
         h2 = norm(p["ln2"], x)
-        y2, c2 = apply_rwkv6_channelmix(p["cm"], h2, q, (cache or {}).get("cm"), compute_dtype=cd)
+        y2, c2 = apply_rwkv6_channelmix(p["cm"], h2, q, (cache or {}).get("cm"), compute_dtype=cd, int_forward=int_forward)
         if c2 is not None:
             new_cache["cm"] = c2
         x = x + y2
@@ -161,15 +164,15 @@ def _apply_block(
         attn_out, c = apply_attention(
             p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
             q_chunk=arch.attn_q_chunk, compute_dtype=cd,
-            view=view, decode_kernel=decode_kernel,
+            view=view, decode_kernel=decode_kernel, int_forward=int_forward,
         )
         if c is not None:
             new_cache["attn"] = c
-        m_out, cm = apply_mamba_heads(p["mamba"], h, s.ssm, q, (cache or {}).get("mamba"), compute_dtype=cd)
+        m_out, cm = apply_mamba_heads(p["mamba"], h, s.ssm, q, (cache or {}).get("mamba"), compute_dtype=cd, int_forward=int_forward)
         if cm is not None:
             new_cache["mamba"] = cm
         x = x + 0.5 * (attn_out + m_out)
-        x = x + _apply_mlp(p["mlp"], norm(p["ln2"], x), q, cd)
+        x = x + _apply_mlp(p["mlp"], norm(p["ln2"], x), q, cd, int_forward)
     else:
         raise ValueError(s.kind)
 
@@ -236,11 +239,13 @@ def apply_stack(
     mla_absorb: bool = False,
     view: Optional[dict] = None,
     decode_kernel: bool = False,
+    int_forward: bool = False,
 ):
     """Scan ``s.count`` blocks.  Returns (x, new_cache, total_penalty).
 
-    ``view`` (the paged block-table, shared by every layer) and
-    ``decode_kernel`` pass straight through to the attention layers.
+    ``view`` (the paged block-table, shared by every layer), ``decode_kernel``
+    and ``int_forward`` (the fused W8A8 serve path) pass straight through to
+    the attention / linear layers.
     """
 
     def body(carry, layer_in):
@@ -249,7 +254,7 @@ def apply_stack(
         xn, new_cache, pen = _apply_block(
             layer_params, xc, arch, s, positions, layer_cache,
             mesh=mesh, ep_axis=ep_axis, mla_absorb=mla_absorb,
-            view=view, decode_kernel=decode_kernel,
+            view=view, decode_kernel=decode_kernel, int_forward=int_forward,
         )
         return xn, (new_cache, pen)
 

@@ -41,7 +41,10 @@ from repro.serve.paged_cache import PagedKVCache
 from repro.serve.sampling import SampleConfig, sample_tokens
 from repro.serve.scheduler import Scheduler, ServeRequest
 
-__all__ = ["ServeEngine", "PagedServeEngine", "Request", "deploy_params", "deploy_boxed"]
+__all__ = [
+    "ServeEngine", "PagedServeEngine", "Request", "deploy_params", "deploy_boxed",
+    "parity_up_to_ties",
+]
 
 
 def deploy_params(params: dict, q: QuantConfig) -> dict:
@@ -116,6 +119,36 @@ def deploy_boxed(boxed_tree, q: QuantConfig):
         return node
 
     return walk(boxed_tree)
+
+
+
+def parity_up_to_ties(ref_reqs, outs_test, eps: float):
+    """Token-parity bound for lossy (int8-KV) serving: compare each request's
+    generated prefix against the float reference and fail on any mismatch at
+    a step where the reference's greedy top-2 logit margin exceeds ``eps``.
+    A mismatch *below* the margin is a quantization-noise tie — the int8 path
+    was within its error budget of the float decision — and the prefixes
+    legitimately diverge from there, so comparison for that request stops.
+    With ``eps == 0`` this is exact token parity.
+
+    ``ref_reqs`` are the reference engine's driven :class:`ServeRequest`
+    objects (``engine.last_requests``) — tokens and margins index-aligned.
+    Returns ``(ok, n_ties, detail)``.  Documented in serve/README.md
+    ("parity bound"); gated by launch/serve --parity-check --kv-int8,
+    benchmarks/serve_bench.py, and tests/test_paged.py.
+    """
+    ties = 0
+    for r, req in enumerate(ref_reqs):
+        for t, (x, y) in enumerate(zip(req.generated, outs_test[r])):
+            if x != y:
+                if req.margins[t] > eps:
+                    return False, ties, (
+                        f"req {r} step {t}: {x} != {y} with reference margin "
+                        f"{req.margins[t]:.4f} > eps {eps}"
+                    )
+                ties += 1
+                break
+    return True, ties, None
 
 
 # Back-compat alias: the seed engine's request type is the scheduler's.
@@ -244,6 +277,8 @@ class ServeEngine(_StatsMixin):
             req = self.slots[i]
             last = getattr(req, "_last_logits")
             nxt = int(np.argmax(last))
+            top2 = np.partition(last.astype(np.float32), -2)[-2:]
+            req.margins.append(float(top2[1] - top2[0]))
             if not req.generated:
                 req.first_token_at = time.perf_counter()
             req.generated.append(nxt)
@@ -269,6 +304,7 @@ class ServeEngine(_StatsMixin):
                     submitted_at=time.perf_counter())
             for i, p in enumerate(prompts)
         ]
+        self.last_requests = reqs  # parity gates read tokens + margins here
         if self.recurrent:
             return self._generate_lockstep(reqs)
         pending = list(reqs)
@@ -281,6 +317,7 @@ class ServeEngine(_StatsMixin):
 
     def _generate_lockstep(self, reqs: list) -> list[list[int]]:
         assert len(reqs) <= self.batch, "lockstep mode serves one group at a time"
+        self.last_requests = reqs
         lens = {len(r.prompt) for r in reqs}
         assert len(lens) == 1, "recurrent archs require equal-length prompt groups"
         T = lens.pop()
@@ -317,6 +354,11 @@ class PagedServeEngine(_StatsMixin):
     ``num_blocks`` bounds KV memory (default: worst case, every slot at
     ``max_seq``); admission stalls — never crashes — when blocks run out,
     resuming as finished sequences release theirs.
+
+    ``kv_quant=True`` stores seq-indexed K/V as int8 blocks with per-slot
+    fp32 scales (``serve/paged_cache.py``): ~4x less KV HBM per live token
+    and ~4x less decode read bandwidth, at a bounded quantization error the
+    parity gates bound to greedy-token agreement on the reduced archs.
     """
 
     def __init__(
@@ -332,6 +374,7 @@ class PagedServeEngine(_StatsMixin):
         rt: Optional[Runtime] = None,
         sample: Optional[SampleConfig] = None,
         lockstep: Optional[bool] = None,
+        kv_quant: bool = False,
         bos_id: int = 0,
         seed: int = 0,
     ):
@@ -345,7 +388,7 @@ class PagedServeEngine(_StatsMixin):
         self.recurrent = any(s.kind in ("rwkv6", "hymba") for s in arch.stacks)
         self.cache = PagedKVCache(
             arch, batch, block_size=block_size, num_blocks=num_blocks,
-            max_seq=max_seq, dtype=jnp.dtype(arch.compute_dtype),
+            max_seq=max_seq, dtype=jnp.dtype(arch.compute_dtype), kv_quant=kv_quant,
         )
         self.sched = Scheduler(
             batch, prefill_chunk=prefill_chunk,
@@ -363,7 +406,13 @@ class PagedServeEngine(_StatsMixin):
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    # -- jitted steps (sampling fused: only token ids leave the device) -----
+    # -- jitted steps (sampling fused: only token ids — plus one fp32 greedy
+    # margin per row, read by the int8-KV parity bound — leave the device) --
+
+    @staticmethod
+    def _greedy_margin(logits):
+        top2 = jax.lax.top_k(logits.astype(jnp.float32), 2)[0]
+        return top2[:, 0] - top2[:, 1]
 
     def _prefill_fn(self, params, tokens, pools, bt, start, key):
         cache = {**pools, "_paged": {"bt": bt}}
@@ -372,7 +421,7 @@ class PagedServeEngine(_StatsMixin):
             start_pos=start, rt=self.rt,
         )
         tok = sample_tokens(logits[:, -1], self.sample_cfg, key)
-        return tok, new_cache
+        return tok, self._greedy_margin(logits[:, -1]), new_cache
 
     def _decode_fn(self, params, tokens, pools, bt, pos, key):
         cache = {**pools, "_paged": {"bt": bt}}
@@ -381,7 +430,7 @@ class PagedServeEngine(_StatsMixin):
             start_pos=pos, rt=self.rt,
         )
         tok = sample_tokens(logits[:, 0], self.sample_cfg, key)
-        return tok, new_cache
+        return tok, self._greedy_margin(logits[:, 0]), new_cache
 
     # -- request lifecycle --------------------------------------------------
 
@@ -420,16 +469,18 @@ class PagedServeEngine(_StatsMixin):
         self.cache.reset_slot(slot)
         self.cache.allocate(slot, len(req.prompt) + req.max_new)
         t0 = time.perf_counter()
-        tok = None
+        tok = marg = None
         for chunk, start in self.sched.prefill_plan(slot):
             sub = self.cache.slice_slot(slot)
-            tok, new_pools = self._prefill(
+            tok, marg, new_pools = self._prefill(
                 self.params, jnp.asarray(chunk[None, :]), sub,
                 self.cache.bt_row(slot), jnp.int32(start), self._next_key(),
             )
             self.cache.merge_slot(slot, new_pools)
         self.cache.lens[slot] = len(req.prompt)
-        first = int(jax.device_get(tok)[0])
+        tok_h, marg_h = jax.device_get((tok, marg))
+        first = int(tok_h[0])
+        req.margins.append(float(marg_h[0]))
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += len(req.prompt)
         if self.sched.record_token(slot, first):
@@ -447,19 +498,20 @@ class PagedServeEngine(_StatsMixin):
             toks[slot] = req.prompt
             req.prefilled = L
         t0 = time.perf_counter()
-        tok = None
+        tok = marg = None
         for lo in range(0, L, self.sched.prefill_chunk):
             hi = min(lo + self.sched.prefill_chunk, L)
-            tok, pools = self._prefill(
+            tok, marg, pools = self._prefill(
                 self.params, jnp.asarray(toks[:, lo:hi]), self.cache.pools,
                 self.cache.bt(), jnp.int32(lo), self._next_key(),
             )
             self.cache.pools = pools
-        firsts = np.asarray(jax.device_get(tok))
+        firsts, margs = (np.asarray(a) for a in jax.device_get((tok, marg)))
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += L * len(group)
         for slot, req in group:
             self.cache.lens[slot] = L
+            req.margins.append(float(margs[slot]))
             if self.sched.record_token(slot, int(firsts[slot])):
                 self.cache.release(slot)
 
@@ -473,16 +525,18 @@ class PagedServeEngine(_StatsMixin):
         for i in live:
             tok_in[i] = self.sched.slots[i].last_token
         t0 = time.perf_counter()
-        toks, pools = self._decode(
+        toks, margs, pools = self._decode(
             self.params, jnp.asarray(tok_in[:, None]), self.cache.pools,
             self.cache.bt(), jnp.asarray(self.cache.lens.copy()), self._next_key(),
         )
         self.cache.pools = pools
-        out = np.asarray(jax.device_get(toks))
+        # one host round-trip for ids + margins (decode stays two tiny arrays)
+        out, marg = (np.asarray(a) for a in jax.device_get((toks, margs)))
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_tokens"] += len(live)
         for i in live:
             self.cache.lens[i] += 1
+            self.sched.slots[i].margins.append(float(marg[i]))
             if self.sched.record_token(i, int(out[i])):
                 self.cache.release(i)
         return len(live)
@@ -509,6 +563,7 @@ class PagedServeEngine(_StatsMixin):
         ]
         for r in reqs:
             self.submit(r)
+        self.last_requests = reqs  # parity gates read tokens + margins here
         while not self.sched.idle():
             self.step()
         return [r.generated for r in reqs]

@@ -23,6 +23,16 @@ Block 0 of every pool is the reserved **trash block**: the block tables of
 dead slots point at it, so a full-batch decode step can include dead rows
 (they scatter into trash and attend garbage that is never read).
 
+``kv_quant=True`` stores the seq-indexed pools as **int8 codes** next to
+per-slot fp32 *scale pools* (``kps``/``vps`` for GQA — one scalar per
+token-slot per KV head; ``ckvs``/``kpes`` for MLA — one per token-slot),
+laid out in the same block geometry and gathered through the same table.
+K/V are quantized on write (``nn/attention._paged_write_q8``) and
+dequantized on read — in-register inside the Pallas decode kernel — so the
+seq-indexed KV HBM footprint drops ~4x (int8 + one fp32 scale per head-slot
+vs fp32 values): ~4x more live tokens per pool, ~4x less decode bandwidth.
+Ring and recurrent leaves are already O(window)/O(1) and stay float.
+
 All layers share one block table — block ``b`` holds the same token span in
 every layer's pool — so the allocator runs once per sequence, not per layer.
 The device-facing view is attached to the cache tree under the reserved key
@@ -46,10 +56,15 @@ import numpy as np
 from repro.configs.base import ArchConfig, AttnConfig, StackConfig
 from repro.nn.attention import init_attn_cache
 
-__all__ = ["PagedKVCache", "init_paged_stack_cache", "POOL_KEYS", "TRASH_BLOCK"]
+__all__ = [
+    "PagedKVCache", "init_paged_stack_cache", "POOL_KEYS", "SCALE_KEYS", "TRASH_BLOCK",
+]
 
 # Leaves indexed (count, NB, bs, ...) — everything else is (count, B, ...).
-POOL_KEYS = frozenset({"kp", "vp", "ckvp", "kpep"})
+# SCALE_KEYS are the per-slot fp32 scale pools that ride along with int8
+# code pools (kv_quant=True); they are block-indexed like any other pool.
+SCALE_KEYS = frozenset({"kps", "vps", "ckvs", "kpes"})
+POOL_KEYS = frozenset({"kp", "vp", "ckvp", "kpep"}) | SCALE_KEYS
 TRASH_BLOCK = 0
 
 
@@ -59,17 +74,33 @@ def _leaf_name(path) -> Optional[str]:
 
 
 def init_paged_attn_cache(
-    a: AttnConfig, slots: int, num_blocks: int, block_size: int, max_seq: int, dtype
+    a: AttnConfig, slots: int, num_blocks: int, block_size: int, max_seq: int, dtype,
+    kv_quant: bool = False,
 ) -> dict:
     """Paged cache for one attention layer; ring layers keep their bounded
-    per-slot layout (a window-sized ring is already token-proportional)."""
+    per-slot layout (a window-sized ring is already token-proportional).
+    ``kv_quant``: int8 code pools + per-slot fp32 scale pools."""
     if a.kind == "mla":
+        if kv_quant:
+            return {
+                "ckvp": jnp.zeros((num_blocks, block_size, a.kv_lora_rank), jnp.int8),
+                "ckvs": jnp.zeros((num_blocks, block_size), jnp.float32),
+                "kpep": jnp.zeros((num_blocks, block_size, a.qk_rope_dim), jnp.int8),
+                "kpes": jnp.zeros((num_blocks, block_size), jnp.float32),
+            }
         return {
             "ckvp": jnp.zeros((num_blocks, block_size, a.kv_lora_rank), dtype),
             "kpep": jnp.zeros((num_blocks, block_size, a.qk_rope_dim), dtype),
         }
     if (a.window or a.chunk) is not None:
         return init_attn_cache(slots, a, max_seq, dtype)
+    if kv_quant:
+        return {
+            "kp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), jnp.int8),
+            "kps": jnp.zeros((num_blocks, block_size, a.kv_heads), jnp.float32),
+            "vp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), jnp.int8),
+            "vps": jnp.zeros((num_blocks, block_size, a.kv_heads), jnp.float32),
+        }
     return {
         "kp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), dtype),
         "vp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), dtype),
@@ -78,14 +109,14 @@ def init_paged_attn_cache(
 
 def init_paged_stack_cache(
     arch: ArchConfig, s: StackConfig, slots: int, num_blocks: int, block_size: int,
-    max_seq: int, dtype,
+    max_seq: int, dtype, kv_quant: bool = False,
 ):
     """Paged twin of ``nn.transformer.init_stack_cache`` (leading ``count``)."""
     d = arch.d_model
 
     def one():
         if s.kind in ("attn_mlp", "moe"):
-            return {"attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype)}
+            return {"attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype, kv_quant)}
         if s.kind == "rwkv6":
             H = d // s.ssm.head_dim
             return {
@@ -98,7 +129,7 @@ def init_paged_stack_cache(
         if s.kind == "hymba":
             H = d // s.ssm.head_dim
             return {
-                "attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype),
+                "attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype, kv_quant),
                 "mamba": {"S": jnp.zeros((slots, H, s.ssm.head_dim, s.ssm.state_dim), jnp.float32)},
             }
         raise ValueError(s.kind)
@@ -119,10 +150,12 @@ class PagedKVCache:
         num_blocks: Optional[int] = None,
         max_seq: int = 512,
         dtype=jnp.bfloat16,
+        kv_quant: bool = False,
     ):
         self.arch = arch
         self.slots = slots
         self.block_size = block_size
+        self.kv_quant = kv_quant
         self.max_seq = max_seq
         self.max_blocks_per_seq = -(-max_seq // block_size)
         if num_blocks is None:
@@ -132,7 +165,9 @@ class PagedKVCache:
             raise ValueError("need at least one non-trash block")
         self.num_blocks = num_blocks
         self.pools = {
-            str(i): init_paged_stack_cache(arch, s, slots, num_blocks, block_size, max_seq, dtype)
+            str(i): init_paged_stack_cache(
+                arch, s, slots, num_blocks, block_size, max_seq, dtype, kv_quant
+            )
             for i, s in enumerate(arch.stacks)
         }
         # LIFO free list; low ids handed out first so fresh tables are ordered
@@ -184,6 +219,19 @@ class PagedKVCache:
 
     def allocated_blocks(self) -> int:
         return self.num_blocks - 1 - len(self.free)
+
+    def kv_bytes_per_token(self) -> int:
+        """HBM bytes one cached token costs across every seq-indexed pool
+        (all layers; codes + scale pools).  Ring/recurrent leaves are
+        excluded — they do not scale with live tokens.  This is the number
+        the int8 pools cut ~4x (int8 codes + one fp32 scale per head-slot
+        vs fp32 values)."""
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.pools)[0]:
+            if _leaf_name(path) in POOL_KEYS:
+                nb, bs = leaf.shape[1], leaf.shape[2]
+                total += leaf.size * leaf.dtype.itemsize // (nb * bs)
+        return total
 
     # -- per-slot state (recurrent / ring leaves) ---------------------------
 

@@ -36,6 +36,12 @@ class ServeRequest:
     prompt: np.ndarray  # (T,) int32, non-empty (engine normalizes)
     max_new: int = 16
     generated: list = dataclasses.field(default_factory=list)
+    # greedy decision margins: top-2 logit gap at the step that produced
+    # generated[t] — what the int8-KV parity bound reads (a mismatch only
+    # counts where the float baseline's margin exceeds the quantization-noise
+    # bound; below it the decision is a tie).  Engines append one entry per
+    # generated token; empty when the engine does not track margins.
+    margins: list = dataclasses.field(default_factory=list)
     done: bool = False
     prefilled: int = 0  # prompt tokens already in the cache
     last_token: int = -1  # most recent sampled token (next decode input)

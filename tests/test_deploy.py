@@ -100,6 +100,72 @@ def test_deploy_boxed_mirrors_deploy_params_shapes():
             assert len(leaf.axes) == r[k].ndim
 
 
+@pytest.mark.parametrize("name", ["yi-6b", "deepseek-v3-671b"])
+def test_int_forward_logits_parity_close(name):
+    """The fused W8A8 path computes the same quantized algebra as dequant +
+    fp32 dot exactly in integers, so logits agree to ~ulp on the reduced
+    archs (GQA and MLA) and greedy argmax is preserved."""
+    from repro.models.lm import Runtime
+
+    arch = reduced(get_arch(name))
+    deployed = deploy_params(unbox(init_lm(KEY, arch)), arch.quant)
+    toks = jnp.asarray([[5, 1, 3, 2, 7, 6]], jnp.int32)
+    l_deq, _, _ = apply_lm(deployed, arch, tokens=toks)
+    l_int, _, _ = apply_lm(deployed, arch, tokens=toks, rt=Runtime(int_forward=True))
+    np.testing.assert_allclose(np.asarray(l_deq), np.asarray(l_int), atol=1e-5)
+    assert (np.argmax(np.asarray(l_deq), -1) == np.argmax(np.asarray(l_int), -1)).all()
+
+
+def test_int_forward_exact_when_scales_pow2_and_acts_integral():
+    """Int8-exactness witness: with pow2 activation AND weight scales and
+    integer-valued inputs, every fp32 product/sum on the dequant path is
+    exact, so the dequant dot and the W8A8 kernel are the same arithmetic —
+    bitwise-equal outputs (the general case is ~ulp-close: non-pow2 weight
+    scales round once per product on the dequant side)."""
+    from repro.configs.base import QuantConfig
+    from repro.nn.linear import apply_linear
+
+    cfg = QuantConfig(mode="a2q", weight_bits=8, act_bits=8, acc_bits=16)
+    rng = np.random.default_rng(0)
+    dep = {
+        "q8": jnp.asarray(rng.integers(-16, 16, (32, 48)), jnp.int8),
+        "s8": jnp.exp2(jnp.asarray(rng.integers(-6, -2, (48,)), jnp.float32)),
+        "aq": {"log2_scale": jnp.zeros(())},  # scale = 2**0: acts stay integral
+    }
+    x = jnp.asarray(rng.integers(-20, 20, (4, 32)), jnp.float32)
+    y_deq = apply_linear(dep, x, cfg, compute_dtype=jnp.float32)
+    y_int = apply_linear(dep, x, cfg, compute_dtype=jnp.float32, int_forward=True)
+    np.testing.assert_array_equal(np.asarray(y_deq), np.asarray(y_int))
+
+
+def test_int_forward_rwkv6_unsigned_channelmix_fallback():
+    """rwkv6's channel-mix ``wv`` consumes unsigned 8-bit acts (post-relu²,
+    codes up to 255 — past the int8 operand) so it must stay on the dequant
+    path while every signed projection runs W8A8: logits still ~ulp-close."""
+    from repro.models.lm import Runtime
+
+    arch = reduced(get_arch("rwkv6-7b"))
+    deployed = deploy_params(unbox(init_lm(KEY, arch)), arch.quant)
+    toks = jnp.asarray([[5, 1, 3, 2, 7, 6, 9, 8]], jnp.int32)  # T % ssm chunk == 0
+    l_deq, _, _ = apply_lm(deployed, arch, tokens=toks)
+    l_int, _, _ = apply_lm(deployed, arch, tokens=toks, rt=Runtime(int_forward=True))
+    np.testing.assert_allclose(np.asarray(l_deq), np.asarray(l_int), atol=1e-5)
+
+
+def test_int_forward_falls_back_off_the_int8_path():
+    """Stacked (vmapped) q8 and non-deployed params must take the dequant
+    path unchanged under int_forward — same output as int_forward=False."""
+    from repro.configs.base import QuantConfig
+    from repro.nn.linear import apply_linear, init_linear
+
+    cfg = QuantConfig(mode="a2q", weight_bits=8, act_bits=8, acc_bits=16)
+    p = unbox(init_linear(KEY, 16, 24, cfg))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(3, 16)), jnp.float32)
+    y0 = apply_linear(p, x, cfg, compute_dtype=jnp.float32)
+    y1 = apply_linear(p, x, cfg, compute_dtype=jnp.float32, int_forward=True)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
 @pytest.mark.parametrize("name", ["smollm-135m", "h2o-danube-1.8b"])
 def test_deployed_logits_close_to_float_reduced(name):
     """int8 deployment is the same math as training fake-quant: logits agree

@@ -53,6 +53,74 @@ def test_int16_spill_rejected_for_wide_acc():
         ops.int_matmul(x, w, acc_bits=24, spill_int16=True)
 
 
+# -- fused epilogue (the W8A8 serve path) -----------------------------------
+
+
+@pytest.mark.parametrize("M,K,N", [(5, 33, 7), (65, 200, 77), (8, 16, 8), (1, 129, 257)])
+def test_int_matmul_fused_epilogue_matches_ref(M, K, N):
+    """Non-block-multiple shapes through the fused epilogue: padded columns
+    are sliced off before the caller ever sees them, and the scale-only form
+    is bit-exact against the oracle (with bias: 1-ulp, FMA contraction)."""
+    x = jnp.asarray(RNG.integers(-64, 64, (M, K)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-64, 64, (K, N)), jnp.int8)
+    s = jnp.asarray(RNG.uniform(0.01, 2.0, (N,)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(N,)), jnp.float32)
+    got_s = ops.int_matmul(x, w, scale=s, block_k=64)
+    np.testing.assert_array_equal(
+        np.asarray(got_s), np.asarray(ref.ref_int_matmul_fused(x, w, s))
+    )
+    got_b = ops.int_matmul(x, w, scale=s, bias=b, block_k=64)
+    np.testing.assert_allclose(
+        np.asarray(got_b), np.asarray(ref.ref_int_matmul_fused(x, w, s, b)), rtol=1e-6
+    )
+
+
+def test_int_matmul_epilogue_vs_matmul_then_scale():
+    """Epilogue-vs-(matmul -> scale) parity: the fused op must equal the
+    unfused int32 kernel output rescaled outside — same accumulator, the
+    epilogue only moves the multiply into the flush."""
+    x = jnp.asarray(RNG.integers(-32, 32, (47, 130)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-32, 32, (130, 19)), jnp.int8)
+    s = jnp.asarray(RNG.uniform(0.01, 1.0, (19,)), jnp.float32)
+    fused = ops.int_matmul(x, w, scale=s, block_k=64)
+    unfused = ops.int_matmul(x, w, block_k=64).astype(jnp.float32) * s[None, :]
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+    # scalar scale broadcasts like a full column vector
+    sc = jnp.float32(0.125)
+    fused_sc = ops.int_matmul(x, w, scale=sc, block_k=64)
+    np.testing.assert_array_equal(
+        np.asarray(fused_sc),
+        np.asarray(ops.int_matmul(x, w, block_k=64), np.float32) * 0.125,
+    )
+
+
+def test_int_matmul_spill_int16_saturate_combo():
+    """int16 spill composes with saturate-mode accumulator emulation: the
+    saturated carry is always within acc_bits <= 16, so the narrow register
+    stays lossless and the tile schedule must match the oracle's replay."""
+    x = jnp.asarray(RNG.integers(-8, 8, (32, 96)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-8, 8, (96, 48)), jnp.int8)
+    for acc_bits in (12, 16):
+        got = ops.int_matmul(
+            x, w, acc_bits=acc_bits, mode="saturate", spill_int16=True, block_k=32
+        )
+        want = ref.ref_int_matmul(x, w, acc_bits=acc_bits, mode="saturate", block_k=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # ...and with the fused epilogue on top (the deployed-layer configuration)
+    s = jnp.asarray(RNG.uniform(0.01, 1.0, (48,)), jnp.float32)
+    got = ops.int_matmul(
+        x, w, acc_bits=16, mode="saturate", spill_int16=True, scale=s, block_k=32
+    )
+    want = ref.ref_int_matmul_fused(x, w, s, acc_bits=16, mode="saturate", block_k=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int_matmul_bias_requires_scale():
+    x = jnp.zeros((8, 8), jnp.int8)
+    with pytest.raises(ValueError):
+        ops.int_matmul(x, x, bias=jnp.zeros((8,), jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # a2q_quantize
 # ---------------------------------------------------------------------------
@@ -180,6 +248,73 @@ def test_paged_attention_ignores_trash_entries():
     # zero-length rows produce zeros, not NaNs
     z = np.asarray(ops.paged_attention(q, kp, vp, bt, jnp.asarray([0, 6], jnp.int32)))
     assert np.isfinite(z).all() and np.abs(z[0]).max() == 0.0
+
+
+def _q8_pools(rng, NB, bs, KV, Dh):
+    kq = jnp.asarray(rng.integers(-127, 128, (NB, bs, KV, Dh)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, (NB, bs, KV, Dh)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.05, (NB, bs, KV)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.05, (NB, bs, KV)), jnp.float32)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (6, 1)])  # MHA, GQA, MQA
+def test_paged_attention_q8_matches_ref(H, KV):
+    """int8 pools with in-kernel dequant against the jnp q8 oracle."""
+    B, Dh, NB, bs, MB = 3, 32, 16, 8, 4
+    lens = [19, 1, 32]
+    rng = np.random.default_rng(7)
+    kq, vq, ks, vs = _q8_pools(rng, NB, bs, KV, Dh)
+    _, _, bt, ln = _paged_setup(B, KV, Dh, NB, bs, MB, lens)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs)
+    want = ref.ref_paged_attention_q8(q, kq, vq, ks, vs, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_q8_equals_dequantized_fp32_path():
+    """In-kernel dequant is the same arithmetic as dequantizing the pools
+    up front and running the fp32 kernel — the scales commute with the
+    block gather."""
+    B, H, Dh, NB, bs, MB = 2, 4, 16, 8, 4, 3
+    rng = np.random.default_rng(9)
+    kq, vq, ks, vs = _q8_pools(rng, NB, bs, H, Dh)
+    _, _, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [9, 12])
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs)
+    kd = kq.astype(jnp.float32) * ks[..., None]
+    vd = vq.astype(jnp.float32) * vs[..., None]
+    want = ops.paged_attention(q, kd, vd, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_q8_ignores_trash_and_zero_rows():
+    B, H, Dh, NB, bs, MB = 2, 2, 16, 8, 4, 4
+    rng = np.random.default_rng(11)
+    kq, vq, ks, vs = _q8_pools(rng, NB, bs, H, Dh)
+    _, _, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [6, 6])
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    base = np.asarray(ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs))
+    bt2 = np.asarray(bt).copy()
+    bt2[:, 2:] = 7
+    redirected = np.asarray(
+        ops.paged_attention(q, kq, vq, jnp.asarray(bt2), ln, kps=ks, vps=vs)
+    )
+    np.testing.assert_array_equal(base, redirected)
+    z = np.asarray(
+        ops.paged_attention(q, kq, vq, bt, jnp.asarray([0, 6], jnp.int32), kps=ks, vps=vs)
+    )
+    assert np.isfinite(z).all() and np.abs(z[0]).max() == 0.0
+
+
+def test_paged_attention_scale_args_must_pair():
+    B, H, Dh, NB, bs, MB = 1, 2, 16, 4, 4, 2
+    rng = np.random.default_rng(13)
+    kq, vq, ks, _ = _q8_pools(rng, NB, bs, H, Dh)
+    _, _, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [4])
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.paged_attention(q, kq, vq, bt, ln, kps=ks)
 
 
 # ---------------------------------------------------------------------------

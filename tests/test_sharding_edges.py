@@ -294,6 +294,50 @@ def test_owner_dim_prefers_axis_then_free_dim():
     assert server_shape((), 4) == (4,)
 
 
+def test_owner_dim_sees_multi_axis_tuple_fsdp_dims():
+    """Regression (ROADMAP nit): an FSDP dim spelled inside a multi-axis
+    PartitionSpec tuple — P(("pod", "data"), ...) on a multi-pod mesh — must
+    win ownership like the bare spelling does; missing it pushed ownership
+    onto a free dim and cost an extra all-gather per leaf (wire only)."""
+    assert owner_dim(P(("pod", "data"), "model"), 2, "data") == 0
+    assert owner_dim(P("model", ("data", "model2")), 2, "data") == 1
+    assert owner_dim(P(None, ("pod", "data")), 2, "data") == 1
+    # the axis singleton-tuple spelling keeps working
+    assert owner_dim(P(("data",), "model"), 2, "data") == 0
+    # tuples NOT carrying the axis still lose to a later bare/free dim
+    assert owner_dim(P(("pod", "model"), "data"), 2, "data") == 1
+    assert owner_dim(P(("pod", "model"), None), 2, "data") == 1
+
+
+def test_compressed_allreduce_tuple_pspec_numerics():
+    """The multi-axis-tuple owner dim must not change the math: global-view
+    compressed sum with P(("pod", "data"), ...) param layout equals the sum
+    of shard contributions within wire tolerance."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.dist.collectives import compressed_allreduce, server_shape as ss
+
+    devs = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    mesh = Mesh(devs, ("pod", "data", "model"))
+    n = int(mesh.shape["data"])
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(n, 6, 4)), jnp.float32)
+    pspec = P(("pod", "data"), "model")
+    od = owner_dim(pspec, 2, "data")
+    assert od == 0
+    with mesh:
+        total, new_local, new_server = compressed_allreduce(
+            g, jnp.zeros_like(g), jnp.zeros(ss((6, 4), n, od), jnp.float32),
+            mesh=mesh, axis="data", pspec=pspec,
+        )
+    want = np.asarray(g).sum(0)
+    scale = np.abs(np.asarray(g)).max() / 127.0
+    assert np.abs(np.asarray(total) - want).max() <= n * scale + 1e-6
+    assert new_server.shape == ss((6, 4), n, od)
+
+
 def test_resolve_grad_compress_axis_selection():
     cfg = GradCompressConfig(bits=8)
     single = _FakeMesh({"data": 8, "model": 2})
@@ -369,6 +413,53 @@ def test_cache_specs_paged_layout():
     specs_ds = cache_specs(cache_ds, mesh, rules_ds)
     assert specs_ds["0"]["attn"]["ckvp"] == P(None, None, None, None)
     assert specs_ds["0"]["attn"]["kpep"] == P(None, None, None, None)
+
+
+def test_cache_specs_int8_pools_and_scale_leaves():
+    """int8 code pools keep the paged layout specs (dtype is irrelevant to
+    sharding); the per-slot scale pools shard their trailing kv_heads dim
+    over `model` like the codes they scale (GQA) and replicate for MLA —
+    with the usual unit-count fallback."""
+    from repro.serve.paged_cache import init_paged_stack_cache
+
+    mesh = _FakeMesh({"data": 2, "model": 4})
+    arch = get_arch("yi-6b")
+    rules = ShardingRules.default(mesh, arch)
+    cache = jax.eval_shape(
+        lambda: {"0": init_paged_stack_cache(
+            arch, arch.stacks[0], 8, 32, 16, 64, jnp.bfloat16, kv_quant=True
+        )}
+    )
+    specs = cache_specs(cache, mesh, rules)["0"]["attn"]
+    assert cache["0"]["attn"]["kp"].dtype == jnp.int8
+    assert specs["kp"] == P(None, None, None, "model", None)
+    assert specs["kps"] == P(None, None, None, "model")
+    assert specs["vps"] == P(None, None, None, "model")
+
+    # smollm's 3 kv-heads: codes AND scales both fall back to replicated
+    mesh16 = _FakeMesh({"data": 2, "model": 16})
+    sm = get_arch("smollm-135m")
+    rules16 = ShardingRules.default(mesh16, sm)
+    cache_sm = jax.eval_shape(
+        lambda: {"0": init_paged_stack_cache(
+            sm, sm.stacks[0], 8, 32, 16, 64, jnp.bfloat16, kv_quant=True
+        )}
+    )
+    specs_sm = cache_specs(cache_sm, mesh16, rules16)["0"]["attn"]
+    assert specs_sm["kp"] == P(None, None, None, None, None)
+    assert specs_sm["kps"] == P(None, None, None, None)
+
+    # MLA latent scale pools carry nothing shardable
+    ds = get_arch("deepseek-v3-671b")
+    rules_ds = ShardingRules.default(mesh, ds)
+    mla = next(s for s in ds.stacks if s.attn is not None and s.attn.kind == "mla")
+    cache_ds = jax.eval_shape(
+        lambda: {"0": init_paged_stack_cache(ds, mla, 8, 32, 16, 64, jnp.bfloat16, kv_quant=True)}
+    )
+    specs_ds = cache_specs(cache_ds, mesh, rules_ds)["0"]["attn"]
+    assert cache_ds["0"]["attn"]["ckvp"].dtype == jnp.int8
+    assert specs_ds["ckvs"] == P(None, None, None)
+    assert specs_ds["kpes"] == P(None, None, None)
 
 
 def test_make_state_specs_and_init_grad_err_layout():
