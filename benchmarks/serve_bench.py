@@ -1,20 +1,25 @@
 """Serving benchmark: contiguous per-token-prefill baseline vs the paged
-engine (fp32 and int8 KV blocks) on a mixed-length workload.
+engine family (fp32 / int8 KV blocks / prefix sharing / speculative
+decoding) on a mixed-length workload with a shared-prefix cohort.
 
 Reports continuous-batching throughput (tok/s, split prefill vs decode) and
-per-request end-to-end latency p50/p99 for all three engines, the paged
-engine's peak KV block usage vs the contiguous engine's fixed
-``batch x max_seq`` footprint, and the KV bytes-per-token the int8 block
-pools save (~4x: int8 codes + one fp32 scale per head-slot vs fp32 values).
-The int8 engine's greedy tokens are held to the parity bound (token-identical
-up to sub-margin quantization ties — see ``launch/serve.py``).  Prints a CSV
-like the other ``benchmarks/`` modules and returns a headline dict
-(``run.py``-aggregatable); ``--json`` writes the same dict to disk.
+per-request end-to-end latency p50/p99 for every engine, the paged engine's
+peak KV block usage vs the contiguous engine's fixed ``batch x max_seq``
+footprint, the KV bytes-per-token the int8 block pools save (~4x), the
+prompt tokens the prefix-sharing engine served from shared blocks (plus its
+CoW copy count), and the speculative engine's acceptance rate.  The int8
+engine's greedy tokens are held to the parity bound (token-identical up to
+sub-margin quantization ties — see ``launch/serve.py``); the prefix-sharing
+and speculative engines must match the plain paged engine token-for-token.
+Prints a CSV like the other ``benchmarks/`` modules and returns a headline
+dict (``run.py``-aggregatable); ``--json`` writes the same dict to disk.
 
 Wall-clock on CPU/interpret is not TPU-meaningful in absolute terms, but the
-*relative* contiguous-vs-paged comparison is structural: the baseline spends
-one jit call per prompt token while the paged engine batches whole chunks,
-and that ratio survives any backend.
+*relative* comparisons are structural: the baseline spends one jit call per
+prompt token while the paged engine batches whole chunks; the speculative
+engine replaces k + 1 decode dispatches with two (a k-step draft scan + one
+batched verify); prefix sharing skips recomputing the shared cohort's
+common prompt altogether.  Those ratios survive any backend.
 """
 
 from __future__ import annotations
@@ -29,6 +34,7 @@ from repro.configs import get_arch, reduced
 from repro.models.lm import init_lm
 from repro.nn.module import unbox
 from repro.serve.engine import PagedServeEngine, Request, ServeEngine, parity_up_to_ties
+from repro.serve.spec import SpecServeEngine
 
 
 def _percentiles(reqs) -> dict:
@@ -77,15 +83,23 @@ def _drive_paged(engine, reqs):
 
 
 def _workload(rng, arch, n, max_new):
-    """Mixed-length prompts: the regime where per-token prefill hurts most and
-    paged memory reuse matters (short and long requests share slots).  Prompt
-    lengths dominate generation lengths, as in real serving traffic."""
+    """Mixed-length prompts with a shared-prefix cohort: the regime where
+    per-token prefill hurts most and paged memory reuse matters (short and
+    long requests share slots).  Half the requests open with one common
+    21-token prompt prefix — the common-system-prompt pattern; 21 is
+    deliberately NOT a block multiple, so adopters write their own tokens
+    into the divergence-partial shared block and the CoW path is
+    *measurable* (served-from-shared-blocks tokens, CoW copies), not just
+    asserted.  Prompt lengths dominate generation lengths, as in real
+    serving traffic."""
+    common = rng.integers(0, arch.vocab, (21,)).astype(np.int32)
     lens = rng.integers(8, 49, size=n)
-    return [
-        Request(uid=i, prompt=rng.integers(0, arch.vocab, (int(L),)).astype(np.int32),
-                max_new=max_new)
-        for i, L in enumerate(lens)
-    ]
+    out = []
+    for i, L in enumerate(lens):
+        tail = rng.integers(0, arch.vocab, (int(L),)).astype(np.int32)
+        prompt = np.concatenate([common, tail[: max(int(L) - 21, 4)]]) if i % 2 else tail
+        out.append(Request(uid=i, prompt=prompt, max_new=max_new))
+    return out
 
 
 def run(
@@ -101,38 +115,51 @@ def run(
 ) -> dict:
     arch = reduced(get_arch(arch_name))
     params = unbox(init_lm(jax.random.PRNGKey(seed), arch))
+    spec_k = 3
+    spec_ok = not any(s.kind in ("rwkv6", "hymba") for s in arch.stacks)
 
     def workload():  # identical draw for every engine / pass
         return _workload(np.random.default_rng(seed), arch, requests, max_new)
 
     contig = ServeEngine(arch, params, batch=batch, max_seq=max_seq)
-    paged = PagedServeEngine(
-        arch, params, batch=batch, max_seq=max_seq,
-        block_size=block_size, prefill_chunk=prefill_chunk, num_blocks=num_blocks,
-    )
-    paged_q8 = PagedServeEngine(
-        arch, params, batch=batch, max_seq=max_seq,
-        block_size=block_size, prefill_chunk=prefill_chunk, num_blocks=num_blocks,
-        kv_quant=True,
-    )
+    pkw = dict(batch=batch, max_seq=max_seq, block_size=block_size,
+               prefill_chunk=prefill_chunk, num_blocks=num_blocks)
+    paged = PagedServeEngine(arch, params, **pkw)
+    paged_q8 = PagedServeEngine(arch, params, kv_quant=True, **pkw)
+    paged_px = PagedServeEngine(arch, params, prefix_share=True, **pkw)
+    spec = (SpecServeEngine(arch, params, spec_k=spec_k, **pkw)
+            if spec_ok else None)
+    engines = [e for e in (contig, paged, paged_q8, paged_px, spec) if e is not None]
     # Warmup pass covers every jit shape (the paged engine compiles one
     # prefill per distinct chunk length), so the timed pass measures
     # steady-state serving throughput rather than XLA compile time.
     _drive_contiguous(contig, workload())
-    _drive_paged(paged, workload())
-    _drive_paged(paged_q8, workload())
-    for e in (contig, paged, paged_q8):
+    for e in engines[1:]:
+        _drive_paged(e, workload())
+    for e in engines:
         e.reset_stats()
-    paged.cache.peak_blocks = 0
-    paged_q8.cache.peak_blocks = 0
+        if isinstance(e, PagedServeEngine):
+            e.cache.peak_blocks = 0
+            e.cache.prefix_hits = e.cache.prefix_hit_tokens = e.cache.cow_copies = 0
 
-    reqs_c, reqs_p, reqs_q = workload(), workload(), workload()
+    reqs_c, reqs_p, reqs_q, reqs_x = (workload() for _ in range(4))
     _drive_contiguous(contig, reqs_c)
     _drive_paged(paged, reqs_p)
     _drive_paged(paged_q8, reqs_q)
+    _drive_paged(paged_px, reqs_x)
+    reqs_s = None
+    if spec is not None:
+        reqs_s = workload()
+        _drive_paged(spec, reqs_s)
 
     assert [r.generated for r in reqs_c] == [r.generated for r in reqs_p], \
         "engines diverged on the benchmark workload"
+    # prefix sharing and speculative decoding are lossless: exact parity
+    assert [r.generated for r in reqs_x] == [r.generated for r in reqs_p], \
+        "prefix-sharing engine diverged"
+    if reqs_s is not None:
+        assert [r.generated for r in reqs_s] == [r.generated for r in reqs_p], \
+            "speculative engine diverged from plain greedy decode"
     # int8 KV is lossy: hold it to the parity bound instead of bit equality
     ok, ties, detail = parity_up_to_ties(
         reqs_p, [r.generated for r in reqs_q], eps=0.05
@@ -145,6 +172,7 @@ def run(
         "contiguous": _stats_row(contig, reqs_c),
         "paged": _stats_row(paged, reqs_p),
         "paged_int8_kv": _stats_row(paged_q8, reqs_q),
+        "paged_prefix_share": _stats_row(paged_px, reqs_x),
         # fixed lanes vs token-proportional blocks (same dtype, so the slot
         # count ratio is the memory ratio for the seq-indexed leaves)
         "contiguous_cache_slots": batch * max_seq,
@@ -154,7 +182,25 @@ def run(
         "kv_bytes_per_token_fp32": paged.cache.kv_bytes_per_token(),
         "kv_bytes_per_token_int8": paged_q8.cache.kv_bytes_per_token(),
         "int8_kv_sub_margin_ties": ties,
+        # prefix sharing: prompt tokens served straight from shared blocks
+        # (never recomputed) and the CoW copies that kept writers honest
+        "prefix_hits": paged_px.cache.prefix_hits,
+        "prefix_hit_tokens": paged_px.cache.prefix_hit_tokens,
+        "prefix_cow_copies": paged_px.cache.cow_copies,
     }
+    if spec is not None:
+        out["spec"] = _stats_row(spec, reqs_s)
+        out["spec_k"] = spec_k
+        out["spec_acceptance_rate"] = spec.acceptance_rate()
+        out["spec_rounds"] = spec.spec_stats["rounds"]
+        out["spec_decode_speedup"] = (
+            out["spec"]["decode_tok_s"] / out["paged"]["decode_tok_s"]
+            if out["paged"]["decode_tok_s"] > 0 else float("inf")
+        )
+        out["spec_throughput_speedup"] = (
+            out["spec"]["tok_s"] / out["paged"]["tok_s"]
+            if out["paged"]["tok_s"] > 0 else float("inf")
+        )
     # recurrent archs (rwkv6) have no seq-indexed pools at all — nothing to
     # quantize, both byte counts are 0, ratio is the identity
     out["kv_bytes_ratio"] = (
@@ -178,7 +224,10 @@ def run(
     )
 
     print("engine,tok_s,prefill_tok_s,decode_tok_s,latency_p50_s,latency_p99_s")
-    for name in ("contiguous", "paged", "paged_int8_kv"):
+    rows = ["contiguous", "paged", "paged_int8_kv", "paged_prefix_share"]
+    if "spec" in out:
+        rows.append("spec")
+    for name in rows:
         r = out[name]
         print(f"{name},{r['tok_s']:.1f},{r['prefill_tok_s']:.1f},{r['decode_tok_s']:.1f},"
               f"{r['latency_p50_s']:.3f},{r['latency_p99_s']:.3f}")
@@ -187,6 +236,12 @@ def run(
     print(f"kv_bytes_per_token,{out['kv_bytes_per_token_fp32']}B fp32,"
           f"{out['kv_bytes_per_token_int8']}B int8,ratio {out['kv_bytes_ratio']:.2f}x,"
           f"decode_ratio {out['int8_kv_decode_ratio']:.2f}")
+    print(f"prefix_share,hits {out['prefix_hits']},shared_tokens "
+          f"{out['prefix_hit_tokens']},cow_copies {out['prefix_cow_copies']}")
+    if "spec" in out:
+        print(f"spec,k {out['spec_k']},acceptance {out['spec_acceptance_rate']:.2f},"
+              f"decode_speedup {out['spec_decode_speedup']:.2f},"
+              f"throughput_speedup {out['spec_throughput_speedup']:.2f}")
     return out
 
 

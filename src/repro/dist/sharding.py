@@ -217,13 +217,28 @@ def cache_specs(cache_tree, mesh, rules: ShardingRules):
     ``model`` exactly like the code pools they scale (a TP shard must hold
     the scales for its own heads); MLA ``ckvs``/``kpes`` ``(layers, NB, bs)``
     carry nothing shardable and replicate.
+
+    Allocator bookkeeping leaves (``PagedKVCache.device_state``): the write
+    watermarks ``wm (slots,)`` ride with the batch axes like the block table
+    row they describe; the block refcounts ``rc (num_blocks,)`` replicate —
+    copy-on-write decisions need the whole allocator state on every shard,
+    mirroring the block axis being local in the pools.
     """
 
     def one(path, leaf):
-        if leaf.ndim < 2:
-            return P(*([None] * leaf.ndim))
         keys = [k.key for k in path if hasattr(k, "key")]
         name = keys[-1] if keys else None
+        if name == "wm":
+            # per-slot write watermarks (speculative rollback bookkeeping):
+            # one scalar per sequence — rides with the batch like the table
+            return resolve_pspec(("batch",) + (None,) * (leaf.ndim - 1), leaf.shape, mesh, rules)
+        if name == "rc":
+            # per-block refcounts (CoW/prefix-sharing bookkeeping): block
+            # axis is local like the pools it counts — every shard must see
+            # the whole allocator state, so it replicates
+            return P(*([None] * leaf.ndim))
+        if leaf.ndim < 2:
+            return P(*([None] * leaf.ndim))
         if name == "bt":
             return resolve_pspec(("batch",) + (None,) * (leaf.ndim - 1), leaf.shape, mesh, rules)
         if name in ("kp", "vp", "ckvp", "kpep", "kps", "vps", "ckvs", "kpes"):

@@ -192,6 +192,7 @@ def paged_attention(
     kps: Optional[jnp.ndarray] = None,
     vps: Optional[jnp.ndarray] = None,
     scale: Optional[float] = None,
+    window: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Paged-attention decode: one query token per row against block-table
@@ -202,12 +203,17 @@ def paged_attention(
 
     ``kps``/``vps`` (``(NB, bs, KV)`` fp32): the pools are int8 and the
     kernel dequantizes in-register.  Oracle: ``ref.ref_paged_attention_q8``.
+
+    ``window``: sliding-window masking — each row attends keys at
+    ``kpos >= length - window`` only (windowed-decode kernel coverage).
     """
     B, H, Dh = q.shape
     KV = kp.shape[2]
     G = H // KV
     if (kps is None) != (vps is None):
         raise ValueError("paged_attention: kps and vps must be given together")
+    if window is not None and window < 1:
+        raise ValueError("paged_attention: window must be >= 1")
     out = paged_attention_pallas(
         q.reshape(B, KV, G, Dh),
         kp,
@@ -217,6 +223,7 @@ def paged_attention(
         kps,
         vps,
         scale=scale,
+        window=window,
         interpret=_default_interpret(interpret),
     )
     return out.reshape(B, H, Dh)

@@ -52,6 +52,7 @@ def paged_attention_kernel(
     block_size: int,
     mb_steps: int,
     quantized: bool,
+    window: Optional[int] = None,
 ):
     if quantized:
         ks_ref, vs_ref = rest[0], rest[1]  # (1, bs, 1) fp32 per-slot scales
@@ -76,13 +77,19 @@ def paged_attention_kernel(
 
     length = len_ref[b]
     kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
-    s = jnp.where(kpos < length, s, _NEG_INF)  # (G, bs) via broadcast
+    valid = kpos < length
+    if window is not None:
+        # the single decode query sits at position length - 1; a sliding
+        # window admits keys in (length - 1 - window, length - 1], i.e.
+        # kpos >= length - window
+        valid &= kpos >= length - window
+    s = jnp.where(valid, s, _NEG_INF)  # (G, bs) via broadcast
 
     m_prev = m_ref[...]  # (G, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new)
-    p = jnp.where(kpos < length, p, 0.0)
+    p = jnp.where(valid, p, 0.0)
     l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
     m_ref[...] = m_new
     v = v_ref[0, :, 0].astype(jnp.float32)
@@ -111,13 +118,17 @@ def paged_attention_pallas(
     vps: Optional[jnp.ndarray] = None,
     *,
     scale: Optional[float] = None,
+    window: Optional[int] = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns ``(B, KV, G, Dh)`` attention outputs for one decode token per
     row.  ``lengths`` counts valid tokens (including this step's freshly
     written one); table entries past a row's length may point anywhere — they
     are loaded and fully masked.  ``kps``/``vps`` given => ``kp``/``vp`` are
-    int8 pools dequantized in-kernel against the per-slot scales."""
+    int8 pools dequantized in-kernel against the per-slot scales.
+    ``window`` masks to the sliding window ending at the query position
+    (keys at ``kpos >= length - window``) — the windowed-decode coverage for
+    ring/sliding-window archs."""
     B, KV, G, Dh = q.shape
     NB, bs, _, _ = kp.shape
     MB = bt.shape[1]
@@ -127,7 +138,7 @@ def paged_attention_pallas(
 
     kernel = functools.partial(
         paged_attention_kernel, scale=scale, block_size=bs, mb_steps=MB,
-        quantized=quantized,
+        quantized=quantized, window=window,
     )
     pool_spec = pl.BlockSpec(
         (1, bs, 1, Dh), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)

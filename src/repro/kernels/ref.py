@@ -168,6 +168,7 @@ def ref_paged_attention(
     bt: jnp.ndarray,  # (B, MB) int32 block table
     lengths: jnp.ndarray,  # (B,) int32 valid tokens per row
     scale: Optional[float] = None,
+    window: Optional[int] = None,
 ) -> jnp.ndarray:
     """Paged-attention decode oracle: gather the per-row contiguous K/V view
     through the block table, then dense fp32 softmax over the valid prefix.
@@ -175,7 +176,9 @@ def ref_paged_attention(
     One query token per row (decode); ``lengths`` includes the current step's
     token.  GQA: ``H = KV * G`` query heads share each KV head.  Rows with
     ``lengths == 0`` return zeros (masked denominator guard), matching the
-    kernel's flush semantics.
+    kernel's flush semantics.  ``window`` restricts each row to the sliding
+    window ending at its query position: keys at ``kpos >= length - window``
+    (the query sits at ``length - 1``).
     """
     B, H, Dh = q.shape
     NB, bs, KV, _ = kp.shape
@@ -187,7 +190,10 @@ def ref_paged_attention(
     v = vp[bt].reshape(B, MB * bs, KV, Dh).astype(jnp.float32)
     qg = q.reshape(B, KV, G, Dh).astype(jnp.float32) * scale
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k)
-    valid = jnp.arange(MB * bs)[None, :] < lengths[:, None]  # (B, S)
+    kpos = jnp.arange(MB * bs)[None, :]
+    valid = kpos < lengths[:, None]  # (B, S)
+    if window is not None:
+        valid &= kpos >= lengths[:, None] - window
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
@@ -206,6 +212,7 @@ def ref_paged_attention_q8(
     bt: jnp.ndarray,  # (B, MB) int32 block table
     lengths: jnp.ndarray,  # (B,) int32
     scale: Optional[float] = None,
+    window: Optional[int] = None,
 ) -> jnp.ndarray:
     """int8-pool paged-attention oracle: dequantize the pools against their
     per-slot scales (one fp32 scalar per token-slot per KV head, stored in the
@@ -215,7 +222,7 @@ def ref_paged_attention_q8(
     tolerance, not bit-exact."""
     kd = kp.astype(jnp.float32) * kps.astype(jnp.float32)[..., None]
     vd = vp.astype(jnp.float32) * vps.astype(jnp.float32)[..., None]
-    return ref_paged_attention(q, kd, vd, bt, lengths, scale=scale)
+    return ref_paged_attention(q, kd, vd, bt, lengths, scale=scale, window=window)
 
 
 def ref_rwkv6(

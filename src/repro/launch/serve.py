@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --requests 6 --prompt-len 12 --max-new 8 \
         [--paged --block-size 16 --prefill-chunk 32] [--deploy-int8] \
-        [--int-forward] [--kv-int8] \
+        [--int-forward] [--kv-int8 [--kv-bits 4]] [--prefix-share] \
+        [--spec-k 4 [--spec-draft self-int8|<config>]] \
         [--sample topk --temperature 0.8 --top-k 40] [--parity-check]
 
 ``--paged`` serves through :class:`PagedServeEngine` (block-table KV cache,
@@ -12,11 +13,23 @@ chunked prefill, on-device sampling); the default is the contiguous baseline.
 serving (the paper-guaranteed deployment artifact).  ``--int-forward``
 (implies ``--deploy-int8``) runs those deployed linears through the fused
 W8A8 integer kernel instead of dequant + float dot; ``--kv-int8`` stores the
-paged KV pools as int8 blocks with per-slot scales (~4x KV bytes/token).
+paged KV pools as integer blocks with per-slot scales (~4x KV bytes/token at
+the default ``--kv-bits 8``; ``--kv-bits 4`` packs two codes per byte).
+``--prefix-share`` dedups common prompt prefixes through the refcounted
+copy-on-write block registry.
+
+``--spec-k K`` serves through :class:`SpecServeEngine`: K tokens drafted per
+round (default drafter ``self-int8`` — the same weights on the integer fast
+path — or a named config, e.g. ``--spec-draft smollm-135m``, as a separate
+small draft model), verified in one batched call, greedy output token-
+identical to plain decode.  Archs with ring/recurrent state (no rollback)
+refuse spec mode cleanly and fall back to plain paged decode.
+
 ``--parity-check`` runs the configured engine AND the float dequant
 contiguous baseline greedily on the same workload and fails unless their
-outputs are token-identical — the CI serve-smoke gate, covering the full
-integer path (int8 weights, W8A8 matmuls, int8 KV) against float truth.
+outputs are token-identical — the CI serve-smoke/spec-smoke gate, covering
+the full integer path (int8 weights, W8A8 matmuls, int8 KV) and the
+speculative path against float truth.
 
 Throughput is reported split into prefill and decode (one aggregate tok/s
 hides that prefill dominates mixed-length workloads).
@@ -35,6 +48,22 @@ from repro.models.lm import Runtime, init_lm
 from repro.nn.module import unbox
 from repro.serve.engine import PagedServeEngine, ServeEngine, deploy_params, parity_up_to_ties
 from repro.serve.sampling import SampleConfig
+
+
+def _spec_report(engine) -> dict:
+    """Speculative-decoding stats block (active=False => clean fallback)."""
+    out = {
+        "active": engine.spec_active() or engine.spec_stats["rounds"] > 0,
+        "supported": engine.spec_supported,
+        "k": engine.spec_k,
+        "acceptance_rate": engine.acceptance_rate(),
+        **engine.spec_stats,
+    }
+    tag = "speculative" if out["supported"] else "speculative UNSUPPORTED (plain fallback)"
+    print(f"[{tag}] k={out['k']} rounds={out['rounds']} "
+          f"acceptance={out['acceptance_rate']:.2f} bonus={out['bonus']} "
+          f"fallback_rounds={out['fallback_rounds']}")
+    return out
 
 
 def _report(tag: str, engine) -> dict:
@@ -61,7 +90,16 @@ def main(argv=None):
     ap.add_argument("--int-forward", action="store_true",
                     help="fused W8A8 integer matmuls for deployed layers (implies --deploy-int8)")
     ap.add_argument("--kv-int8", action="store_true",
-                    help="int8 paged KV blocks with per-slot scales")
+                    help="integer paged KV blocks with per-slot scales")
+    ap.add_argument("--kv-bits", type=int, choices=(8, 4), default=8,
+                    help="KV code width with --kv-int8 (4 packs two codes per byte)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="dedup common prompt prefixes via the CoW block registry")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens per round (0 = off)")
+    ap.add_argument("--spec-draft", default="self-int8",
+                    help="drafter: 'self-int8' (same weights, integer fast path) "
+                         "or a config name for a small draft model")
     ap.add_argument("--paged", action="store_true", help="serve via PagedServeEngine")
     ap.add_argument("--block-size", type=int, default=16, help="paged KV tokens per block")
     ap.add_argument("--prefill-chunk", type=int, default=32, help="prompt tokens per prefill jit call")
@@ -87,10 +125,18 @@ def main(argv=None):
                 ("--decode-kernel", args.decode_kernel),
                 ("--kv-int8", args.kv_int8),
                 ("--num-blocks", args.num_blocks is not None),
+                ("--spec-k", args.spec_k > 0),
+                ("--prefix-share", args.prefix_share),
             ) if on
         ]
         if wanted:
             ap.error(f"{', '.join(wanted)} only affect the paged engine; add --paged")
+    if args.kv_bits != 8 and not args.kv_int8:
+        ap.error("--kv-bits only affects integer KV blocks; add --kv-int8")
+    if args.spec_draft != "self-int8" and args.spec_k == 0:
+        ap.error("--spec-draft only affects speculative decoding; add --spec-k")
+    if args.spec_k > 0 and args.sample != "greedy":
+        ap.error("--spec-k is lossless for greedy decoding only")
 
     arch = get_arch(args.arch)
     if args.reduced:
@@ -118,17 +164,41 @@ def main(argv=None):
         decode_kernel = False
 
     def paged_engine():
-        return PagedServeEngine(
-            arch, params, batch=args.batch, max_seq=args.max_seq,
+        kw = dict(
+            batch=args.batch, max_seq=args.max_seq,
             block_size=args.block_size, prefill_chunk=args.prefill_chunk,
             num_blocks=args.num_blocks, sample=sample, seed=args.seed,
-            kv_quant=args.kv_int8,
+            kv_quant=args.kv_int8, kv_bits=args.kv_bits,
+            prefix_share=args.prefix_share,
             rt=Runtime(decode_kernel=decode_kernel, int_forward=args.int_forward),
         )
+        if args.spec_k > 0:
+            from repro.serve.spec import ModelDrafter, SpecServeEngine
+
+            drafter = None
+            if args.spec_draft != "self-int8":
+                darch = get_arch(args.spec_draft)
+                if args.reduced:
+                    darch = reduced(darch)
+                if darch.vocab != arch.vocab:
+                    raise SystemExit(
+                        f"draft config {args.spec_draft} vocab {darch.vocab} != "
+                        f"target vocab {arch.vocab}"
+                    )
+                dparams = unbox(init_lm(jax.random.PRNGKey(args.seed + 1), darch))
+                drafter = ModelDrafter(
+                    darch, dparams, slots=args.batch, max_seq=args.max_seq,
+                    spec_k=args.spec_k, block_size=args.block_size,
+                    prefill_chunk=args.prefill_chunk,
+                )
+            return SpecServeEngine(arch, params, spec_k=args.spec_k, drafter=drafter, **kw)
+        return PagedServeEngine(arch, params, **kw)
 
     report: dict = {
         "arch": args.arch, "paged": bool(args.paged or args.parity_check),
         "int_forward": args.int_forward, "kv_int8": args.kv_int8,
+        "kv_bits": args.kv_bits if args.kv_int8 else None,
+        "spec_k": args.spec_k, "prefix_share": args.prefix_share,
     }
     if args.parity_check:
         # the baseline stays on the float truth path: dequant matmuls
@@ -151,6 +221,8 @@ def main(argv=None):
         report["contiguous"] = _report("contiguous", contig)
         report["paged_engine"] = _report("paged", pagede)
         report["kv_bytes_per_token"] = pagede.cache.kv_bytes_per_token()
+        if args.spec_k > 0:
+            report["spec"] = _spec_report(pagede)
         if args.kv_int8:
             # int8 KV is lossy: token parity holds up to quantization ties
             # (see serve.engine.parity_up_to_ties and serve/README.md "parity bound")
@@ -181,6 +253,15 @@ def main(argv=None):
               f"{' (int8 blocks)' if args.kv_int8 else ''}")
         report["paged_peak_blocks"] = cache.peak_blocks
         report["kv_bytes_per_token"] = cache.kv_bytes_per_token()
+        if args.prefix_share:
+            print(f"prefix sharing: {cache.prefix_hits} hits, "
+                  f"{cache.prefix_hit_tokens} prompt tokens served from shared "
+                  f"blocks, {cache.cow_copies} CoW copies")
+            report["prefix_hits"] = cache.prefix_hits
+            report["prefix_hit_tokens"] = cache.prefix_hit_tokens
+            report["cow_copies"] = cache.cow_copies
+        if args.spec_k > 0:
+            report["spec"] = _spec_report(engine)
     else:
         # the contiguous engine honors --int-forward too (apply_lm threads it
         # through the contiguous cache path) — without this the flag would be

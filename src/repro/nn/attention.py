@@ -267,17 +267,35 @@ def _paged_kpos(positions: jnp.ndarray, S: int) -> jnp.ndarray:
     return jnp.where(ar < new_len[:, None], ar, -1)
 
 
-def _kv_quantize(val: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Symmetric int8 quantization of a K/V update along its feature dim:
-    ``val (B, T, ..., D)`` -> (codes int8, per-``(B, T, ...)`` fp32 scales).
-    One scale per written token (per KV head for GQA pools, per latent row
-    for MLA), absmax-calibrated — the write is the only time the fp value
-    exists, so quantize-on-write is the whole encoder."""
+def _kv_quantize(val: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric ``bits``-bit quantization of a K/V update along its feature
+    dim: ``val (B, T, ..., D)`` -> (codes int8 in [-qmax, qmax], per-
+    ``(B, T, ...)`` fp32 scales).  One scale per written token (per KV head
+    for GQA pools, per latent row for MLA), absmax-calibrated — the write is
+    the only time the fp value exists, so quantize-on-write is the whole
+    encoder."""
+    qmax = (1 << (bits - 1)) - 1  # 127 (int8) or 7 (int4)
     vf = val.astype(jnp.float32)
     amax = jnp.max(jnp.abs(vf), axis=-1)
-    scale = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / 127.0
-    codes = jnp.clip(jnp.round(vf / scale[..., None]), -127, 127).astype(jnp.int8)
+    scale = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / qmax
+    codes = jnp.clip(jnp.round(vf / scale[..., None]), -qmax, qmax).astype(jnp.int8)
     return codes, scale
+
+
+def _pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """int4 codes ``(..., D)`` (int8 values in [-7, 7]) -> packed uint8
+    ``(..., D // 2)``: element 2i in the low nibble, 2i+1 in the high."""
+    u = codes.astype(jnp.uint8) & 0xF
+    return (u[..., 0::2] | (u[..., 1::2] << 4)).astype(jnp.uint8)
+
+
+def _unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """Packed uint8 ``(..., D // 2)`` -> sign-extended int32 ``(..., D)``."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    se = lambda x: (x ^ 8) - 8  # 4-bit two's-complement sign extension
+    out = jnp.stack([se(lo), se(hi)], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
 
 
 def _paged_write_q8(
@@ -287,16 +305,27 @@ def _paged_write_q8(
     bt: jnp.ndarray,
     abs_pos: jnp.ndarray,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Quantize-on-write into an int8 pool + its per-slot scale pool."""
-    codes, s = _kv_quantize(val)
+    """Quantize-on-write into an integer pool + its per-slot scale pool.
+    An int8 pool stores the codes directly; a uint8 pool is the packed int4
+    layout (two codes per byte, half the feature width) — detected by dtype,
+    so the scale-pool machinery is byte-width agnostic."""
+    if pool.dtype == jnp.uint8:
+        codes, s = _kv_quantize(val, bits=4)
+        codes = _pack_nibbles(codes)
+    else:
+        codes, s = _kv_quantize(val, bits=8)
     return _paged_write(pool, codes, bt, abs_pos), _paged_write(scales, s, bt, abs_pos)
 
 
 def _paged_gather_deq(pool: jnp.ndarray, scales: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
-    """Gathered contiguous view of an int8 pool, dequantized against its
+    """Gathered contiguous view of an integer pool, dequantized against its
     per-slot scales (fp32) — the portable read path and the oracle layout for
-    the q8 decode kernel."""
-    return _paged_gather(pool, bt).astype(jnp.float32) * _paged_gather(scales, bt)[..., None]
+    the q8 decode kernel.  uint8 pools are the packed int4 layout and are
+    unpacked before the rescale."""
+    g = _paged_gather(pool, bt)
+    if pool.dtype == jnp.uint8:
+        g = _unpack_nibbles(g)
+    return g.astype(jnp.float32) * _paged_gather(scales, bt)[..., None]
 
 
 def apply_attention(
@@ -359,12 +388,19 @@ def apply_attention(
                 "kp": _paged_write(cache["kp"], kh, bt, positions),
                 "vp": _paged_write(cache["vp"], vh, bt, positions),
             }
-        if decode_kernel and T == 1 and a.causal and a.window is None and a.chunk is None:
+        kernel_ok = (
+            decode_kernel and T == 1 and a.causal and a.chunk is None
+            # packed int4 pools stay on the gathered dequant path (the kernel
+            # DMAs int8 codes); windowed decode is covered via the kernel's
+            # window mask
+            and (not quant or cache["kp"].dtype == jnp.int8)
+        )
+        if kernel_ok:
             from repro.kernels import ops
 
             out = ops.paged_attention(
                 qh[:, 0], new_cache["kp"], new_cache["vp"], bt, positions[:, 0] + 1,
-                kps=new_cache.get("kps"), vps=new_cache.get("vps"),
+                kps=new_cache.get("kps"), vps=new_cache.get("vps"), window=a.window,
             )[:, None]
         else:
             if quant:

@@ -8,3 +8,4 @@ from repro.serve.engine import (  # noqa: F401
 from repro.serve.paged_cache import PagedKVCache  # noqa: F401
 from repro.serve.sampling import SampleConfig, sample_tokens  # noqa: F401
 from repro.serve.scheduler import Scheduler, ServeRequest  # noqa: F401
+from repro.serve.spec import ModelDrafter, SelfDrafter, SpecServeEngine  # noqa: F401

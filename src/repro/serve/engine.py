@@ -355,10 +355,17 @@ class PagedServeEngine(_StatsMixin):
     ``max_seq``); admission stalls — never crashes — when blocks run out,
     resuming as finished sequences release theirs.
 
-    ``kv_quant=True`` stores seq-indexed K/V as int8 blocks with per-slot
+    ``kv_quant=True`` stores seq-indexed K/V as integer blocks with per-slot
     fp32 scales (``serve/paged_cache.py``): ~4x less KV HBM per live token
-    and ~4x less decode read bandwidth, at a bounded quantization error the
-    parity gates bound to greedy-token agreement on the reduced archs.
+    and ~4x less decode read bandwidth at ``kv_bits=8`` (int8 codes; ~6-7x
+    at ``kv_bits=4``, two packed codes per byte), at a bounded quantization
+    error the parity gates bound to greedy-token agreement on reduced archs.
+
+    ``prefix_share=True`` dedups common prompt prefixes across requests via
+    the cache's prefix registry: admission adopts the longest registered
+    matching block run (refcounted, copy-on-write on any later write into a
+    shared block) and prefill skips the adopted tokens entirely.  Only
+    fully paged archs participate (the registry refuses otherwise).
     """
 
     def __init__(
@@ -375,6 +382,8 @@ class PagedServeEngine(_StatsMixin):
         sample: Optional[SampleConfig] = None,
         lockstep: Optional[bool] = None,
         kv_quant: bool = False,
+        kv_bits: int = 8,
+        prefix_share: bool = False,
         bos_id: int = 0,
         seed: int = 0,
     ):
@@ -389,7 +398,9 @@ class PagedServeEngine(_StatsMixin):
         self.cache = PagedKVCache(
             arch, batch, block_size=block_size, num_blocks=num_blocks,
             max_seq=max_seq, dtype=jnp.dtype(arch.compute_dtype), kv_quant=kv_quant,
+            kv_bits=kv_bits,
         )
+        self.prefix_share = prefix_share and self.cache.fully_paged
         self.sched = Scheduler(
             batch, prefill_chunk=prefill_chunk,
             lockstep=bool(lockstep) if lockstep is not None else False,
@@ -434,9 +445,21 @@ class PagedServeEngine(_StatsMixin):
 
     # -- request lifecycle --------------------------------------------------
 
+    def _slot_tokens(self, req: Request) -> int:
+        """Worst-case cache positions a request may write (subclasses add
+        headroom — e.g. the speculative engine's rejected-draft span)."""
+        return len(req.prompt) + req.max_new
+
+    def _release_slot(self, slot: int) -> None:
+        """Finished-request teardown (subclasses add drafter state)."""
+        self.cache.release(slot)
+
+    def _on_admitted(self, slot: int, req: Request) -> None:
+        """Post-prefill hook for subclasses (drafter admission)."""
+
     def submit(self, req: Request) -> None:
         req.prompt = _normalize_prompt(req.prompt, self.bos_id)
-        total = len(req.prompt) + req.max_new
+        total = self._slot_tokens(req)
         if total > self.max_seq:
             raise ValueError(f"request needs {total} positions > max_seq={self.max_seq}")
         if self.cache.blocks_needed(total) > self.cache.num_blocks - 1:
@@ -448,12 +471,17 @@ class PagedServeEngine(_StatsMixin):
         worst-case blocks against the same free pool, so a round can never
         jointly over-commit what ``allocate`` will actually hand out (two
         requests that fit individually but not together must stall the
-        second, not crash it)."""
-        budget = self.cache.free_blocks
+        second, not crash it).  Prefix adoption only ever *reduces* a
+        request's fresh-block draw (a copy-on-write fault consumes a block
+        the sequence would otherwise have allocated outright), so the
+        worst-case reservation stays sound with sharing on.  Registry-pinned
+        prefix blocks count as capacity: ``allocate`` reclaims them (FIFO
+        eviction) before it ever fails."""
+        budget = self.cache.free_blocks + self.cache.reclaimable_blocks()
 
         def can_admit(req: Request) -> bool:
             nonlocal budget
-            need = self.cache.blocks_needed(len(req.prompt) + req.max_new)
+            need = self.cache.blocks_needed(self._slot_tokens(req))
             if need > budget:
                 return False
             budget -= need
@@ -465,12 +493,21 @@ class PagedServeEngine(_StatsMixin):
         """Isolated chunked prefill: whole prompt chunks through a B=1 cache
         view of this slot — other live rows' caches and recurrent states are
         never touched, so admission composes with continuous batching on
-        every arch (incl. recurrent stacks)."""
+        every arch (incl. recurrent stacks).  With ``prefix_share`` the
+        longest registered prompt prefix is adopted from the cache's block
+        registry first and prefill resumes after it."""
         self.cache.reset_slot(slot)
-        self.cache.allocate(slot, len(req.prompt) + req.max_new)
+        adopted = 0
+        if self.prefix_share:
+            shared, blocks = self.cache.lookup_prefix(req.prompt)
+            if shared > 0:
+                self.cache.adopt_prefix(slot, shared, blocks)
+                req.prefilled = adopted = shared
+        self.cache.allocate(slot, self._slot_tokens(req))
         t0 = time.perf_counter()
         tok = marg = None
         for chunk, start in self.sched.prefill_plan(slot):
+            self.cache.ensure_writable(slot, start, start + len(chunk))
             sub = self.cache.slice_slot(slot)
             tok, marg, new_pools = self._prefill(
                 self.params, jnp.asarray(chunk[None, :]), sub,
@@ -478,13 +515,17 @@ class PagedServeEngine(_StatsMixin):
             )
             self.cache.merge_slot(slot, new_pools)
         self.cache.lens[slot] = len(req.prompt)
+        if self.prefix_share:
+            self.cache.register_prefix(slot, req.prompt)
         tok_h, marg_h = jax.device_get((tok, marg))
         first = int(tok_h[0])
         req.margins.append(float(marg_h[0]))
         self.stats["prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_tokens"] += len(req.prompt)
+        # adopted tokens were never recomputed — throughput counts real work
+        self.stats["prefill_tokens"] += len(req.prompt) - adopted
+        self._on_admitted(slot, req)
         if self.sched.record_token(slot, first):
-            self.cache.release(slot)
+            self._release_slot(slot)
 
     def _admit_group(self, group: list) -> None:
         """Lockstep fallback: equal-length group prefilled together in one
@@ -513,7 +554,7 @@ class PagedServeEngine(_StatsMixin):
             self.cache.lens[slot] = L
             req.margins.append(float(margs[slot]))
             if self.sched.record_token(slot, int(firsts[slot])):
-                self.cache.release(slot)
+                self._release_slot(slot)
 
     def tick(self) -> int:
         """One decode step for every live slot (dead rows ride along writing
@@ -524,6 +565,9 @@ class PagedServeEngine(_StatsMixin):
         tok_in = np.zeros((self.batch,), np.int32)
         for i in live:
             tok_in[i] = self.sched.slots[i].last_token
+            # a donor's decode write can land in a block a prefix-sharer
+            # adopted — copy-on-write it out of the shared run first
+            self.cache.ensure_writable(i, int(self.cache.lens[i]), int(self.cache.lens[i]) + 1)
         t0 = time.perf_counter()
         toks, margs, pools = self._decode(
             self.params, jnp.asarray(tok_in[:, None]), self.cache.pools,
@@ -538,11 +582,16 @@ class PagedServeEngine(_StatsMixin):
             self.cache.lens[i] += 1
             self.sched.slots[i].margins.append(float(marg[i]))
             if self.sched.record_token(i, int(out[i])):
-                self.cache.release(i)
+                self._release_slot(i)
         return len(live)
 
+    def _advance(self) -> int:
+        """One decode round (subclass hook: the spec engine swaps in its
+        draft-verify round here)."""
+        return self.tick()
+
     def step(self) -> int:
-        """Admit what fits, then advance one decode tick."""
+        """Admit what fits, then advance one decode round."""
         admitted = self.sched.admissions(self._admission_gate())
         if self.sched.lockstep:
             if admitted:
@@ -550,7 +599,7 @@ class PagedServeEngine(_StatsMixin):
         else:
             for slot, req in admitted:
                 self._admit(slot, req)
-        n = self.tick()
+        n = self._advance()
         if n == 0 and not admitted and self.sched.queue:
             raise RuntimeError("scheduler stalled: queued work but nothing admittable")
         return n

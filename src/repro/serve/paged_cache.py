@@ -23,14 +23,16 @@ Block 0 of every pool is the reserved **trash block**: the block tables of
 dead slots point at it, so a full-batch decode step can include dead rows
 (they scatter into trash and attend garbage that is never read).
 
-``kv_quant=True`` stores the seq-indexed pools as **int8 codes** next to
+``kv_quant=True`` stores the seq-indexed pools as **integer codes** next to
 per-slot fp32 *scale pools* (``kps``/``vps`` for GQA — one scalar per
 token-slot per KV head; ``ckvs``/``kpes`` for MLA — one per token-slot),
 laid out in the same block geometry and gathered through the same table.
-K/V are quantized on write (``nn/attention._paged_write_q8``) and
-dequantized on read — in-register inside the Pallas decode kernel — so the
-seq-indexed KV HBM footprint drops ~4x (int8 + one fp32 scale per head-slot
-vs fp32 values): ~4x more live tokens per pool, ~4x less decode bandwidth.
+``kv_bits=8`` (default) stores int8 codes; ``kv_bits=4`` packs two 4-bit
+codes per byte (uint8 pools of half the feature width — the scale-pool
+machinery is unchanged, ``SCALE_KEYS`` still ⊂ ``POOL_KEYS``).  K/V are
+quantized on write (``nn/attention._paged_write_q8``) and dequantized on
+read — in-register inside the Pallas decode kernel for int8 — so the
+seq-indexed KV HBM footprint drops ~4x at 8 bits and ~6-7x at 4 bits.
 Ring and recurrent leaves are already O(window)/O(1) and stay float.
 
 All layers share one block table — block ``b`` holds the same token span in
@@ -38,11 +40,44 @@ every layer's pool — so the allocator runs once per sequence, not per layer.
 The device-facing view is attached to the cache tree under the reserved key
 ``"_paged"`` (consumed by ``models/lm.apply_lm``).
 
+Sharing and rollback (the speculative-decoding / prefix-sharing substrate):
+
+* every block carries a **refcount**; fresh allocations start at 1, prefix
+  adoption (``adopt_prefix``) increments, release/truncate decrement, and a
+  block returns to the free list only at refcount zero;
+* **copy-on-write**: before any jitted write into a token span the engine
+  calls ``ensure_writable(slot, start, end)`` — any covered block with
+  refcount > 1 is replaced by a private device-side copy, so a shared
+  block's other readers never observe the write;
+* **watermarks + truncate**: ``watermarks[slot]`` records the high-water
+  write position (set by ``ensure_writable``); ``truncate(slot, n)`` rolls
+  a slot back to ``n`` tokens — surplus blocks are dropped in reverse
+  ownership order (refcounted, freed at zero) so undoing a speculative
+  round restores the allocator state *exactly* (LIFO-symmetric with
+  ``allocate``), and stale pool entries past ``lens`` are masked by the
+  position arithmetic until overwritten;
+* a host-side **prefix registry** maps registered prompts to their block
+  runs: ``lookup_prefix`` finds the longest common prefix (capped at
+  ``len(prompt) - 1`` so prefill always has at least one token to produce
+  logits from) and ``adopt_prefix`` maps those blocks — including a partial
+  tail block — into a new slot for free.  Registration takes its own
+  refcount on every listed block, so a registered prefix outlives the
+  sequence that produced it (the common-prompt payoff: later requests hit
+  even after the donor finished); entries are evicted FIFO under block
+  pressure (``reclaim``) or at the entry cap, and the pin guarantees a
+  registered block can never be freed-and-recycled out from under its
+  entry (asserted in ``_free_and_purge``) — stale-KV matches are
+  structurally impossible.
+
 Invariants the allocator maintains:
 * a sequence's blocks appear in its table row in logical order, so the
   gathered view equals the contiguous layout bit-for-bit;
-* live slots never share a block; unowned table entries stay 0 (trash);
-* ``lens[slot]`` counts tokens written for the slot (its next write position).
+* live slots share a block only while every sharer treats it read-only
+  (refcount > 1 ⇒ copy-on-write before any write); unowned table entries
+  stay 0 (trash); the trash block is never refcounted and never freed;
+* ``lens[slot]`` counts tokens written for the slot (its next write
+  position); ``watermarks[slot] >= lens[slot]`` bounds where garbage from
+  rolled-back writes may sit.
 """
 
 from __future__ import annotations
@@ -61,7 +96,7 @@ __all__ = [
 ]
 
 # Leaves indexed (count, NB, bs, ...) — everything else is (count, B, ...).
-# SCALE_KEYS are the per-slot fp32 scale pools that ride along with int8
+# SCALE_KEYS are the per-slot fp32 scale pools that ride along with integer
 # code pools (kv_quant=True); they are block-indexed like any other pool.
 SCALE_KEYS = frozenset({"kps", "vps", "ckvs", "kpes"})
 POOL_KEYS = frozenset({"kp", "vp", "ckvp", "kpep"}) | SCALE_KEYS
@@ -73,19 +108,33 @@ def _leaf_name(path) -> Optional[str]:
     return keys[-1] if keys else None
 
 
+def _code_shape(dim: int, kv_bits: int) -> tuple[int, ...]:
+    """Feature width of a quantized code pool: int8 keeps the width, int4
+    packs two codes per byte (requires an even feature dim)."""
+    if kv_bits == 8:
+        return (dim,)
+    if kv_bits == 4:
+        if dim % 2:
+            raise ValueError(f"int4 KV packing needs an even feature dim, got {dim}")
+        return (dim // 2,)
+    raise ValueError(f"kv_bits must be 8 or 4, got {kv_bits}")
+
+
 def init_paged_attn_cache(
     a: AttnConfig, slots: int, num_blocks: int, block_size: int, max_seq: int, dtype,
-    kv_quant: bool = False,
+    kv_quant: bool = False, kv_bits: int = 8,
 ) -> dict:
     """Paged cache for one attention layer; ring layers keep their bounded
     per-slot layout (a window-sized ring is already token-proportional).
-    ``kv_quant``: int8 code pools + per-slot fp32 scale pools."""
+    ``kv_quant``: integer code pools + per-slot fp32 scale pools —
+    ``kv_bits=8`` int8 codes, ``kv_bits=4`` two-per-byte packed uint8."""
+    code_dtype = jnp.int8 if kv_bits == 8 else jnp.uint8
     if a.kind == "mla":
         if kv_quant:
             return {
-                "ckvp": jnp.zeros((num_blocks, block_size, a.kv_lora_rank), jnp.int8),
+                "ckvp": jnp.zeros((num_blocks, block_size, *_code_shape(a.kv_lora_rank, kv_bits)), code_dtype),
                 "ckvs": jnp.zeros((num_blocks, block_size), jnp.float32),
-                "kpep": jnp.zeros((num_blocks, block_size, a.qk_rope_dim), jnp.int8),
+                "kpep": jnp.zeros((num_blocks, block_size, *_code_shape(a.qk_rope_dim, kv_bits)), code_dtype),
                 "kpes": jnp.zeros((num_blocks, block_size), jnp.float32),
             }
         return {
@@ -96,9 +145,9 @@ def init_paged_attn_cache(
         return init_attn_cache(slots, a, max_seq, dtype)
     if kv_quant:
         return {
-            "kp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), jnp.int8),
+            "kp": jnp.zeros((num_blocks, block_size, a.kv_heads, *_code_shape(a.head_dim, kv_bits)), code_dtype),
             "kps": jnp.zeros((num_blocks, block_size, a.kv_heads), jnp.float32),
-            "vp": jnp.zeros((num_blocks, block_size, a.kv_heads, a.head_dim), jnp.int8),
+            "vp": jnp.zeros((num_blocks, block_size, a.kv_heads, *_code_shape(a.head_dim, kv_bits)), code_dtype),
             "vps": jnp.zeros((num_blocks, block_size, a.kv_heads), jnp.float32),
         }
     return {
@@ -109,14 +158,14 @@ def init_paged_attn_cache(
 
 def init_paged_stack_cache(
     arch: ArchConfig, s: StackConfig, slots: int, num_blocks: int, block_size: int,
-    max_seq: int, dtype, kv_quant: bool = False,
+    max_seq: int, dtype, kv_quant: bool = False, kv_bits: int = 8,
 ):
     """Paged twin of ``nn.transformer.init_stack_cache`` (leading ``count``)."""
     d = arch.d_model
 
     def one():
         if s.kind in ("attn_mlp", "moe"):
-            return {"attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype, kv_quant)}
+            return {"attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype, kv_quant, kv_bits)}
         if s.kind == "rwkv6":
             H = d // s.ssm.head_dim
             return {
@@ -129,7 +178,7 @@ def init_paged_stack_cache(
         if s.kind == "hymba":
             H = d // s.ssm.head_dim
             return {
-                "attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype, kv_quant),
+                "attn": init_paged_attn_cache(s.attn, slots, num_blocks, block_size, max_seq, dtype, kv_quant, kv_bits),
                 "mamba": {"S": jnp.zeros((slots, H, s.ssm.head_dim, s.ssm.state_dim), jnp.float32)},
             }
         raise ValueError(s.kind)
@@ -151,11 +200,16 @@ class PagedKVCache:
         max_seq: int = 512,
         dtype=jnp.bfloat16,
         kv_quant: bool = False,
+        kv_bits: int = 8,
+        max_prefix_entries: int = 32,
     ):
+        if kv_bits not in (8, 4):
+            raise ValueError(f"kv_bits must be 8 or 4, got {kv_bits}")
         self.arch = arch
         self.slots = slots
         self.block_size = block_size
         self.kv_quant = kv_quant
+        self.kv_bits = kv_bits if kv_quant else 8
         self.max_seq = max_seq
         self.max_blocks_per_seq = -(-max_seq // block_size)
         if num_blocks is None:
@@ -166,7 +220,7 @@ class PagedKVCache:
         self.num_blocks = num_blocks
         self.pools = {
             str(i): init_paged_stack_cache(
-                arch, s, slots, num_blocks, block_size, max_seq, dtype, kv_quant
+                arch, s, slots, num_blocks, block_size, max_seq, dtype, kv_quant, kv_bits
             )
             for i, s in enumerate(arch.stacks)
         }
@@ -174,9 +228,37 @@ class PagedKVCache:
         self.free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
         self.tables = np.zeros((slots, self.max_blocks_per_seq), np.int32)
         self.lens = np.zeros((slots,), np.int32)
+        # high-water write position per slot: truncate() rolls lens back but
+        # leaves the watermark — the span [lens, watermark) may hold garbage
+        # from rejected speculative writes, masked until overwritten
+        self.watermarks = np.zeros((slots,), np.int32)
         self._owned: list[list[int]] = [[] for _ in range(slots)]
+        # block refcounts: fresh allocation = 1, prefix adoption increments,
+        # release/truncate decrement, free list entry iff 0.  The trash block
+        # is never refcounted (rc[TRASH_BLOCK] stays 0 and it is never freed).
+        self.refcounts = np.zeros((num_blocks,), np.int32)
         self.peak_blocks = 0  # high-water mark of simultaneously owned blocks
+        self.cow_copies = 0  # copy-on-write block copies performed
+        self.prefix_hits = 0  # admissions that adopted a shared prefix
+        self.prefix_hit_tokens = 0  # prompt tokens served from shared blocks
+        # prefix registry: eid -> (prompt token array, block run covering it),
+        # insertion-ordered for FIFO eviction; registration pins each listed
+        # block with its own refcount (tracked in _entry_rc) so prefixes
+        # outlive their donor sequence; reverse map block -> eids for eager
+        # purge if a block is ever freed out from under an entry
+        self.max_prefix_entries = max_prefix_entries
+        self._prefix_entries: dict[int, tuple[np.ndarray, tuple[int, ...]]] = {}
+        self._block_eids: dict[int, set] = {}
+        self._entry_rc = np.zeros((num_blocks,), np.int32)
+        self._next_eid = 0
         self._bt_dev = None  # device copy of tables; invalidated on mutation
+        # all seq-indexed state lives in pools (no ring / recurrent per-slot
+        # leaves) — the precondition for prefix sharing and spec rollback
+        names = {
+            _leaf_name(p)
+            for p, _ in jax.tree_util.tree_flatten_with_path(self.pools)[0]
+        }
+        self.fully_paged = names <= POOL_KEYS
 
     # -- allocator ----------------------------------------------------------
 
@@ -200,18 +282,79 @@ class PagedKVCache:
         owned = self._owned[slot]
         while len(owned) < need:
             if not self.free:
+                self.reclaim(1)
+            if not self.free:
                 raise RuntimeError("paged KV cache out of blocks")
             b = self.free.pop()
             self.tables[slot, len(owned)] = b
             owned.append(b)
+            self.refcounts[b] = 1
             self._bt_dev = None
         self.peak_blocks = max(self.peak_blocks, self.allocated_blocks())
 
+    def _drop_block(self, slot: int, idx: int) -> Optional[int]:
+        """Decrement the refcount of ``slot``'s ``idx``-th block and clear its
+        table entry; returns the block id if it just became free."""
+        b = self._owned[slot][idx]
+        self.tables[slot, idx] = TRASH_BLOCK
+        self.refcounts[b] -= 1
+        assert self.refcounts[b] >= 0, "refcount underflow"
+        return b if self.refcounts[b] == 0 else None
+
+    def _free_and_purge(self, freed: list) -> None:
+        if not freed:
+            return
+        self.free.extend(freed)
+        for b in freed:
+            # a registered block is pinned by its entry's own refcount, so
+            # it can only hit zero after _evict_entry already unmapped it —
+            # a freed block must never still be matchable in the registry
+            assert b not in self._block_eids, "freed a registry-pinned block"
+
     def release(self, slot: int) -> None:
-        self.free.extend(reversed(self._owned[slot]))
+        freed = []
+        for idx in reversed(range(len(self._owned[slot]))):
+            b = self._drop_block(slot, idx)
+            if b is not None:
+                freed.append(b)
+        self._free_and_purge(freed)
         self._owned[slot] = []
         self.tables[slot] = TRASH_BLOCK
         self.lens[slot] = 0
+        self.watermarks[slot] = 0
+        self._bt_dev = None
+
+    def rollback(self, slot: int, n_tokens: int) -> None:
+        """Lens-only rollback: rewind ``slot``'s write position to
+        ``n_tokens``, leaving its block ownership untouched.  This is the
+        per-round speculative rollback — the admission reservation
+        (prompt + max_new + spec headroom) holds for the request's whole
+        lifetime, so rejected-draft blocks must NOT return to the shared
+        free pool mid-flight (a later admission could claim them and the
+        plain-decode fallback would write into trash).  Pool entries in
+        ``[n_tokens, watermark)`` keep their garbage; the position masks
+        hide them until a later write overwrites them."""
+        assert n_tokens <= self.lens[slot] or n_tokens <= self.watermarks[slot]
+        self.lens[slot] = n_tokens
+
+    def truncate(self, slot: int, n_tokens: int) -> None:
+        """Retire ``slot``'s capacity beyond ``n_tokens``: surplus blocks
+        are dropped in reverse ownership order — LIFO-symmetric with
+        ``allocate``, so undoing a just-made allocation restores the free
+        list *exactly* (order included) — and ``lens`` resets.  Use
+        :meth:`rollback` for the per-round speculative unwind (which must
+        keep the admission reservation intact); ``truncate`` is for
+        genuinely returning capacity."""
+        need = self.blocks_needed(n_tokens)
+        owned = self._owned[slot]
+        freed = []
+        while len(owned) > need:
+            b = self._drop_block(slot, len(owned) - 1)
+            owned.pop()
+            if b is not None:
+                freed.append(b)
+        self._free_and_purge(freed)
+        self.lens[slot] = n_tokens
         self._bt_dev = None
 
     def live_tokens(self) -> int:
@@ -225,13 +368,156 @@ class PagedKVCache:
         (all layers; codes + scale pools).  Ring/recurrent leaves are
         excluded — they do not scale with live tokens.  This is the number
         the int8 pools cut ~4x (int8 codes + one fp32 scale per head-slot
-        vs fp32 values)."""
+        vs fp32 values) and int4 packing cuts further (two codes per
+        byte)."""
         total = 0
         for path, leaf in jax.tree_util.tree_flatten_with_path(self.pools)[0]:
             if _leaf_name(path) in POOL_KEYS:
                 nb, bs = leaf.shape[1], leaf.shape[2]
                 total += leaf.size * leaf.dtype.itemsize // (nb * bs)
         return total
+
+    # -- copy-on-write ------------------------------------------------------
+
+    def ensure_writable(self, slot: int, start: int, end: int) -> None:
+        """Make the token span ``[start, end)`` of ``slot`` safe to write:
+        any covered block with refcount > 1 (shared via ``adopt_prefix``) is
+        replaced by a private copy — one fused device-side ``set`` per pool
+        leaf — before the jitted write ever sees the table.  Also advances
+        the slot's write watermark.  No-op for unshared spans."""
+        if end <= start:
+            return
+        self.watermarks[slot] = max(int(self.watermarks[slot]), end)
+        bs = self.block_size
+        for j in range(start // bs, (end - 1) // bs + 1):
+            b = int(self.tables[slot, j])
+            if b == TRASH_BLOCK or self.refcounts[b] <= 1:
+                continue
+            if not self.free:
+                self.reclaim(1)
+            if not self.free:
+                raise RuntimeError("paged KV cache out of blocks for CoW copy")
+            nb = self.free.pop()
+            self._copy_block(b, nb)
+            self.refcounts[b] -= 1
+            self.refcounts[nb] = 1
+            self.tables[slot, j] = nb
+            self._owned[slot][j] = nb
+            self.cow_copies += 1
+            self._bt_dev = None
+        self.peak_blocks = max(self.peak_blocks, self.allocated_blocks())
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        def one(path, leaf):
+            if _leaf_name(path) in POOL_KEYS:
+                return leaf.at[:, dst].set(leaf[:, src])
+            return leaf
+
+        self.pools = jax.tree_util.tree_map_with_path(one, self.pools)
+
+    # -- prefix sharing -----------------------------------------------------
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """Publish ``slot``'s prompt block run for future sharing.  The entry
+        takes its own refcount on every listed block, so the prefix stays
+        servable after the donor sequence releases — until the registry
+        evicts it (FIFO, under block pressure or at the entry cap).
+
+        Only blocks *wholly covered* by the prompt are listed: the donor
+        writes at positions >= len(prompt) only, so it can never write into
+        a fully-covered block — pinning a partial tail block would force
+        the donor itself into a copy-on-write fault whose block demand no
+        admission budget reserved (a mid-decode out-of-blocks crash under
+        pressure).  CoW therefore only ever happens on the *adopter* side,
+        whose worst case the admission gate already budgets."""
+        if not self.fully_paged:
+            return
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        n_full = tokens.size // self.block_size
+        if n_full == 0 or tokens.size < 2:
+            return  # nothing shareable below a full block / the len-1 cap
+        shared, _ = self.lookup_prefix(tokens)
+        if shared >= min(tokens.size - 1, n_full * self.block_size):
+            return  # an existing entry already covers this prompt
+        while len(self._prefix_entries) >= self.max_prefix_entries:
+            self._evict_entry(next(iter(self._prefix_entries)))
+        blocks = tuple(self._owned[slot][:n_full])
+        eid = self._next_eid
+        self._next_eid += 1
+        self._prefix_entries[eid] = (tokens.copy(), blocks)
+        for b in blocks:
+            self._block_eids.setdefault(b, set()).add(eid)
+            self.refcounts[b] += 1
+            self._entry_rc[b] += 1
+
+    def _evict_entry(self, eid: int) -> None:
+        """Drop a registry entry, releasing its pinned refcounts (blocks no
+        live slot still owns return to the free list)."""
+        _, blocks = self._prefix_entries.pop(eid)
+        freed = []
+        for b in blocks:
+            eids = self._block_eids.get(b)
+            if eids is not None:
+                eids.discard(eid)
+                if not eids:
+                    del self._block_eids[b]
+            self._entry_rc[b] -= 1
+            self.refcounts[b] -= 1
+            assert self.refcounts[b] >= 0, "refcount underflow on eviction"
+            if self.refcounts[b] == 0:
+                freed.append(b)
+        self.free.extend(freed)
+
+    def reclaim(self, need: int) -> None:
+        """Evict registry entries (oldest first) until at least ``need``
+        blocks are free or the registry is empty — live sequences always win
+        over cached prefixes."""
+        while self.free_blocks < need and self._prefix_entries:
+            self._evict_entry(next(iter(self._prefix_entries)))
+
+    def reclaimable_blocks(self) -> int:
+        """Blocks the registry alone is keeping alive (refcount fully
+        accounted for by entry pins): what ``reclaim`` could hand back.  The
+        admission gate counts these as available capacity."""
+        return int(np.sum((self._entry_rc > 0) & (self.refcounts == self._entry_rc)))
+
+    def lookup_prefix(self, tokens: np.ndarray) -> tuple[int, tuple[int, ...]]:
+        """Longest registered common prefix of ``tokens``, capped at
+        ``len(tokens) - 1`` (prefill must keep at least one token to produce
+        logits from).  Returns ``(shared_tokens, block_run)`` where the run
+        covers the shared span — its last block may be partial (the adopter
+        copy-on-writes it when its own tokens land there)."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        cap = tokens.size - 1
+        best, best_blocks = 0, ()
+        for ptoks, blocks in self._prefix_entries.values():
+            # an entry only pins the blocks wholly inside its prompt, so a
+            # match can never extend past the entry's block coverage
+            n = min(cap, ptoks.size, len(blocks) * self.block_size)
+            if n <= best:
+                continue
+            neq = np.nonzero(tokens[:n] != ptoks[:n])[0]
+            m = int(neq[0]) if neq.size else n
+            if m > best:
+                best, best_blocks = m, blocks[: self.blocks_needed(m)]
+        return best, best_blocks
+
+    def adopt_prefix(self, slot: int, shared_tokens: int, blocks) -> None:
+        """Map a looked-up shared block run into an empty ``slot``: table
+        entries point at the shared blocks (refcounts bumped), ``lens`` jumps
+        to ``shared_tokens`` — the prompt prefix is served without recompute
+        and without copies until a write forces CoW."""
+        assert not self._owned[slot], "adopt_prefix needs an empty slot"
+        for j, b in enumerate(blocks):
+            self.tables[slot, j] = b
+            self._owned[slot].append(b)
+            self.refcounts[b] += 1
+        self.lens[slot] = shared_tokens
+        self.watermarks[slot] = shared_tokens
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += shared_tokens
+        self._bt_dev = None
+        self.peak_blocks = max(self.peak_blocks, self.allocated_blocks())
 
     # -- per-slot state (recurrent / ring leaves) ---------------------------
 
@@ -280,8 +566,8 @@ class PagedKVCache:
 
     def bt(self) -> jnp.ndarray:
         """Full block table ``(slots, MB)`` as a device array.  Tables only
-        change at allocate/release, so the decode loop's per-tick call reuses
-        one upload between admissions."""
+        change at allocate/release/CoW, so the decode loop's per-tick call
+        reuses one upload between admissions."""
         if self._bt_dev is None:
             self._bt_dev = jnp.asarray(self.tables)
         return self._bt_dev
@@ -293,3 +579,14 @@ class PagedKVCache:
     def attach(self) -> dict:
         """Full-batch cache tree for ``apply_lm``: pools + block-table view."""
         return {**self.pools, "_paged": {"bt": self.bt()}}
+
+    def device_state(self) -> dict:
+        """Host bookkeeping as device arrays for multi-host serving: the
+        block table plus refcounts (``rc``, block axis — local like the
+        pools) and write watermarks (``wm``, slot axis — rides with the
+        batch).  ``dist.sharding.cache_specs`` knows these leaves."""
+        return {
+            "bt": self.bt(),
+            "rc": jnp.asarray(self.refcounts),
+            "wm": jnp.asarray(self.watermarks),
+        }

@@ -45,6 +45,10 @@ class ServeRequest:
     done: bool = False
     prefilled: int = 0  # prompt tokens already in the cache
     last_token: int = -1  # most recent sampled token (next decode input)
+    # speculative-decoding bookkeeping (SpecServeEngine): draft tokens
+    # proposed for / accepted by this request — per-request acceptance rate
+    spec_proposed: int = 0
+    spec_accepted: int = 0
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0

@@ -1,0 +1,11 @@
+"""Speculative decoding subsystem on the paged-KV serving stack.
+
+``drafter.py`` proposes, ``verify.py`` scores and accepts, ``engine.py``
+orchestrates rounds and the copy-on-write rollback.  See
+``serve/README.md`` ("Speculative decoding") for the losslessness argument
+and the block lifecycle.
+"""
+
+from repro.serve.spec.drafter import ModelDrafter, SelfDrafter  # noqa: F401
+from repro.serve.spec.engine import SpecServeEngine  # noqa: F401
+from repro.serve.spec.verify import accept_prefix, make_verify_step  # noqa: F401

@@ -1,0 +1,245 @@
+"""Drafters: propose k tokens per sequence per speculative round.
+
+Two built-ins, one contract (the engine is agnostic to how drafts are made —
+losslessness comes from the verifier, so a drafter only affects *speed* via
+its acceptance rate and its own cost):
+
+* :class:`SelfDrafter` — **precision-staged self-drafting**: the same
+  weights run under a cheaper runtime (``int_forward=True`` fused W8A8
+  matmuls; with ``--kv-int8`` the int8 code pools are the draft's KV read
+  view, optionally through the in-register-dequant Pallas decode kernel)
+  against the *engine's own* paged cache.  Draft writes land in the shared
+  pools at positions the verify pass overwrites wholesale, so the drafter
+  needs no cache bookkeeping at all.  All k draft steps run inside ONE
+  jitted ``lax.scan`` — one dispatch per round instead of k, which is where
+  the wall-clock win comes from even before the precision gap.
+
+* :class:`ModelDrafter` — a small draft model (e.g. a reduced ``smollm``
+  drafting for ``yi``) with its own params and its own paged cache.  The
+  draft cache tracks the accepted token stream: after each round the engine
+  calls :meth:`sync` with the accepted length (truncating rejected draft
+  state — the same rollback primitive the main cache uses) and any accepted
+  tokens the drafter has not consumed yet (the full-acceptance bonus case);
+  the next round's first step feeds that pending delta before proposing.
+  Vocabularies must match; the draft arch must be fully paged.
+
+Both drafters draft greedily — proposals are argmaxes, never samples — so a
+given (weights, cache) state drafts deterministically.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import Runtime, apply_lm
+
+__all__ = ["SelfDrafter", "ModelDrafter"]
+
+
+class SelfDrafter:
+    """Draft with the engine's own params/cache under a draft runtime."""
+
+    name = "self"
+
+    def __init__(self, arch, rt: Runtime):
+        self.arch = arch
+        self.rt = rt
+        self._scan = {}  # k -> jitted k-step draft scan
+
+    # -- lifecycle hooks (no private state to manage) -----------------------
+
+    def admit(self, slot: int, prompt, max_new: int) -> None:
+        pass
+
+    def release(self, slot: int) -> None:
+        pass
+
+    def sync(self, slot: int, accepted_len: int, pending) -> None:
+        pass
+
+    # -- drafting -----------------------------------------------------------
+
+    def _draft_fn(self, k: int):
+        def fn(params, tok0, pools, bt, lens):
+            def step(carry, _):
+                tok, pos, pools = carry
+                cache = {**pools, "_paged": {"bt": bt}}
+                logits, new_cache, _ = apply_lm(
+                    params, self.arch, tokens=tok[:, None], cache=cache,
+                    start_pos=pos, rt=self.rt,
+                )
+                nxt = jnp.argmax(logits[:, 0].astype(jnp.float32), axis=-1)
+                return (nxt.astype(jnp.int32), pos + 1, new_cache), nxt.astype(jnp.int32)
+
+            (_, _, pools), toks = jax.lax.scan(step, (tok0, lens, pools), None, length=k)
+            return jnp.swapaxes(toks, 0, 1), pools  # (B, k)
+
+        return fn
+
+    def propose(self, engine, live, tok_in: np.ndarray, k: int) -> np.ndarray:
+        """k greedy draft tokens per row, one jit dispatch.  Writes draft-
+        precision K/V into the engine's pools at [lens, lens + k) — the
+        verify pass overwrites every one of them."""
+        fn = self._scan.get(k)
+        if fn is None:
+            fn = self._scan[k] = jax.jit(self._draft_fn(k), donate_argnums=(2,))
+        cache = engine.cache
+        toks, pools = fn(
+            engine.params, jnp.asarray(tok_in), cache.pools, cache.bt(),
+            jnp.asarray(cache.lens.copy()),
+        )
+        cache.pools = pools
+        return np.asarray(jax.device_get(toks))
+
+
+class ModelDrafter:
+    """Separate small-model drafter with its own params and paged cache."""
+
+    name = "model"
+
+    def __init__(
+        self,
+        arch,
+        params,
+        *,
+        slots: int,
+        max_seq: int,
+        spec_k: int,
+        block_size: int = 16,
+        prefill_chunk: int = 32,
+        rt: Optional[Runtime] = None,
+        dtype=None,
+    ):
+        from repro.serve.paged_cache import PagedKVCache
+
+        self.arch = arch
+        self.params = params
+        self.rt = rt or Runtime()
+        self.spec_k = spec_k
+        self.prefill_chunk = prefill_chunk
+        if dtype is None:
+            dtype = jnp.dtype(arch.compute_dtype)
+        self.cache = PagedKVCache(
+            arch, slots, block_size=block_size, max_seq=max_seq, dtype=dtype,
+        )
+        if not self.cache.fully_paged:
+            raise ValueError(
+                "ModelDrafter needs a fully paged draft arch (no ring/recurrent "
+                f"state to roll back), got {arch.name}"
+            )
+        self.pending: list[list[int]] = [[] for _ in range(slots)]
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(2,))
+        self._sync_draft = {}  # (delta_max, k) -> jitted sync + draft scan
+
+    # -- jitted pieces ------------------------------------------------------
+
+    def _prefill_fn(self, params, tokens, pools, bt, start):
+        cache = {**pools, "_paged": {"bt": bt}}
+        _, new_cache, _ = apply_lm(
+            params, self.arch, tokens=tokens, cache=cache, start_pos=start,
+            rt=self.rt,
+        )
+        return new_cache
+
+    def _sync_draft_fn(self, delta_max: int, k: int):
+        """One dispatch per round: consume each row's pending delta (padded to
+        ``delta_max`` by repeating its last token — pad writes land beyond the
+        row's tracked length, masked until overwritten), read the first
+        proposal from each row's true last position, then scan k - 1 more
+        greedy steps."""
+
+        def fn(params, toks, idx, pools, bt, pos0):
+            cache = {**pools, "_paged": {"bt": bt}}
+            logits, new_cache, _ = apply_lm(
+                params, self.arch, tokens=toks, cache=cache, start_pos=pos0,
+                rt=self.rt,
+            )
+            lf = logits.astype(jnp.float32)  # (B, delta_max, V)
+            sel = jnp.take_along_axis(
+                lf, idx[:, None, None].astype(jnp.int32), axis=1
+            )[:, 0]
+            d1 = jnp.argmax(sel, axis=-1).astype(jnp.int32)
+            pos = pos0 + idx + 1  # per-row next write position
+
+            def step(carry, _):
+                tok, pos, pools = carry
+                cache = {**pools, "_paged": {"bt": bt}}
+                logits, new_cache, _ = apply_lm(
+                    params, self.arch, tokens=tok[:, None], cache=cache,
+                    start_pos=pos, rt=self.rt,
+                )
+                nxt = jnp.argmax(logits[:, 0].astype(jnp.float32), axis=-1).astype(jnp.int32)
+                return (nxt, pos + 1, new_cache), nxt
+
+            (_, _, pools2), rest = jax.lax.scan(step, (d1, pos, new_cache), None, length=k - 1)
+            proposals = jnp.concatenate([d1[:, None], jnp.swapaxes(rest, 0, 1)], axis=1)
+            return proposals, pools2
+
+        return fn
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self, slot: int, prompt, max_new: int) -> None:
+        """Prefill the prompt into the drafter's own cache (isolated B=1
+        view, chunked like the engine's prefill)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.cache.reset_slot(slot)
+        self.cache.allocate(slot, len(prompt) + max_new + self.spec_k)
+        for lo in range(0, len(prompt), self.prefill_chunk):
+            hi = min(lo + self.prefill_chunk, len(prompt))
+            sub = self.cache.slice_slot(slot)
+            new_pools = self._prefill(
+                self.params, jnp.asarray(prompt[None, lo:hi]), sub,
+                self.cache.bt_row(slot), jnp.int32(lo),
+            )
+            self.cache.merge_slot(slot, new_pools)
+        self.cache.lens[slot] = len(prompt)
+        self.pending[slot] = []
+
+    def release(self, slot: int) -> None:
+        self.cache.release(slot)
+        self.pending[slot] = []
+
+    def sync(self, slot: int, accepted_len: int, pending) -> None:
+        """Roll the draft cache back to the accepted stream: rejected draft
+        state rewinds away (lens-only — the drafter's admit-time block
+        reservation must survive the request, like the main cache's);
+        accepted tokens the drafter has not consumed yet queue as the next
+        round's delta."""
+        self.cache.rollback(slot, min(int(self.cache.lens[slot]), accepted_len))
+        self.pending[slot] = [int(t) for t in pending]
+
+    # -- drafting -----------------------------------------------------------
+
+    def propose(self, engine, live, tok_in: np.ndarray, k: int) -> np.ndarray:
+        B = self.cache.slots
+        deltas = [[] for _ in range(B)]
+        for i in live:
+            deltas[i] = self.pending[i] + [int(tok_in[i])]
+        delta_max = max((len(deltas[i]) for i in live), default=1)
+        toks = np.zeros((B, delta_max), np.int32)
+        idx = np.zeros((B,), np.int32)
+        for i in range(B):
+            d = deltas[i] or [0]
+            toks[i, : len(d)] = d
+            toks[i, len(d) :] = d[-1]  # pad by repetition; masked + overwritten
+            idx[i] = len(d) - 1
+        key = (delta_max, k)
+        fn = self._sync_draft.get(key)
+        if fn is None:
+            fn = self._sync_draft[key] = jax.jit(
+                self._sync_draft_fn(delta_max, k), donate_argnums=(3,)
+            )
+        proposals, pools = fn(
+            self.params, jnp.asarray(toks), jnp.asarray(idx), self.cache.pools,
+            self.cache.bt(), jnp.asarray(self.cache.lens.copy()),
+        )
+        self.cache.pools = pools
+        for i in live:
+            self.cache.lens[i] += len(deltas[i]) + (k - 1)
+            self.pending[i] = []
+        return np.asarray(jax.device_get(proposals))

@@ -1,0 +1,234 @@
+"""SpecServeEngine: speculative decoding on the paged-KV serving stack.
+
+A speculative round replaces k + 1 plain decode ticks with two dispatches:
+
+1. **draft** — the drafter proposes k greedy tokens per live row (one jitted
+   ``lax.scan`` for the built-in drafters);
+2. **verify** — one ``apply_lm`` call scores ``[x0, d1..dk]`` (T = k + 1)
+   per row under the engine's *verify* runtime, accepts the longest matching
+   draft prefix, and emits the verifier's own argmax as correction (first
+   mismatch) or bonus (full acceptance).
+
+Output is token-identical to non-speculative greedy decode on the same
+engine configuration (see ``serve/spec/verify.py`` for the induction);
+speculation only changes *when* cache writes happen, and the rejected tail
+is unwound with ``PagedKVCache.rollback`` — the copy-on-write rollback: the
+engine pre-declares the round's write span with ``ensure_writable`` (CoW on
+any prefix-shared block, watermark recorded) and the rollback rewinds the
+write position so the rejected tokens are as if never drafted.  The round's
+writes never leave the request's admission reservation (``_slot_tokens``
+includes the ``spec_k`` headroom), so block ownership is untouched
+round-to-round — no allocator churn, no free-list interaction with
+concurrent admissions — and ``truncate`` remains the allocator-exact
+primitive for genuinely retiring capacity.
+
+Supported archs are the *fully paged* ones (every seq-indexed leaf lives in
+block pools — GQA full attention, MLA): ring and recurrent state advance
+destructively and cannot roll back, so those archs either raise
+(``strict=True``) or serve through the inherited plain decode path with
+``spec_active() == False``.
+
+Acceptance-rate bookkeeping rides on each request (``spec_proposed`` /
+``spec_accepted``) and aggregates in ``spec_stats``; when the acceptance EMA
+collapses below ``min_accept`` the engine falls back to plain ticks and
+re-probes speculation every ``probe_interval`` rounds — a drafter that has
+stopped guessing right costs k wasted forwards per round, so the fallback is
+what keeps worst-case throughput at plain-decode levels.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import Runtime
+from repro.serve.engine import PagedServeEngine
+from repro.serve.spec.drafter import ModelDrafter, SelfDrafter
+from repro.serve.spec.verify import accept_prefix, make_verify_step
+
+__all__ = ["SpecServeEngine"]
+
+
+class SpecServeEngine(PagedServeEngine):
+    """Paged serving engine with precision-staged speculative decoding."""
+
+    def __init__(
+        self,
+        arch,
+        params,
+        *,
+        spec_k: int = 4,
+        drafter=None,
+        draft_rt: Optional[Runtime] = None,
+        min_accept: float = 0.1,
+        probe_interval: int = 8,
+        strict: bool = False,
+        **kw,
+    ):
+        super().__init__(arch, params, **kw)
+        if self.sample_cfg.method != "greedy":
+            raise ValueError(
+                "speculative decoding is lossless for greedy sampling only; "
+                f"got sample method {self.sample_cfg.method!r}"
+            )
+        if spec_k < 1:
+            raise ValueError("spec_k must be >= 1 (use PagedServeEngine for plain decode)")
+        self.spec_k = spec_k
+        self.min_accept = min_accept
+        self.probe_interval = probe_interval
+        # ring caches (windowed/chunked-local) and recurrent state advance
+        # destructively — there is no watermark to roll them back to
+        self.spec_supported = (
+            self.cache.fully_paged and not self.recurrent and not self.sched.lockstep
+        )
+        if not self.spec_supported:
+            if strict:
+                raise ValueError(
+                    f"{arch.name}: speculative decoding needs a fully paged, "
+                    "non-recurrent, non-lockstep configuration (ring/recurrent "
+                    "state cannot unwind rejected drafts); serving falls back "
+                    "to plain decode unless strict"
+                )
+            self.drafter = None
+        else:
+            # precision-staged default: draft through the fused W8A8 integer
+            # path (and the Pallas decode kernel if the engine uses it); the
+            # verify pass keeps the engine's own (dequant fp32) runtime
+            self.drafter = drafter or SelfDrafter(
+                arch, draft_rt or Runtime(
+                    int_forward=True, decode_kernel=self.rt.decode_kernel,
+                ),
+            )
+            if isinstance(self.drafter, ModelDrafter) and self.drafter.arch.vocab != arch.vocab:
+                raise ValueError(
+                    f"draft vocab {self.drafter.arch.vocab} != target vocab {arch.vocab}"
+                )
+        self._verify = make_verify_step(arch, self.rt, self.params_struct)
+        self._accept_ema = 1.0
+        self._plain_rounds = 0
+        self.spec_stats = {
+            "rounds": 0, "fallback_rounds": 0, "proposed": 0, "accepted": 0,
+            "emitted": 0, "bonus": 0,
+        }
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Benchmarks zero counters after their warmup pass: the spec
+        round/acceptance tallies must reset with the throughput stats or
+        the reported acceptance rate double-counts the warmup drive."""
+        super().reset_stats()
+        self.spec_stats = {k: 0 for k in self.spec_stats}
+
+    def acceptance_rate(self) -> float:
+        """Accepted draft tokens / proposed draft tokens, engine lifetime."""
+        return self.spec_stats["accepted"] / max(self.spec_stats["proposed"], 1)
+
+    def spec_active(self) -> bool:
+        return self.spec_supported and self._accept_ema >= self.min_accept
+
+    def _slot_tokens(self, req) -> int:
+        # speculative rounds write up to spec_k positions past the emitted
+        # stream before rollback; reserve that headroom at admission
+        return super()._slot_tokens(req) + (self.spec_k if self.spec_supported else 0)
+
+    def _release_slot(self, slot: int) -> None:
+        if self.drafter is not None:
+            self.drafter.release(slot)
+        super()._release_slot(slot)
+
+    def _on_admitted(self, slot: int, req) -> None:
+        if self.drafter is not None and self.sched.slots[slot] is req:
+            self.drafter.admit(slot, req.prompt, req.max_new)
+
+    # -- the speculative round ---------------------------------------------
+
+    def _advance(self) -> int:
+        if not self.sched.live:
+            return 0
+        if self.spec_active():
+            return self.spec_round()
+        if self.spec_supported:
+            # acceptance collapsed: plain ticks, re-probing periodically (the
+            # probe round's own rate replaces the stale EMA, so a drafter
+            # that recovers — e.g. past an unpredictable span — resumes)
+            self._plain_rounds += 1
+            if self._plain_rounds >= self.probe_interval:
+                self._plain_rounds = 0
+                return self.spec_round(probe=True)
+        self.spec_stats["fallback_rounds"] += 1
+        return self.tick()
+
+    def spec_round(self, probe: bool = False) -> int:
+        """Draft k, verify in one batched call, accept-prefix, roll back."""
+        live = self.sched.live
+        if not live:
+            return 0
+        k = self.spec_k
+        t0 = time.perf_counter()
+        lens0 = self.cache.lens.copy()
+        for i in live:
+            # the round writes [lens, lens + k + 1): draft inputs then the
+            # verify span; declare it once so shared blocks CoW up front and
+            # the watermark records how far garbage may extend on rejection
+            self.cache.allocate(i, int(lens0[i]) + k + 1)
+            self.cache.ensure_writable(i, int(lens0[i]), int(lens0[i]) + k + 1)
+        tok_in = np.zeros((self.batch,), np.int32)
+        for i in live:
+            tok_in[i] = self.sched.slots[i].last_token
+        proposals = self.drafter.propose(self, live, tok_in, k)  # (B, k)
+        tokens = np.concatenate([tok_in[:, None], proposals], axis=1)
+        am_d, mg_d, pools = self._verify(
+            self.params, jnp.asarray(tokens), self.cache.pools, self.cache.bt(),
+            jnp.asarray(lens0),
+        )
+        self.cache.pools = pools
+        am, mg = (np.asarray(a) for a in jax.device_get((am_d, mg_d)))
+        self.stats["decode_s"] += time.perf_counter() - t0
+
+        emitted_total = 0
+        round_accepted = 0
+        for i in live:
+            req = self.sched.slots[i]
+            a, emitted = accept_prefix(proposals[i], am[i])
+            req.spec_proposed += k
+            req.spec_accepted += a
+            self.spec_stats["proposed"] += k
+            self.spec_stats["accepted"] += a
+            if a == k:
+                self.spec_stats["bonus"] += 1
+            round_accepted += a
+            done = False
+            for j, t in enumerate(emitted):
+                req.margins.append(float(mg[i, j]))
+                emitted_total += 1
+                if self.sched.record_token(i, int(t)):
+                    done = True
+                    break
+            if done:
+                self._release_slot(i)
+            else:
+                # rollback: keep the consumed prefix [x0, d1..da], rewind
+                # the write position past the rejected tail.  Lens-only —
+                # the admission reservation (which includes the spec_k
+                # headroom) stays owned for the request's lifetime, so the
+                # plain-tick fallback and later rounds always have their
+                # blocks and the allocator sees no per-round churn
+                new_len = int(lens0[i]) + 1 + a
+                self.cache.rollback(i, new_len)
+                if self.drafter is not None:
+                    pending = [int(proposals[i, -1])] if a == k else []
+                    self.drafter.sync(i, new_len, pending)
+        self.stats["decode_tokens"] += emitted_total
+        self.spec_stats["rounds"] += 1
+        self.spec_stats["emitted"] += emitted_total
+        rate = round_accepted / max(k * len(live), 1)
+        if probe:
+            self._accept_ema = rate
+        else:
+            self._accept_ema = 0.8 * self._accept_ema + 0.2 * rate
+        return len(live)

@@ -1,0 +1,100 @@
+"""Batched speculative verification: score all k draft tokens in one call.
+
+The verifier is the *truth path*: one ``apply_lm`` call per round feeds
+``[x0, d1, ..., dk]`` (``T = k + 1`` — the cached-call interface already
+supports multi-token steps) at each row's current length, so position ``j``'s
+logits are the model's next-token distribution after consuming the prefix
+through ``d_j``.  Greedy accept-prefix semantics make the output
+token-identical to non-speculative greedy decode:
+
+* ``argmax(logits[:, 0])`` is exactly the token plain decode would emit after
+  ``x0``; if it equals ``d1`` the draft guessed right and position 1's logits
+  are the post-``d1`` distribution plain decode would compute next — by
+  induction every accepted draft token *is* the plain-decode token;
+* the first mismatch position emits the verifier's own argmax (the correct
+  token) and everything after it is rolled back;
+* full acceptance emits a free bonus token from the last position.
+
+The verify call also *writes* K/V for every scored position (the same
+write-then-gather path chunked prefill uses), so the accepted prefix's cache
+entries are verify-precision regardless of what the drafter wrote — draft
+writes are entirely overwritten.  Rejected positions are unwound by the
+engine via ``PagedKVCache.rollback`` — a lens-only rewind that keeps the
+request's admission reservation owned (``truncate``, which also frees
+blocks, must NOT be used per-round: a freed block could be claimed by a
+concurrent admission and the plain-decode fallback would write into trash).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import apply_lm
+
+__all__ = ["make_verify_step", "accept_prefix"]
+
+
+def make_verify_step(arch, rt, params_struct=lambda p: p):
+    """Build the jitted verify step ``(params, tokens (B, T), pools, bt,
+    start (B,)) -> (argmax (B, T) int32, top-2 margins (B, T) fp32, pools)``.
+
+    ``rt`` is the *verify* runtime — the engine's configured precision (the
+    dequant fp32 path by default), never the drafter's accelerated one; the
+    returned argmaxes define what "correct" means for acceptance.  Margins
+    feed the per-token bookkeeping the int8-KV parity bound reads.  The pool
+    buffers are donated (argnum 2), mirroring the engine's decode step.
+
+    MoE caveat: expert-capacity competition is *chunk-local* (``nn/moe.py``
+    sizes the drop buffer from the call's token count), so a ``T = k + 1``
+    call can drop different tokens than k + 1 single-token steps — a real
+    semantic difference, not float noise.  For archs with MoE stacks the
+    verify therefore scans single-token steps *inside* the one dispatch:
+    bitwise the same arithmetic as plain decode, same dispatch count, only
+    the within-call matmul batching is lost (and only for MoE archs).
+    """
+    moe_arch = any(s.kind == "moe" for s in arch.stacks)
+
+    def score(logits):
+        lf = logits.astype(jnp.float32)
+        top2 = jax.lax.top_k(lf, 2)[0]
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32), top2[..., 0] - top2[..., 1]
+
+    def verify_fn(params, tokens, pools, bt, start):
+        p = params_struct(params)
+        cache_of = lambda pools: {**pools, "_paged": {"bt": bt}}
+        if moe_arch:
+            def step(carry, tok):
+                pos, pools = carry
+                logits, new_cache, _ = apply_lm(
+                    p, arch, tokens=tok[:, None], cache=cache_of(pools),
+                    start_pos=pos, rt=rt,
+                )
+                am, mg = score(logits[:, 0])
+                return (pos + 1, new_cache), (am, mg)
+
+            (_, new_cache), (am, mg) = jax.lax.scan(
+                step, (start, pools), jnp.swapaxes(tokens, 0, 1)
+            )
+            return jnp.swapaxes(am, 0, 1), jnp.swapaxes(mg, 0, 1), new_cache
+        logits, new_cache, _ = apply_lm(
+            p, arch, tokens=tokens, cache=cache_of(pools), start_pos=start, rt=rt,
+        )
+        am, mg = score(logits)
+        return am, mg, new_cache
+
+    return jax.jit(verify_fn, donate_argnums=(2,))
+
+
+def accept_prefix(draft_tokens, verify_argmax) -> tuple[int, list[int]]:
+    """Greedy accept-prefix for one row: ``draft_tokens (k,)`` proposals vs
+    ``verify_argmax (k + 1,)`` scored positions.  Returns ``(a, emitted)``
+    where ``a`` is the number of accepted draft tokens and ``emitted`` is
+    ``draft[:a] + [verify_argmax[a]]`` — the correction token on the first
+    mismatch, the bonus token on full acceptance.  ``emitted`` is exactly
+    the next ``a + 1`` tokens of non-speculative greedy decode."""
+    a = 0
+    k = len(draft_tokens)
+    while a < k and int(draft_tokens[a]) == int(verify_argmax[a]):
+        a += 1
+    return a, [int(t) for t in draft_tokens[:a]] + [int(verify_argmax[a])]

@@ -353,3 +353,64 @@ def test_rwkv6_kernel_initial_state_carry():
     )
     np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 2)), np.asarray(y_full), atol=1e-4)
     np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# windowed paged-attention decode (sliding-window kernel coverage)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("H,KV,window", [(4, 4, 8), (8, 2, 5), (6, 1, 16)])
+def test_paged_attention_window_matches_ref(H, KV, window):
+    """Sliding-window masking in the paged decode kernel: each row attends
+    only keys at kpos >= length - window.  MHA/GQA/MQA sweep, mixed lengths
+    shorter and longer than the window."""
+    B, Dh, NB, bs, MB = 3, 32, 16, 8, 4
+    lens = [19, 3, 32]
+    kp, vp, bt, ln = _paged_setup(B, KV, Dh, NB, bs, MB, lens, seed=11)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kp, vp, bt, ln, window=window)
+    want = ref.ref_paged_attention(q, kp, vp, bt, ln, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_window_matches_flash_window_ref():
+    """Cross-oracle: a fully-packed windowed paged decode equals the dense
+    flash oracle's sliding-window decode on the gathered view."""
+    B, H, Dh, bs, MB, W = 2, 4, 16, 4, 3, 5
+    L = bs * MB
+    kp, vp, bt, ln = _paged_setup(B, H, Dh, 1 + B * MB, bs, MB, [L, L], seed=12)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kp, vp, bt, ln, window=W)
+    k = np.asarray(kp)[np.asarray(bt)].reshape(B, L, H, Dh).transpose(0, 2, 1, 3)
+    v = np.asarray(vp)[np.asarray(bt)].reshape(B, L, H, Dh).transpose(0, 2, 1, 3)
+    want = ref.ref_flash_attention(
+        jnp.asarray(q)[:, :, None, :], jnp.asarray(k), jnp.asarray(v),
+        causal=True, window=W,
+    )[:, :, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_window_wider_than_length_is_causal():
+    """A window covering the whole sequence must equal the unwindowed path
+    (the mask reduces to plain causal validity)."""
+    B, H, Dh, NB, bs, MB = 2, 2, 16, 8, 4, 4
+    kp, vp, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [7, 13], seed=13)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    wide = ops.paged_attention(q, kp, vp, bt, ln, window=1000)
+    plain = ops.paged_attention(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(wide), np.asarray(plain), atol=1e-6)
+    with pytest.raises(ValueError):
+        ops.paged_attention(q, kp, vp, bt, ln, window=0)
+
+
+def test_paged_attention_q8_window_matches_ref():
+    """Window masking composes with the int8 in-register dequant path."""
+    B, H, KV, Dh, NB, bs, MB, W = 2, 4, 2, 16, 10, 4, 4, 6
+    rng = np.random.default_rng(14)
+    kq, vq, ks, vs = _q8_pools(rng, NB, bs, KV, Dh)
+    _, _, bt, ln = _paged_setup(B, KV, Dh, NB, bs, MB, [9, 14], seed=14)
+    q = jnp.asarray(rng.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs, window=W)
+    want = ref.ref_paged_attention_q8(q, kq, vq, ks, vs, bt, ln, window=W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
