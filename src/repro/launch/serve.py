@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --requests 6 --prompt-len 12 --max-new 8 \
         [--paged --block-size 16 --prefill-chunk 32] [--deploy-int8] \
-        [--int-forward] [--kv-int8 [--kv-bits 4]] [--prefix-share] \
+        [--int-forward] [--kv-int8 [--kv-bits 4]] \
+        [--prefix-share [--shared-prefix 24] [--pin-prompt 32]] \
         [--spec-k 4 [--spec-draft self-int8|<config>]] \
         [--sample topk --temperature 0.8 --top-k 40] [--parity-check]
 
@@ -15,8 +16,12 @@ serving (the paper-guaranteed deployment artifact).  ``--int-forward``
 W8A8 integer kernel instead of dequant + float dot; ``--kv-int8`` stores the
 paged KV pools as integer blocks with per-slot scales (~4x KV bytes/token at
 the default ``--kv-bits 8``; ``--kv-bits 4`` packs two codes per byte).
-``--prefix-share`` dedups common prompt prefixes through the refcounted
-copy-on-write block registry.
+``--prefix-share`` dedups common prompt prefixes through the radix prompt
+cache (refcounted copy-on-write blocks, LRU/cost eviction).
+``--shared-prefix N`` prepends an N-token common prefix to every request so
+the cache has something to hit; ``--pin-prompt N`` additionally prefills an
+N-token system preamble once pre-traffic and pins it permanently (never
+evicted), so even the first request adopts it.
 
 ``--spec-k K`` serves through :class:`SpecServeEngine`: K tokens drafted per
 round (default drafter ``self-int8`` — the same weights on the integer fast
@@ -94,7 +99,13 @@ def main(argv=None):
     ap.add_argument("--kv-bits", type=int, choices=(8, 4), default=8,
                     help="KV code width with --kv-int8 (4 packs two codes per byte)")
     ap.add_argument("--prefix-share", action="store_true",
-                    help="dedup common prompt prefixes via the CoW block registry")
+                    help="dedup common prompt prefixes via the radix prompt cache")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend an N-token common prefix to every request")
+    ap.add_argument("--pin-prompt", type=int, default=0,
+                    help="prefill an N-token system preamble once and pin it "
+                         "in the prompt cache (prepended to every request; "
+                         "requires --prefix-share)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: draft tokens per round (0 = off)")
     ap.add_argument("--spec-draft", default="self-int8",
@@ -127,10 +138,14 @@ def main(argv=None):
                 ("--num-blocks", args.num_blocks is not None),
                 ("--spec-k", args.spec_k > 0),
                 ("--prefix-share", args.prefix_share),
+                ("--shared-prefix", args.shared_prefix > 0),
+                ("--pin-prompt", args.pin_prompt > 0),
             ) if on
         ]
         if wanted:
             ap.error(f"{', '.join(wanted)} only affect the paged engine; add --paged")
+    if args.pin_prompt > 0 and not args.prefix_share:
+        ap.error("--pin-prompt pins into the prompt cache; add --prefix-share")
     if args.kv_bits != 8 and not args.kv_int8:
         ap.error("--kv-bits only affects integer KV blocks; add --kv-int8")
     if args.spec_draft != "self-int8" and args.spec_k == 0:
@@ -152,7 +167,16 @@ def main(argv=None):
         print("int-forward: deployed linears run the fused W8A8 integer kernel")
 
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, arch.vocab, (args.prompt_len,)).astype(np.int32)
+    # common material is *prepended* to the per-request prompt_len tail:
+    # a pinned preamble first (prefilled once, never evicted), then an
+    # optional shared prefix (cached from the first request that donates it)
+    preamble = (rng.integers(0, arch.vocab, (args.pin_prompt,)).astype(np.int32)
+                if args.pin_prompt > 0 else None)
+    common = (rng.integers(0, arch.vocab, (args.shared_prefix,)).astype(np.int32)
+              if args.shared_prefix > 0 else None)
+    head = [p for p in (preamble, common) if p is not None]
+    prompts = [np.concatenate(head + [rng.integers(0, arch.vocab, (args.prompt_len,)).astype(np.int32)])
+               if head else rng.integers(0, arch.vocab, (args.prompt_len,)).astype(np.int32)
                for _ in range(args.requests)]
     sample = SampleConfig(method=args.sample, temperature=args.temperature, top_k=args.top_k)
     decode_kernel = args.decode_kernel
@@ -191,14 +215,21 @@ def main(argv=None):
                     spec_k=args.spec_k, block_size=args.block_size,
                     prefill_chunk=args.prefill_chunk,
                 )
-            return SpecServeEngine(arch, params, spec_k=args.spec_k, drafter=drafter, **kw)
-        return PagedServeEngine(arch, params, **kw)
+            e = SpecServeEngine(arch, params, spec_k=args.spec_k, drafter=drafter, **kw)
+        else:
+            e = PagedServeEngine(arch, params, **kw)
+        if preamble is not None:
+            pinned = e.pin_prompt(preamble)
+            print(f"pinned system preamble: {pinned} of {len(preamble)} tokens "
+                  f"({pinned // e.cache.block_size} blocks, never evicted)")
+        return e
 
     report: dict = {
         "arch": args.arch, "paged": bool(args.paged or args.parity_check),
         "int_forward": args.int_forward, "kv_int8": args.kv_int8,
         "kv_bits": args.kv_bits if args.kv_int8 else None,
         "spec_k": args.spec_k, "prefix_share": args.prefix_share,
+        "shared_prefix": args.shared_prefix, "pin_prompt": args.pin_prompt,
     }
     if args.parity_check:
         # the baseline stays on the float truth path: dequant matmuls
@@ -221,6 +252,13 @@ def main(argv=None):
         report["contiguous"] = _report("contiguous", contig)
         report["paged_engine"] = _report("paged", pagede)
         report["kv_bytes_per_token"] = pagede.cache.kv_bytes_per_token()
+        if args.prefix_share:
+            print(f"prefix sharing: {pagede.cache.prefix_hits} hits, "
+                  f"{pagede.cache.prefix_hit_tokens} prompt tokens served from "
+                  f"shared blocks, {pagede.cache.cow_copies} CoW copies")
+            report["prefix_hits"] = pagede.cache.prefix_hits
+            report["prefix_hit_tokens"] = pagede.cache.prefix_hit_tokens
+            report["cow_copies"] = pagede.cache.cow_copies
         if args.spec_k > 0:
             report["spec"] = _spec_report(pagede)
         if args.kv_int8:

@@ -474,9 +474,10 @@ class PagedServeEngine(_StatsMixin):
         second, not crash it).  Prefix adoption only ever *reduces* a
         request's fresh-block draw (a copy-on-write fault consumes a block
         the sequence would otherwise have allocated outright), so the
-        worst-case reservation stays sound with sharing on.  Registry-pinned
-        prefix blocks count as capacity: ``allocate`` reclaims them (FIFO
-        eviction) before it ever fails."""
+        worst-case reservation stays sound with sharing on.  Cache-pinned
+        prefix blocks count as capacity: ``allocate`` reclaims them
+        (LRU/cost eviction; permanently pinned chains excluded) before it
+        ever fails."""
         budget = self.cache.free_blocks + self.cache.reclaimable_blocks()
 
         def can_admit(req: Request) -> bool:
@@ -494,15 +495,29 @@ class PagedServeEngine(_StatsMixin):
         view of this slot — other live rows' caches and recurrent states are
         never touched, so admission composes with continuous batching on
         every arch (incl. recurrent stacks).  With ``prefix_share`` the
-        longest registered prompt prefix is adopted from the cache's block
-        registry first and prefill resumes after it."""
+        longest cached prompt prefix is adopted from the radix prompt cache
+        first and prefill resumes after it — at the *chunk-aligned* offset
+        below the shared length, not at the shared length itself.  Resuming
+        at an arbitrary offset mints a fresh XLA compile per distinct
+        shared-prefix length (the chunk token array takes a new shape); the
+        aligned resume keeps every chunk shape inside the fixed
+        ``{prefill_chunk, len % prefill_chunk}`` set plain prefill already
+        compiles.  Adoption is trimmed to the blocks covering ``[0,
+        resume)``: the span ``[resume, shared)`` gets recomputed regardless
+        (re-deriving bit-identical K/V — deterministic B=1 chunked prefill,
+        same path the donor ran), so adopting its partial block would only
+        buy a copy-on-write fault; when ``block_size`` divides
+        ``prefill_chunk`` the trimmed run is all-full blocks the adopter
+        never writes, and admission costs zero CoW dispatches."""
         self.cache.reset_slot(slot)
         adopted = 0
         if self.prefix_share:
             shared, blocks = self.cache.lookup_prefix(req.prompt)
-            if shared > 0:
-                self.cache.adopt_prefix(slot, shared, blocks)
-                req.prefilled = adopted = shared
+            resume = (shared // self.sched.prefill_chunk) * self.sched.prefill_chunk
+            if resume > 0:
+                blocks = blocks[: self.cache.blocks_needed(resume)]
+                self.cache.adopt_prefix(slot, resume, blocks)
+                req.prefilled = adopted = resume
         self.cache.allocate(slot, self._slot_tokens(req))
         t0 = time.perf_counter()
         tok = marg = None
@@ -555,6 +570,39 @@ class PagedServeEngine(_StatsMixin):
             req.margins.append(float(margs[slot]))
             if self.sched.record_token(slot, int(firsts[slot])):
                 self._release_slot(slot)
+
+    def pin_prompt(self, tokens) -> int:
+        """Prefill a system preamble once and pin its full blocks in the
+        radix prompt cache permanently (``--pin-prompt``): the chain is
+        never evicted — not by block pressure, not by a burst of cold
+        registrations — and does not count against the node cap.  Call
+        before traffic (needs an idle engine: it borrows slot 0 for the
+        prefill and releases it, leaving only the cache pins).  Returns the
+        number of pinned tokens (full blocks only — the partial tail block,
+        if any, is recomputed by adopters like any other resumed span)."""
+        if not self.prefix_share:
+            raise ValueError("pin_prompt requires prefix_share=True")
+        tokens = _normalize_prompt(tokens, self.bos_id)
+        if not self.sched.idle():
+            raise RuntimeError("pin_prompt needs an idle engine (call pre-traffic)")
+        if len(tokens) + 1 > self.max_seq:
+            raise ValueError("pinned prompt exceeds max_seq")
+        slot = 0
+        self.cache.reset_slot(slot)
+        self.cache.allocate(slot, len(tokens))
+        for lo in range(0, len(tokens), self.sched.prefill_chunk):
+            hi = min(lo + self.sched.prefill_chunk, len(tokens))
+            self.cache.ensure_writable(slot, lo, hi)
+            sub = self.cache.slice_slot(slot)
+            _, _, new_pools = self._prefill(
+                self.params, jnp.asarray(tokens[None, lo:hi]), sub,
+                self.cache.bt_row(slot), jnp.int32(lo), self._next_key(),
+            )
+            self.cache.merge_slot(slot, new_pools)
+        self.cache.lens[slot] = len(tokens)
+        self.cache.register_prefix(slot, tokens, pinned=True)
+        self.cache.release(slot)
+        return (len(tokens) // self.cache.block_size) * self.cache.block_size
 
     def tick(self) -> int:
         """One decode step for every live slot (dead rows ride along writing

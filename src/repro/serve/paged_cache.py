@@ -56,18 +56,30 @@ Sharing and rollback (the speculative-decoding / prefix-sharing substrate):
   round restores the allocator state *exactly* (LIFO-symmetric with
   ``allocate``), and stale pool entries past ``lens`` are masked by the
   position arithmetic until overwritten;
-* a host-side **prefix registry** maps registered prompts to their block
-  runs: ``lookup_prefix`` finds the longest common prefix (capped at
-  ``len(prompt) - 1`` so prefill always has at least one token to produce
-  logits from) and ``adopt_prefix`` maps those blocks — including a partial
-  tail block — into a new slot for free.  Registration takes its own
-  refcount on every listed block, so a registered prefix outlives the
-  sequence that produced it (the common-prompt payoff: later requests hit
-  even after the donor finished); entries are evicted FIFO under block
-  pressure (``reclaim``) or at the entry cap, and the pin guarantees a
-  registered block can never be freed-and-recycled out from under its
-  entry (asserted in ``_free_and_purge``) — stale-KV matches are
-  structurally impossible.
+* a host-side **radix-tree prompt cache** maps block-granular token chunks
+  to pinned blocks: each node owns one full block of ``block_size`` prompt
+  tokens, keyed under its parent by the chunk's token tuple (hash-exact —
+  descent is one dict probe per block, O(prompt / block_size) total,
+  independent of how many prompts are cached).  ``register_prefix`` inserts
+  a prompt's fully-covered blocks as a node chain, deduplicating against
+  existing nodes (a second donor of the same prefix pins nothing new), so
+  *partial-prefix* hits fall out structurally: a lookup descends as far as
+  its tokens match ever-registered block content, never needing a whole
+  registered prompt to agree.  ``lookup_prefix`` returns the longest match
+  (capped at ``len(prompt) - 1`` so prefill always has at least one token
+  to produce logits from), including a partial match *into* the next
+  block, and ``adopt_prefix`` maps those blocks into a new slot for free.
+  Each node pins its block with its own refcount, so a cached prefix
+  outlives its donor; eviction is **LRU/cost-aware** — leaf nodes only
+  (children always outlive parents), lowest ``hits * covered_tokens``
+  first, ties broken least-recently-used — under block pressure
+  (``reclaim``) or at the node cap, so one burst of cold registrations can
+  no longer flush a hot system prompt (the FIFO failure mode).  Nodes
+  registered ``pinned=True`` (``register_prefix(..., pinned=True)``, the
+  ``--pin-prompt`` system-preamble path) are never evicted, and a pinned
+  node shields its ancestors.  The pin guarantees a cached block can never
+  be freed-and-recycled out from under its node (asserted in
+  ``_free_and_purge``) — stale-KV matches are structurally impossible.
 
 Invariants the allocator maintains:
 * a sequence's blocks appear in its table row in logical order, so the
@@ -106,6 +118,25 @@ TRASH_BLOCK = 0
 def _leaf_name(path) -> Optional[str]:
     keys = [k.key for k in path if hasattr(k, "key")]
     return keys[-1] if keys else None
+
+
+class _RadixNode:
+    """One cached block of the radix prompt cache: ``key`` is the block's
+    token chunk (the child key under ``parent``), ``block`` the pinned pool
+    block holding those tokens' K/V.  ``hits``/``last_used`` feed the
+    LRU/cost eviction policy; ``pinned`` nodes are never evicted."""
+
+    __slots__ = ("key", "block", "parent", "children", "hits", "last_used", "depth_tokens", "pinned")
+
+    def __init__(self, key, block, parent, depth_tokens):
+        self.key = key  # tuple of block_size token ids
+        self.block = block
+        self.parent = parent
+        self.children: dict[tuple, "_RadixNode"] = {}
+        self.hits = 0
+        self.last_used = 0
+        self.depth_tokens = depth_tokens  # prompt tokens a hit on this node serves
+        self.pinned = False
 
 
 def _code_shape(dim: int, kv_bits: int) -> tuple[int, ...]:
@@ -239,19 +270,32 @@ class PagedKVCache:
         self.refcounts = np.zeros((num_blocks,), np.int32)
         self.peak_blocks = 0  # high-water mark of simultaneously owned blocks
         self.cow_copies = 0  # copy-on-write block copies performed
+        self.pool_rebuilds = 0  # pool-pytree rebuild dispatches (CoW batches)
         self.prefix_hits = 0  # admissions that adopted a shared prefix
         self.prefix_hit_tokens = 0  # prompt tokens served from shared blocks
-        # prefix registry: eid -> (prompt token array, block run covering it),
-        # insertion-ordered for FIFO eviction; registration pins each listed
-        # block with its own refcount (tracked in _entry_rc) so prefixes
-        # outlive their donor sequence; reverse map block -> eids for eager
-        # purge if a block is ever freed out from under an entry
+        # radix prompt cache: one node per cached block, children keyed by
+        # the next block's token tuple.  Each node pins its block with its
+        # own refcount (tracked per block in _entry_rc) so cached prefixes
+        # outlive their donor sequence; _block_pins counts nodes per block
+        # (normally 1, but nothing stops a caller registering one block
+        # under two key chains) for the freed-block purge assert.
+        # max_prefix_entries caps the number of *unpinned* nodes (pinned
+        # system prompts ride outside the cap).
         self.max_prefix_entries = max_prefix_entries
-        self._prefix_entries: dict[int, tuple[np.ndarray, tuple[int, ...]]] = {}
-        self._block_eids: dict[int, set] = {}
+        self._radix_root = _RadixNode((), TRASH_BLOCK, None, 0)
+        self._block_pins: dict[int, int] = {}
         self._entry_rc = np.zeros((num_blocks,), np.int32)
-        self._next_eid = 0
-        self._bt_dev = None  # device copy of tables; invalidated on mutation
+        self._radix_clock = 0  # logical LRU clock
+        self._radix_nodes = 0  # total node count
+        self._radix_unpinned = 0  # unpinned node count, checked against the cap
+        # Device copy of the block tables.  Mutations mark their row dirty;
+        # bt() patches dirty rows in place on the existing device array (one
+        # dispatch per admission round) instead of re-uploading the whole
+        # table per adoption/CoW — the counters witness that behavior.
+        self._bt_dev = None
+        self._bt_dirty: set[int] = set()
+        self.bt_full_uploads = 0
+        self.bt_row_patches = 0
         # all seq-indexed state lives in pools (no ring / recurrent per-slot
         # leaves) — the precondition for prefix sharing and spec rollback
         names = {
@@ -289,7 +333,7 @@ class PagedKVCache:
             self.tables[slot, len(owned)] = b
             owned.append(b)
             self.refcounts[b] = 1
-            self._bt_dev = None
+            self._bt_dirty.add(slot)
         self.peak_blocks = max(self.peak_blocks, self.allocated_blocks())
 
     def _drop_block(self, slot: int, idx: int) -> Optional[int]:
@@ -306,10 +350,10 @@ class PagedKVCache:
             return
         self.free.extend(freed)
         for b in freed:
-            # a registered block is pinned by its entry's own refcount, so
-            # it can only hit zero after _evict_entry already unmapped it —
-            # a freed block must never still be matchable in the registry
-            assert b not in self._block_eids, "freed a registry-pinned block"
+            # a cached block is pinned by its node's own refcount, so it can
+            # only hit zero after eviction already unmapped its node — a
+            # freed block must never still be matchable in the radix cache
+            assert b not in self._block_pins, "freed a registry-pinned block"
 
     def release(self, slot: int) -> None:
         freed = []
@@ -322,7 +366,7 @@ class PagedKVCache:
         self.tables[slot] = TRASH_BLOCK
         self.lens[slot] = 0
         self.watermarks[slot] = 0
-        self._bt_dev = None
+        self._bt_dirty.add(slot)
 
     def rollback(self, slot: int, n_tokens: int) -> None:
         """Lens-only rollback: rewind ``slot``'s write position to
@@ -355,7 +399,7 @@ class PagedKVCache:
                 freed.append(b)
         self._free_and_purge(freed)
         self.lens[slot] = n_tokens
-        self._bt_dev = None
+        self._bt_dirty.add(slot)
 
     def live_tokens(self) -> int:
         return int(self.lens.sum())
@@ -382,13 +426,16 @@ class PagedKVCache:
     def ensure_writable(self, slot: int, start: int, end: int) -> None:
         """Make the token span ``[start, end)`` of ``slot`` safe to write:
         any covered block with refcount > 1 (shared via ``adopt_prefix``) is
-        replaced by a private copy — one fused device-side ``set`` per pool
-        leaf — before the jitted write ever sees the table.  Also advances
-        the slot's write watermark.  No-op for unshared spans."""
+        replaced by a private copy before the jitted write ever sees the
+        table.  All faulting blocks of one call are copied in a **single**
+        batched gather/scatter per pool leaf (one pool-pytree rebuild, one
+        dispatch — not one per block).  Also advances the slot's write
+        watermark.  No-op for unshared spans."""
         if end <= start:
             return
         self.watermarks[slot] = max(int(self.watermarks[slot]), end)
         bs = self.block_size
+        pairs: list[tuple[int, int]] = []
         for j in range(start // bs, (end - 1) // bs + 1):
             b = int(self.tables[slot, j])
             if b == TRASH_BLOCK or self.refcounts[b] <= 1:
@@ -398,30 +445,52 @@ class PagedKVCache:
             if not self.free:
                 raise RuntimeError("paged KV cache out of blocks for CoW copy")
             nb = self.free.pop()
-            self._copy_block(b, nb)
+            pairs.append((b, nb))
             self.refcounts[b] -= 1
             self.refcounts[nb] = 1
             self.tables[slot, j] = nb
             self._owned[slot][j] = nb
-            self.cow_copies += 1
-            self._bt_dev = None
+            self._bt_dirty.add(slot)
+        if pairs:
+            self._copy_blocks(pairs)
+            self.cow_copies += len(pairs)
         self.peak_blocks = max(self.peak_blocks, self.allocated_blocks())
 
-    def _copy_block(self, src: int, dst: int) -> None:
+    def _copy_blocks(self, pairs: list) -> None:
+        """Copy every (src, dst) block pair in one batched ``set`` per pool
+        leaf.  Gathers read the pre-copy pool state (dst blocks are fresh
+        off the free list, so no pair can observe another's write), and the
+        whole batch costs ONE pool-pytree rebuild regardless of how many
+        blocks faulted — ``pool_rebuilds`` witnesses that."""
+        src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
         def one(path, leaf):
             if _leaf_name(path) in POOL_KEYS:
                 return leaf.at[:, dst].set(leaf[:, src])
             return leaf
 
         self.pools = jax.tree_util.tree_map_with_path(one, self.pools)
+        self.pool_rebuilds += 1
 
     # -- prefix sharing -----------------------------------------------------
 
-    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
-        """Publish ``slot``'s prompt block run for future sharing.  The entry
-        takes its own refcount on every listed block, so the prefix stays
-        servable after the donor sequence releases — until the registry
-        evicts it (FIFO, under block pressure or at the entry cap).
+    def _touch(self, node: _RadixNode, hit: bool) -> None:
+        self._radix_clock += 1
+        node.last_used = self._radix_clock
+        if hit:
+            node.hits += 1
+
+    def register_prefix(self, slot: int, tokens: np.ndarray, pinned: bool = False) -> None:
+        """Publish ``slot``'s prompt blocks into the radix prompt cache.
+        Each block wholly covered by the prompt becomes (or joins) a radix
+        node keyed by its token chunk; new nodes pin the slot's own block
+        with the node's refcount, existing nodes deduplicate (a second donor
+        of an already-cached prefix pins nothing).  The chain stays servable
+        after the donor releases — until LRU/cost eviction under block
+        pressure or at the node cap.  ``pinned=True`` marks the whole chain
+        permanent (the ``--pin-prompt`` system-preamble path): never evicted,
+        not counted against the cap.
 
         Only blocks *wholly covered* by the prompt are listed: the donor
         writes at positions >= len(prompt) only, so it can never write into
@@ -436,77 +505,159 @@ class PagedKVCache:
         n_full = tokens.size // self.block_size
         if n_full == 0 or tokens.size < 2:
             return  # nothing shareable below a full block / the len-1 cap
-        shared, _ = self.lookup_prefix(tokens)
-        if shared >= min(tokens.size - 1, n_full * self.block_size):
-            return  # an existing entry already covers this prompt
-        while len(self._prefix_entries) >= self.max_prefix_entries:
-            self._evict_entry(next(iter(self._prefix_entries)))
-        blocks = tuple(self._owned[slot][:n_full])
-        eid = self._next_eid
-        self._next_eid += 1
-        self._prefix_entries[eid] = (tokens.copy(), blocks)
-        for b in blocks:
-            self._block_eids.setdefault(b, set()).add(eid)
-            self.refcounts[b] += 1
-            self._entry_rc[b] += 1
+        cur = self._radix_root
+        path = {id(cur)}
+        for j in range(n_full):
+            key = tuple(int(t) for t in tokens[j * self.block_size : (j + 1) * self.block_size])
+            child = cur.children.get(key)
+            if child is None:
+                # cap applies to unpinned nodes; evict around the insertion
+                # path so we never orphan the chain we are extending
+                while not pinned and self._radix_unpinned >= self.max_prefix_entries:
+                    if not self._evict_one(protect=path):
+                        return  # everything else is pinned: stop inserting
+                b = self._owned[slot][j]
+                child = _RadixNode(key, b, cur, (j + 1) * self.block_size)
+                child.pinned = pinned
+                cur.children[key] = child
+                self._block_pins[b] = self._block_pins.get(b, 0) + 1
+                self.refcounts[b] += 1
+                self._entry_rc[b] += 1
+                self._radix_nodes += 1
+                if not pinned:
+                    self._radix_unpinned += 1
+            elif pinned and not child.pinned:
+                # pinning promotes the whole chain; a previously-unpinned
+                # node leaves the cap accounting
+                child.pinned = True
+                self._radix_unpinned -= 1
+            self._touch(child, hit=False)
+            cur = child
+            path.add(id(cur))
 
-    def _evict_entry(self, eid: int) -> None:
-        """Drop a registry entry, releasing its pinned refcounts (blocks no
-        live slot still owns return to the free list)."""
-        _, blocks = self._prefix_entries.pop(eid)
-        freed = []
-        for b in blocks:
-            eids = self._block_eids.get(b)
-            if eids is not None:
-                eids.discard(eid)
-                if not eids:
-                    del self._block_eids[b]
-            self._entry_rc[b] -= 1
-            self.refcounts[b] -= 1
-            assert self.refcounts[b] >= 0, "refcount underflow on eviction"
-            if self.refcounts[b] == 0:
-                freed.append(b)
-        self.free.extend(freed)
+    def _evict_one(self, protect: Optional[set] = None) -> bool:
+        """Evict the lowest-value evictable leaf: priority ``hits *
+        covered_tokens`` (cost-aware — a hot long prefix beats a cold short
+        one), ties broken least-recently-used.  Only leaves are evictable
+        (children's chains extend their parents), pinned nodes never are,
+        and ``protect`` shields an in-progress insertion path.  Returns
+        whether a node was evicted; its block returns to the free list iff
+        no live slot still owns it."""
+        protect = protect or set()
+        best = None
+        stack = list(self._radix_root.children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+                continue
+            if node.pinned or id(node) in protect:
+                continue
+            score = (node.hits * node.depth_tokens, node.last_used)
+            if best is None or score < best[0]:
+                best = (score, node)
+        if best is None:
+            return False
+        node = best[1]
+        node.parent.children.pop(node.key)
+        pins = self._block_pins[node.block] - 1
+        if pins:
+            self._block_pins[node.block] = pins
+        else:
+            del self._block_pins[node.block]
+        self._radix_nodes -= 1
+        self._radix_unpinned -= 1
+        self._entry_rc[node.block] -= 1
+        self.refcounts[node.block] -= 1
+        assert self.refcounts[node.block] >= 0, "refcount underflow on eviction"
+        if self.refcounts[node.block] == 0:
+            self.free.append(node.block)
+        return True
 
     def reclaim(self, need: int) -> None:
-        """Evict registry entries (oldest first) until at least ``need``
-        blocks are free or the registry is empty — live sequences always win
-        over cached prefixes."""
-        while self.free_blocks < need and self._prefix_entries:
-            self._evict_entry(next(iter(self._prefix_entries)))
+        """Evict prompt-cache nodes (lowest value first) until at least
+        ``need`` blocks are free or only pinned chains remain — live
+        sequences always win over cached prefixes."""
+        while self.free_blocks < need and self._evict_one():
+            pass
+
+    def registry_size(self) -> int:
+        """Number of cached radix nodes, pinned included."""
+        return self._radix_nodes
+
+    def registered_blocks(self) -> frozenset:
+        """The block ids currently pinned by the prompt cache."""
+        return frozenset(self._block_pins)
 
     def reclaimable_blocks(self) -> int:
-        """Blocks the registry alone is keeping alive (refcount fully
-        accounted for by entry pins): what ``reclaim`` could hand back.  The
-        admission gate counts these as available capacity."""
-        return int(np.sum((self._entry_rc > 0) & (self.refcounts == self._entry_rc)))
+        """Blocks a full ``reclaim`` would hand back: nodes in fully
+        evictable subtrees (no pinned node at or below them — eviction is
+        leaf-first, so a pinned descendant shields its ancestors) whose
+        refcount is entirely the node's own pin.  The admission gate counts
+        these as available capacity, so this must never overpromise."""
+
+        def walk(node: _RadixNode) -> tuple[bool, int]:
+            evictable, freed = True, 0
+            for ch in node.children.values():
+                ev, f = walk(ch)
+                evictable &= ev
+                freed += f
+            evictable &= not node.pinned
+            if evictable and self.refcounts[node.block] == self._entry_rc[node.block]:
+                freed += 1
+            return evictable, freed
+
+        return sum(walk(ch)[1] for ch in self._radix_root.children.values())
 
     def lookup_prefix(self, tokens: np.ndarray) -> tuple[int, tuple[int, ...]]:
-        """Longest registered common prefix of ``tokens``, capped at
+        """Longest cached common prefix of ``tokens``, capped at
         ``len(tokens) - 1`` (prefill must keep at least one token to produce
-        logits from).  Returns ``(shared_tokens, block_run)`` where the run
-        covers the shared span — its last block may be partial (the adopter
-        copy-on-writes it when its own tokens land there)."""
+        logits from).  Descends the radix tree one full-block dict probe at
+        a time — O(prompt / block_size), independent of how many prompts
+        ever registered — then tries a *partial* match into the children of
+        the deepest full-block node.  Returns ``(shared_tokens, block_run)``
+        where the run covers the shared span — its last block may be partial
+        (the adopter copy-on-writes it when its own tokens land there)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         cap = tokens.size - 1
-        best, best_blocks = 0, ()
-        for ptoks, blocks in self._prefix_entries.values():
-            # an entry only pins the blocks wholly inside its prompt, so a
-            # match can never extend past the entry's block coverage
-            n = min(cap, ptoks.size, len(blocks) * self.block_size)
-            if n <= best:
-                continue
-            neq = np.nonzero(tokens[:n] != ptoks[:n])[0]
-            m = int(neq[0]) if neq.size else n
-            if m > best:
-                best, best_blocks = m, blocks[: self.blocks_needed(m)]
-        return best, best_blocks
+        cur = self._radix_root
+        blocks: list[int] = []
+        d = 0
+        while (d + 1) * self.block_size <= cap:
+            key = tuple(int(t) for t in tokens[d * self.block_size : (d + 1) * self.block_size])
+            child = cur.children.get(key)
+            if child is None:
+                break
+            self._touch(child, hit=True)
+            blocks.append(child.block)
+            cur = child
+            d += 1
+        shared = d * self.block_size
+        # partial match into the next block: the cached chunk whose tokens
+        # agree longest with the remaining span (ties: any maximal one)
+        rest = tokens[shared:cap]
+        if rest.size:
+            best_m, best_child = 0, None
+            for child in cur.children.values():
+                key = np.asarray(child.key, np.int32)[: rest.size]
+                neq = np.nonzero(rest[: key.size] != key)[0]
+                m = int(neq[0]) if neq.size else key.size
+                if m > best_m:
+                    best_m, best_child = m, child
+            if best_child is not None:
+                self._touch(best_child, hit=True)
+                blocks.append(best_child.block)
+                shared += best_m
+        return shared, tuple(blocks)
 
     def adopt_prefix(self, slot: int, shared_tokens: int, blocks) -> None:
         """Map a looked-up shared block run into an empty ``slot``: table
         entries point at the shared blocks (refcounts bumped), ``lens`` jumps
         to ``shared_tokens`` — the prompt prefix is served without recompute
-        and without copies until a write forces CoW."""
+        and without copies until a write forces CoW.  (The engine trims the
+        lookup result to its chunk-aligned resume offset before adopting, so
+        on block-aligned configs its prefill never writes into an adopted
+        block at all — zero CoW on the admission path.)"""
         assert not self._owned[slot], "adopt_prefix needs an empty slot"
         for j, b in enumerate(blocks):
             self.tables[slot, j] = b
@@ -516,7 +667,7 @@ class PagedKVCache:
         self.watermarks[slot] = shared_tokens
         self.prefix_hits += 1
         self.prefix_hit_tokens += shared_tokens
-        self._bt_dev = None
+        self._bt_dirty.add(slot)
         self.peak_blocks = max(self.peak_blocks, self.allocated_blocks())
 
     # -- per-slot state (recurrent / ring leaves) ---------------------------
@@ -566,10 +717,22 @@ class PagedKVCache:
 
     def bt(self) -> jnp.ndarray:
         """Full block table ``(slots, MB)`` as a device array.  Tables only
-        change at allocate/release/CoW, so the decode loop's per-tick call
-        reuses one upload between admissions."""
+        change at allocate/release/adopt/CoW, and each of those marks just
+        its own row dirty — so the per-tick call patches the touched rows
+        in place (one scatter per round, ``bt_row_patches``) instead of
+        re-uploading the whole table (``bt_full_uploads``, first call
+        only)."""
         if self._bt_dev is None:
             self._bt_dev = jnp.asarray(self.tables)
+            self._bt_dirty.clear()
+            self.bt_full_uploads += 1
+        elif self._bt_dirty:
+            rows = np.array(sorted(self._bt_dirty), np.int32)
+            self._bt_dev = self._bt_dev.at[jnp.asarray(rows)].set(
+                jnp.asarray(self.tables[rows])
+            )
+            self.bt_row_patches += 1
+            self._bt_dirty.clear()
         return self._bt_dev
 
     def bt_row(self, slot: int) -> jnp.ndarray:

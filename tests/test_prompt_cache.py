@@ -1,0 +1,312 @@
+"""Radix prompt cache: partial-prefix hits, LRU/cost eviction, system-prompt
+pinning, batched CoW, dirty-row block-table uploads, and the adoption-path
+compile-count witness (the prefix-share prefill cliff stays dead)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models.lm import init_lm
+from repro.nn.module import unbox
+from repro.serve.engine import PagedServeEngine
+from repro.serve.paged_cache import PagedKVCache
+
+
+def _cache(slots=3, num_blocks=32, block_size=4, max_seq=64, **kw):
+    arch = reduced(get_arch("yi-6b"))
+    return PagedKVCache(arch, slots=slots, block_size=block_size,
+                        max_seq=max_seq, num_blocks=num_blocks,
+                        dtype=jnp.float32, **kw)
+
+
+def _params(arch, seed=0):
+    return unbox(init_lm(jax.random.PRNGKey(seed), arch))
+
+
+# ---------------------------------------------------------------------------
+# radix lookup: partial-prefix hits without whole-prompt registration
+# ---------------------------------------------------------------------------
+
+
+def test_radix_partial_prefix_hit_mid_block():
+    """A query sharing only part of a cached prompt must still hit: full
+    blocks via exact descent, plus a partial match *into* the next cached
+    block (the adopter CoWs it at its divergence point)."""
+    c = _cache()
+    toks = np.arange(12, dtype=np.int32)
+    c.allocate(0, 12)
+    c.lens[0] = 12
+    c.register_prefix(0, toks)
+    donor_blocks = tuple(c._owned[0][:3])
+    # diverges inside the second block (position 6): one full block exact,
+    # two tokens partial into the next
+    q = np.concatenate([toks[:6], [99, 98, 97]]).astype(np.int32)
+    shared, blocks = c.lookup_prefix(q)
+    assert shared == 6
+    assert blocks == donor_blocks[:2]
+    # diverges inside the first block: partial hit on the root's child
+    q0 = np.concatenate([toks[:2], [77, 76, 75]]).astype(np.int32)
+    shared0, blocks0 = c.lookup_prefix(q0)
+    assert shared0 == 2 and blocks0 == donor_blocks[:1]
+    c.release(0)
+
+
+def test_radix_dedup_same_prefix_pins_once():
+    """A second donor of an already-cached prefix must not grow the tree or
+    double-pin blocks — nodes deduplicate by token-chunk key."""
+    c = _cache()
+    toks = np.arange(8, dtype=np.int32)
+    c.allocate(0, 8)
+    c.lens[0] = 8
+    c.register_prefix(0, toks)
+    size0, rc0 = c.registry_size(), c._entry_rc.copy()
+    shared, blocks = c.lookup_prefix(np.concatenate([toks, [5]]).astype(np.int32))
+    c.adopt_prefix(1, shared, blocks)
+    c.lens[1] = 8
+    c.register_prefix(1, toks)  # same prompt, second donor
+    assert c.registry_size() == size0
+    np.testing.assert_array_equal(c._entry_rc, rc0)
+    c.release(0)
+    c.release(1)
+
+
+def test_radix_lookup_caps_below_full_prompt():
+    c = _cache()
+    toks = np.arange(8, dtype=np.int32)
+    c.allocate(0, 8)
+    c.lens[0] = 8
+    c.register_prefix(0, toks)
+    shared, _ = c.lookup_prefix(toks)
+    assert shared == 7  # len - 1: prefill must keep one token for logits
+    c.release(0)
+
+
+# ---------------------------------------------------------------------------
+# LRU/cost eviction (FIFO regression: hot entry survives a cold burst)
+# ---------------------------------------------------------------------------
+
+
+def test_lru_hot_entry_survives_cold_registration_burst():
+    """Under the node cap, a burst of never-hit registrations must evict the
+    cold entries among themselves and leave the frequently-hit chain
+    servable (the seed's FIFO evicted by insertion order)."""
+    c = _cache(max_prefix_entries=4)
+    hot = np.arange(8, dtype=np.int32)
+    c.allocate(0, 8)
+    c.lens[0] = 8
+    c.register_prefix(0, hot)
+    c.release(0)
+    probe = np.concatenate([hot, [1]]).astype(np.int32)
+    for _ in range(5):  # make it hot
+        assert c.lookup_prefix(probe)[0] == 8
+    for i in range(6):  # cold burst at the cap
+        cold = (np.arange(8) + 100 * (i + 1)).astype(np.int32)
+        c.allocate(1, 8)
+        c.lens[1] = 8
+        c.register_prefix(1, cold)
+        c.release(1)
+    assert c.lookup_prefix(probe)[0] == 8, "hot chain was evicted by cold burst"
+    assert c._radix_unpinned <= c.max_prefix_entries
+    c.reclaim(c.num_blocks)
+    assert c.free_blocks == c.num_blocks - 1
+
+
+def test_eviction_is_leaf_only_and_cost_aware():
+    """Eviction must never orphan a chain (parents outlive children) and
+    must prefer the lowest hits x covered-tokens leaf."""
+    c = _cache(max_prefix_entries=3)
+    long = np.arange(12, dtype=np.int32)  # 3 nodes, at the cap
+    c.allocate(0, 12)
+    c.lens[0] = 12
+    c.register_prefix(0, long)
+    c.release(0)
+    c.lookup_prefix(np.concatenate([long, [1]]).astype(np.int32))
+    # inserting one cold block must evict the *leaf* of the long chain,
+    # never its root/middle (which the survivors still descend through)
+    cold = (np.arange(4) + 500).astype(np.int32)
+    c.allocate(1, 4)
+    c.lens[1] = 4
+    c.register_prefix(1, cold)
+    c.release(1)
+    shared, _ = c.lookup_prefix(np.concatenate([long, [1]]).astype(np.int32))
+    assert shared == 8  # first two nodes intact, leaf (tokens 8..11) evicted
+    c.reclaim(c.num_blocks)
+    assert c.free_blocks == c.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# system-prompt pinning
+# ---------------------------------------------------------------------------
+
+
+def test_pinned_chain_never_evicted():
+    """Pinned nodes survive full reclaim and cold bursts, ride outside the
+    node cap, and report zero reclaimable blocks."""
+    c = _cache(max_prefix_entries=2)
+    pin = (np.arange(12) + 7).astype(np.int32)
+    c.allocate(0, 12)
+    c.lens[0] = 12
+    c.register_prefix(0, pin, pinned=True)
+    c.release(0)
+    assert c.registry_size() == 3 and c._radix_unpinned == 0
+    assert c.reclaimable_blocks() == 0  # the gate must not budget pinned blocks
+    probe = np.concatenate([pin, [3]]).astype(np.int32)
+    c.reclaim(c.num_blocks)  # block pressure: evicts everything evictable
+    assert c.lookup_prefix(probe)[0] == 12
+    for i in range(5):  # cap-pressure burst
+        cold = (np.arange(8) + 1000 * (i + 1)).astype(np.int32)
+        c.allocate(1, 8)
+        c.lens[1] = 8
+        c.register_prefix(1, cold)
+        c.release(1)
+    assert c.lookup_prefix(probe)[0] == 12
+    assert c._radix_unpinned <= c.max_prefix_entries
+
+
+def test_pinning_promotes_existing_chain():
+    c = _cache(max_prefix_entries=8)
+    toks = np.arange(8, dtype=np.int32)
+    c.allocate(0, 8)
+    c.lens[0] = 8
+    c.register_prefix(0, toks)
+    assert c._radix_unpinned == 2
+    c.register_prefix(0, toks, pinned=True)
+    assert c._radix_unpinned == 0 and c.registry_size() == 2
+    c.release(0)
+    c.reclaim(c.num_blocks)
+    assert c.lookup_prefix(np.concatenate([toks, [9]]).astype(np.int32))[0] == 8
+
+
+# ---------------------------------------------------------------------------
+# batched CoW: one pool-pytree rebuild per ensure_writable call
+# ---------------------------------------------------------------------------
+
+
+def test_multi_block_cow_fault_is_one_pool_rebuild():
+    """A span covering several shared blocks must copy them all in a single
+    batched dispatch (the seed rebuilt the whole pool pytree once per
+    block), and the copies must carry the contents."""
+    c = _cache()
+    c.allocate(0, 12)
+    c.lens[0] = 12
+    # stamp per-block content so copies are distinguishable
+    src = list(c._owned[0])
+    for j, b in enumerate(src):
+        c.pools = jax.tree_util.tree_map_with_path(
+            lambda p, l, b=b, j=j: l.at[:, b].set(float(j + 1))
+            if p[-1].key in ("kp", "vp") else l, c.pools
+        )
+    c.adopt_prefix(1, 10, tuple(src))
+    assert c.pool_rebuilds == 0
+    c.ensure_writable(1, 0, 12)  # faults all three shared blocks at once
+    assert c.cow_copies == 3
+    assert c.pool_rebuilds == 1, "CoW batch must cost ONE pool rebuild"
+    leaf = c.pools["0"]["attn"]["kp"]
+    for j, (old, new) in enumerate(zip(src, c._owned[1])):
+        assert new != old
+        np.testing.assert_array_equal(np.asarray(leaf[:, new]), np.asarray(leaf[:, old]))
+    # refcounts fully private now
+    assert all(c.refcounts[b] == 1 for b in src)
+    assert all(c.refcounts[b] == 1 for b in c._owned[1])
+
+
+# ---------------------------------------------------------------------------
+# dirty-row block-table uploads
+# ---------------------------------------------------------------------------
+
+
+def test_bt_uploads_once_then_patches_dirty_rows():
+    """After the first full upload, adoptions/allocations/CoW must patch
+    only their dirty rows — one scatter per round, zero further full
+    uploads — and the device table must always match the host table."""
+    c = _cache()
+    _ = c.bt()
+    assert (c.bt_full_uploads, c.bt_row_patches) == (1, 0)
+    _ = c.bt()  # clean: no new dispatch
+    assert (c.bt_full_uploads, c.bt_row_patches) == (1, 0)
+    # an admission round touching two slots: one patch, not two, not a full
+    c.allocate(0, 8)
+    c.lens[0] = 8
+    c.register_prefix(0, np.arange(8, dtype=np.int32))
+    shared, blocks = c.lookup_prefix(np.arange(9, dtype=np.int32))
+    c.adopt_prefix(1, shared, blocks)
+    c.allocate(1, 12)
+    bt = c.bt()
+    assert (c.bt_full_uploads, c.bt_row_patches) == (1, 1)
+    np.testing.assert_array_equal(np.asarray(bt), c.tables)
+    # a CoW fault dirties its row; next bt() is one more patch
+    c.ensure_writable(1, 4, 8)
+    bt = c.bt()
+    assert (c.bt_full_uploads, c.bt_row_patches) == (1, 2)
+    np.testing.assert_array_equal(np.asarray(bt), c.tables)
+    c.release(0)
+    c.release(1)
+    bt = c.bt()
+    assert (c.bt_full_uploads, c.bt_row_patches) == (1, 3)
+    np.testing.assert_array_equal(np.asarray(bt), c.tables)
+
+
+# ---------------------------------------------------------------------------
+# the adoption-path compile cliff (engine-level witnesses)
+# ---------------------------------------------------------------------------
+
+
+def test_adoption_mints_no_new_prefill_compiles_per_prefix_length():
+    """The tentpole regression: serve two cohorts whose *shared-prefix*
+    lengths differ but whose prompt lengths match.  Chunk-aligned resume
+    keeps every resumed chunk shape inside the set plain prefill already
+    compiled, so the prefill jit cache must not grow on the second cohort
+    (the seed minted one compile per distinct shared length)."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    rng = np.random.default_rng(3)
+
+    def cohort(prefix_len):
+        common = rng.integers(0, arch.vocab, (prefix_len,)).astype(np.int32)
+        return [np.concatenate([common,
+                                rng.integers(0, arch.vocab, (16 - prefix_len,)).astype(np.int32)])
+                for _ in range(3)]
+
+    e = PagedServeEngine(arch, params, batch=2, max_seq=64, block_size=4,
+                         prefill_chunk=4, prefix_share=True)
+    e.generate(cohort(9), max_new=3)
+    assert e.cache.prefix_hits > 0
+    n0 = e._prefill._cache_size()
+    hits0 = e.cache.prefix_hits
+    for plen in (6, 11, 13):  # distinct shared-prefix lengths, same prompt len
+        e.generate(cohort(plen), max_new=3)
+    assert e.cache.prefix_hits > hits0  # adoption kept happening...
+    assert e._prefill._cache_size() == n0, (
+        "adoption minted a prefill recompile per shared-prefix length"
+    )
+
+
+def test_pinned_prompt_engine_parity_and_first_request_hit():
+    """--pin-prompt semantics through the engine: greedy output identical
+    to plain paged, the *first* request already hits (no donor needed),
+    and the pinned chain survives a full drain + reclaim."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    rng = np.random.default_rng(4)
+    preamble = rng.integers(0, arch.vocab, (9,)).astype(np.int32)
+    prompts = [np.concatenate([preamble, rng.integers(0, arch.vocab, (n,)).astype(np.int32)])
+               for n in (3, 5, 2)]
+    kw = dict(batch=2, max_seq=64, block_size=4, prefill_chunk=4)
+    want = PagedServeEngine(arch, params, **kw).generate(prompts, max_new=4)
+    e = PagedServeEngine(arch, params, prefix_share=True, **kw)
+    pinned_tokens = e.pin_prompt(preamble)
+    assert pinned_tokens == 8  # full blocks only (9 tokens at block_size 4)
+    assert e.cache.free_blocks == e.cache.num_blocks - 1 - 2  # only the pins stay
+    assert e.generate(prompts, max_new=4) == want
+    assert e.cache.prefix_hits == len(prompts)  # every request adopted
+    e.cache.reclaim(e.cache.num_blocks)
+    rng2 = np.random.default_rng(5)
+    more = [np.concatenate([preamble, rng2.integers(0, arch.vocab, (4,)).astype(np.int32)])]
+    hits0 = e.cache.prefix_hits
+    assert e.generate(more, max_new=4) == PagedServeEngine(
+        arch, params, **kw).generate(more, max_new=4)
+    assert e.cache.prefix_hits == hits0 + 1  # pin survived the reclaim
+    with pytest.raises(ValueError):
+        PagedServeEngine(arch, params, **kw).pin_prompt(preamble)  # needs prefix_share

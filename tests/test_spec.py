@@ -352,8 +352,9 @@ def test_prefix_registry_pins_blocks_past_donor_release():
     c.allocate(0, 14)
     c.lens[0] = 10
     c.register_prefix(0, toks)
-    entry_blocks = next(iter(c._prefix_entries.values()))[1]
-    assert len(entry_blocks) == 2  # full blocks only, never the tail
+    entry_blocks = tuple(c._owned[0][:2])
+    assert c.registry_size() == 2  # full blocks only, never the tail
+    assert c.registered_blocks() == frozenset(entry_blocks)
     c.release(0)
     # pinned: blocks stayed allocated, lookup still serves them (capped at
     # the entry's full-block coverage)
@@ -459,16 +460,20 @@ def test_allocator_invariants_random_ops(ops_seq):
 def test_prefix_share_engine_lossless_with_hits():
     """Common-prompt workload: sharing must be token-identical to the
     non-sharing engine, register real hits, and trigger CoW copies when
-    writes land in shared blocks."""
+    writes land in shared blocks.  block_size 8 > prefill_chunk 4 makes the
+    chunk-aligned resume offset (12, for the 13-token common prefix) land
+    mid-block, so the adopted run ends in a partial block the resumed
+    prefill writes into — the CoW path stays exercised through the engine
+    even though block-aligned configs avoid it entirely."""
     arch = reduced(get_arch("yi-6b"))
     params = _params(arch)
     rng = np.random.default_rng(8)
-    common = rng.integers(0, arch.vocab, (10,)).astype(np.int32)
+    common = rng.integers(0, arch.vocab, (13,)).astype(np.int32)
     prompts = [np.concatenate([common, rng.integers(0, arch.vocab, (n,)).astype(np.int32)])
                for n in (3, 5, 2)]
-    base = PagedServeEngine(arch, params, batch=2, max_seq=64, block_size=4, prefill_chunk=4)
+    base = PagedServeEngine(arch, params, batch=2, max_seq=64, block_size=8, prefill_chunk=4)
     want = base.generate(prompts, max_new=4)
-    shared = PagedServeEngine(arch, params, batch=2, max_seq=64, block_size=4,
+    shared = PagedServeEngine(arch, params, batch=2, max_seq=64, block_size=8,
                               prefill_chunk=4, prefix_share=True)
     assert shared.generate(prompts, max_new=4) == want
     assert shared.cache.prefix_hits >= 2
