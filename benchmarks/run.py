@@ -123,6 +123,15 @@ def main(argv=None):
         "fig6_bound_ordering": results["fig6"]["bound_ordering_ok"],
         "fig6_a2q_dominates_fixed32": results["fig6"]["a2q_dominates_fixed32"],
         "serve_paged_prefill_faster": results["serve"]["prefill_speedup"] > 1.0,
+        # the decode megastep (N fused ticks per jitted dispatch): each
+        # generated token costs well under one dispatch (~1/N + admission
+        # tail windows), and the paged engine's steady-state decode is no
+        # longer behind the contiguous baseline it replaced (the per-tick
+        # engine paid per-token host work — CoW preflight, lens upload,
+        # device_get — the contiguous loop never did; 0.95 leaves wall-clock
+        # noise room on shared runners, the BENCH_*.json records the margin)
+        "serve_decode_dispatches_per_token": results["serve"]["megastep_dispatches_per_token"] <= 0.2,
+        "serve_paged_decode_not_slower": results["serve"]["paged_decode_ratio"] >= 0.95,
     }
     print("=" * 72)
     print("PAPER CLAIMS SUMMARY")

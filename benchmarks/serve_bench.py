@@ -7,7 +7,10 @@ per-request end-to-end latency p50/p99 for every engine, the paged engine's
 peak KV block usage vs the contiguous engine's fixed ``batch x max_seq``
 footprint, the KV bytes-per-token the int8 block pools save (~4x), the
 prompt tokens the prefix-sharing engine served from shared blocks (plus its
-CoW copy count), and the speculative engine's acceptance rate.  The int8
+CoW copy count), the speculative engine's acceptance rate, and — per engine —
+``dispatches_per_token``: the jitted decode launches each generated token
+paid for (1.0 per-tick; ~1/N for the fused megastep engine, which must also
+close the paged-vs-contiguous decode gap the per-tick engine regressed).  The int8
 engine's greedy tokens are held to the parity bound (token-identical up to
 sub-margin quantization ties — see ``launch/serve.py``); the prefix-sharing
 and speculative engines must match the plain paged engine token-for-token.
@@ -110,6 +113,7 @@ def run(
     block_size: int = 8,
     prefill_chunk: int = 16,
     num_blocks=None,
+    decode_steps: int = 8,
     seed: int = 0,
 ) -> dict:
     arch = reduced(get_arch(arch_name))
@@ -124,6 +128,10 @@ def run(
     pkw = dict(batch=batch, max_seq=max_seq, block_size=block_size,
                prefill_chunk=prefill_chunk, num_blocks=num_blocks)
     paged = PagedServeEngine(arch, params, **pkw)
+    # the dispatch-count engine: N decode ticks fused per jitted dispatch.
+    # Kept separate from `paged` so the per-tick engine remains the reference
+    # the int8-KV / prefix-share / spec comparisons were defined against.
+    paged_mega = PagedServeEngine(arch, params, decode_steps=decode_steps, **pkw)
     paged_q8 = PagedServeEngine(arch, params, kv_quant=True, **pkw)
     paged_px = PagedServeEngine(arch, params, prefix_share=True, **pkw)
     # pin the workload's common system prefix (same rng draw as _workload):
@@ -133,7 +141,8 @@ def run(
     pinned_tokens = paged_px.pin_prompt(common)
     spec = (SpecServeEngine(arch, params, spec_k=spec_k, **pkw)
             if spec_ok else None)
-    engines = [e for e in (contig, paged, paged_q8, paged_px, spec) if e is not None]
+    engines = [e for e in (contig, paged, paged_mega, paged_q8, paged_px, spec)
+               if e is not None]
     # Warmup pass covers every jit shape (the paged engine compiles one
     # prefill per distinct chunk length), so the timed pass measures
     # steady-state serving throughput rather than XLA compile time.
@@ -148,9 +157,10 @@ def run(
             e.cache.pool_rebuilds = 0
             e.cache.bt_full_uploads = e.cache.bt_row_patches = 0
 
-    reqs_c, reqs_p, reqs_q, reqs_x = (workload() for _ in range(4))
+    reqs_c, reqs_p, reqs_m, reqs_q, reqs_x = (workload() for _ in range(5))
     _drive_contiguous(contig, reqs_c)
     _drive_paged(paged, reqs_p)
+    _drive_paged(paged_mega, reqs_m)
     _drive_paged(paged_q8, reqs_q)
     _drive_paged(paged_px, reqs_x)
     reqs_s = None
@@ -160,6 +170,9 @@ def run(
 
     assert [r.generated for r in reqs_c] == [r.generated for r in reqs_p], \
         "engines diverged on the benchmark workload"
+    # the megastep is a pure dispatch fusion: greedy tokens must be identical
+    assert [r.generated for r in reqs_m] == [r.generated for r in reqs_p], \
+        "megastep engine diverged from per-tick paged decode"
     # prefix sharing and speculative decoding are lossless: exact parity
     assert [r.generated for r in reqs_x] == [r.generated for r in reqs_p], \
         "prefix-sharing engine diverged"
@@ -177,6 +190,8 @@ def run(
         "requests": requests,
         "contiguous": _stats_row(contig, reqs_c),
         "paged": _stats_row(paged, reqs_p),
+        "paged_megastep": _stats_row(paged_mega, reqs_m),
+        "decode_steps": decode_steps,
         "paged_int8_kv": _stats_row(paged_q8, reqs_q),
         "paged_prefix_share": _stats_row(paged_px, reqs_x),
         # fixed lanes vs token-proportional blocks (same dtype, so the slot
@@ -226,6 +241,19 @@ def run(
         out["paged"]["tok_s"] / out["contiguous"]["tok_s"]
         if out["contiguous"]["tok_s"] > 0 else float("inf")
     )
+    # the megastep headlines (run.py claims): the jitted-dispatch cost each
+    # decode token pays, and paged steady-state decode vs the contiguous
+    # baseline — the regression this engine exists to close (per-tick paged
+    # decode paid per-token host work the contiguous loop never did)
+    out["megastep_dispatches_per_token"] = out["paged_megastep"]["dispatches_per_token"]
+    out["paged_decode_ratio"] = (
+        out["paged_megastep"]["decode_tok_s"] / out["contiguous"]["decode_tok_s"]
+        if out["contiguous"]["decode_tok_s"] > 0 else float("inf")
+    )
+    out["megastep_decode_speedup"] = (
+        out["paged_megastep"]["decode_tok_s"] / out["paged"]["decode_tok_s"]
+        if out["paged"]["decode_tok_s"] > 0 else float("inf")
+    )
     # steady-state decode throughput of int8 blocks vs fp32 blocks: on TPU
     # this is the ~4x-bandwidth win; on CPU/interpret it only proves the
     # quantize/dequant work does not sink the decode path
@@ -242,16 +270,23 @@ def run(
         if out["paged"]["ttft_p50_s"] > 0 else float("inf")
     )
 
-    print("engine,tok_s,prefill_tok_s,decode_tok_s,latency_p50_s,latency_p99_s")
-    rows = ["contiguous", "paged", "paged_int8_kv", "paged_prefix_share"]
+    print("engine,tok_s,prefill_tok_s,decode_tok_s,dispatches_per_token,"
+          "latency_p50_s,latency_p99_s")
+    rows = ["contiguous", "paged", "paged_megastep", "paged_int8_kv",
+            "paged_prefix_share"]
     if "spec" in out:
         rows.append("spec")
     for name in rows:
         r = out[name]
         print(f"{name},{r['tok_s']:.1f},{r['prefill_tok_s']:.1f},{r['decode_tok_s']:.1f},"
+              f"{r['dispatches_per_token']:.3f},"
               f"{r['latency_p50_s']:.3f},{r['latency_p99_s']:.3f}")
     print(f"prefill_speedup,{out['prefill_speedup']:.2f},throughput_speedup,"
           f"{out['throughput_speedup']:.2f}")
+    print(f"megastep,decode_steps {out['decode_steps']},"
+          f"dispatches_per_token {out['megastep_dispatches_per_token']:.3f},"
+          f"decode_speedup_vs_tick {out['megastep_decode_speedup']:.2f},"
+          f"decode_ratio_vs_contiguous {out['paged_decode_ratio']:.2f}")
     print(f"kv_bytes_per_token,{out['kv_bytes_per_token_fp32']}B fp32,"
           f"{out['kv_bytes_per_token_int8']}B int8,ratio {out['kv_bytes_ratio']:.2f}x,"
           f"decode_ratio {out['int8_kv_decode_ratio']:.2f}")
@@ -275,13 +310,16 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--decode-steps", type=int, default=8,
+                    help="fused decode ticks per dispatch for the megastep engine")
     ap.add_argument("--json", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     out = run(
         arch_name=args.arch, requests=args.requests, max_new=args.max_new,
         batch=args.batch, max_seq=args.max_seq, block_size=args.block_size,
-        prefill_chunk=args.prefill_chunk, seed=args.seed,
+        prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps,
+        seed=args.seed,
     )
     if args.json:
         with open(args.json, "w") as f:

@@ -6,6 +6,7 @@
         [--int-forward] [--kv-int8 [--kv-bits 4]] \
         [--prefix-share [--shared-prefix 24] [--pin-prompt 32]] \
         [--spec-k 4 [--spec-draft self-int8|<config>]] \
+        [--decode-steps 8] [--eos-id N | --eos-auto] \
         [--sample topk --temperature 0.8 --top-k 40] [--parity-check]
 
 ``--paged`` serves through :class:`PagedServeEngine` (block-table KV cache,
@@ -29,6 +30,11 @@ path — or a named config, e.g. ``--spec-draft smollm-135m``, as a separate
 small draft model), verified in one batched call, greedy output token-
 identical to plain decode.  Archs with ring/recurrent state (no rollback)
 refuse spec mode cleanly and fall back to plain paged decode.
+
+``--decode-steps N`` fuses N paged decode ticks into one jitted megastep
+dispatch (on-device position/EOS bookkeeping; dead rows coast into the trash
+block), and ``--eos-id``/``--eos-auto`` stop requests at end-of-sequence
+instead of always burning the full ``--max-new`` budget.
 
 ``--parity-check`` runs the configured engine AND the float dequant
 contiguous baseline greedily on the same workload and fails unless their
@@ -76,8 +82,9 @@ def _report(tag: str, engine) -> dict:
     print(
         f"[{tag}] prefill: {tp['prefill_tokens']} tok in {tp['prefill_s']:.2f}s "
         f"({tp['prefill_tok_s']:.1f} tok/s) | decode: {tp['decode_tokens']} tok in "
-        f"{tp['decode_s']:.2f}s ({tp['decode_tok_s']:.1f} tok/s) | overall "
-        f"{tp['tok_s']:.1f} tok/s"
+        f"{tp['decode_s']:.2f}s ({tp['decode_tok_s']:.1f} tok/s, "
+        f"{tp['decode_dispatches']} dispatches = "
+        f"{tp['dispatches_per_token']:.3f}/tok) | overall {tp['tok_s']:.1f} tok/s"
     )
     return tp
 
@@ -117,6 +124,17 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=None, help="paged KV pool size (blocks)")
     ap.add_argument("--decode-kernel", action="store_true",
                     help="route paged decode through the Pallas paged-attention kernel")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="paged decode ticks fused per jitted dispatch (the "
+                         "megastep; 1 = per-tick decode)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="end-of-sequence token id: requests finish the step "
+                         "they emit it instead of decoding to --max-new")
+    ap.add_argument("--eos-auto", action="store_true",
+                    help="probe a greedy contiguous run and use the token "
+                         "request 0 emits mid-stream as the EOS id — "
+                         "guarantees the workload exercises early EOS "
+                         "termination (the CI serve-smoke cohort)")
     ap.add_argument("--sample", choices=("greedy", "temperature", "topk"), default="greedy")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -140,10 +158,13 @@ def main(argv=None):
                 ("--prefix-share", args.prefix_share),
                 ("--shared-prefix", args.shared_prefix > 0),
                 ("--pin-prompt", args.pin_prompt > 0),
+                ("--decode-steps", args.decode_steps != 1),
             ) if on
         ]
         if wanted:
             ap.error(f"{', '.join(wanted)} only affect the paged engine; add --paged")
+    if args.eos_auto and args.eos_id is not None:
+        ap.error("--eos-auto derives the EOS id; drop --eos-id")
     if args.pin_prompt > 0 and not args.prefix_share:
         ap.error("--pin-prompt pins into the prompt cache; add --prefix-share")
     if args.kv_bits != 8 and not args.kv_int8:
@@ -186,6 +207,14 @@ def main(argv=None):
         print("parity-check forces greedy sampling on the jnp decode path")
         sample = SampleConfig()
         decode_kernel = False
+    if args.eos_auto:
+        # greedy contiguous probe: the token request 0 emits halfway through
+        # its budget becomes the EOS id — greedy determinism then guarantees
+        # at least that request terminates early in every engine under test
+        probe = ServeEngine(arch, params, batch=args.batch, max_seq=args.max_seq)
+        ptoks = probe.generate(prompts[:1], max_new=args.max_new)[0]
+        args.eos_id = int(ptoks[len(ptoks) // 2])
+        print(f"eos-auto: eos_id={args.eos_id} (request 0's token at step {len(ptoks) // 2})")
 
     def paged_engine():
         kw = dict(
@@ -194,6 +223,7 @@ def main(argv=None):
             num_blocks=args.num_blocks, sample=sample, seed=args.seed,
             kv_quant=args.kv_int8, kv_bits=args.kv_bits,
             prefix_share=args.prefix_share,
+            eos_id=args.eos_id, decode_steps=args.decode_steps,
             rt=Runtime(decode_kernel=decode_kernel, int_forward=args.int_forward),
         )
         if args.spec_k > 0:
@@ -230,12 +260,14 @@ def main(argv=None):
         "kv_bits": args.kv_bits if args.kv_int8 else None,
         "spec_k": args.spec_k, "prefix_share": args.prefix_share,
         "shared_prefix": args.shared_prefix, "pin_prompt": args.pin_prompt,
+        "decode_steps": args.decode_steps, "eos_id": args.eos_id,
     }
     if args.parity_check:
         # the baseline stays on the float truth path: dequant matmuls
         # (default Runtime) over the fp32 contiguous cache — so parity with
         # --int-forward/--kv-int8 gates the whole integer path against it
-        contig = ServeEngine(arch, params, batch=args.batch, max_seq=args.max_seq)
+        contig = ServeEngine(arch, params, batch=args.batch, max_seq=args.max_seq,
+                             eos_id=args.eos_id)
         reqs_c: list = []
         if contig.recurrent:
             # the contiguous baseline serves recurrent archs one lockstep
@@ -305,10 +337,15 @@ def main(argv=None):
         # through the contiguous cache path) — without this the flag would be
         # a silent no-op here while the banner claims the W8A8 kernel is on
         engine = ServeEngine(arch, params, batch=args.batch, max_seq=args.max_seq,
-                             rt=Runtime(int_forward=args.int_forward))
+                             rt=Runtime(int_forward=args.int_forward),
+                             eos_id=args.eos_id)
         outs = engine.generate(prompts, max_new=args.max_new)
         report["contiguous"] = _report("contiguous", engine)
 
+    if args.eos_id is not None:
+        report["eos_terminated"] = sum(1 for o in outs if o and o[-1] == args.eos_id)
+        print(f"eos: {report['eos_terminated']} of {len(outs)} requests "
+              f"terminated on eos_id={args.eos_id}")
     for i, o in enumerate(outs):
         print(f"req {i}: {o}")
     if args.json:

@@ -20,8 +20,19 @@ accumulator (the serving payoff of the paper's guarantee; also the
 memory-roofline lever recorded in EXPERIMENTS.md SPerf).
 
 Both engines keep ``stats`` = {prefill_tokens, decode_tokens, prefill_s,
-decode_s} so launchers and benchmarks report prefill and decode throughput
-separately instead of one aggregate tok/s.
+decode_s, decode_dispatches} so launchers and benchmarks report prefill and
+decode throughput separately instead of one aggregate tok/s, plus the
+dispatch-count scoreboard ``dispatches_per_token`` (how many jitted decode
+launches each generated token paid for — 1.0 for per-tick engines, ~1/N for
+the paged megastep at ``decode_steps=N``).
+
+Accounting convention (shared by both engines): the first generated token is
+produced by the *prefill* dispatch's logits and is booked under prefill time
+with zero decode tokens; ``decode_tokens`` counts only tokens whose forward
+ran in a decode dispatch (``max_new - 1`` per request, absent early EOS).
+The seed contiguous engine booked that first token under decode instead —
+64 vs 56 decode tokens for the identical 8x8 workload — skewing every
+cross-engine ``decode_tok_s`` comparison ~14%.
 """
 
 from __future__ import annotations
@@ -166,7 +177,10 @@ def _normalize_prompt(prompt, bos_id: int) -> np.ndarray:
 
 
 def _fresh_stats() -> dict:
-    return {"prefill_tokens": 0, "decode_tokens": 0, "prefill_s": 0.0, "decode_s": 0.0}
+    return {
+        "prefill_tokens": 0, "decode_tokens": 0, "prefill_s": 0.0, "decode_s": 0.0,
+        "decode_dispatches": 0,
+    }
 
 
 class _StatsMixin:
@@ -186,6 +200,9 @@ class _StatsMixin:
             "prefill_tok_s": st["prefill_tokens"] / st["prefill_s"] if st["prefill_s"] > 0 else 0.0,
             "decode_tok_s": st["decode_tokens"] / st["decode_s"] if st["decode_s"] > 0 else 0.0,
             "tok_s": total_tok / total_s if total_s > 0 else 0.0,
+            "dispatches_per_token": (
+                st["decode_dispatches"] / st["decode_tokens"] if st["decode_tokens"] > 0 else 0.0
+            ),
         }
 
 
@@ -202,6 +219,7 @@ class ServeEngine(_StatsMixin):
         rt: Optional[Runtime] = None,
         greedy: bool = True,
         bos_id: int = 0,
+        eos_id: Optional[int] = None,
     ):
         self.arch = arch
         self.params = params
@@ -210,6 +228,7 @@ class ServeEngine(_StatsMixin):
         self.rt = rt or Runtime()
         self.greedy = greedy
         self.bos_id = bos_id
+        self.eos_id = eos_id  # default for requests that don't set their own
         self.cache = init_cache(arch, batch, max_seq, dtype=jnp.dtype(arch.compute_dtype))
         self.pos = np.zeros((batch,), np.int32)  # per-slot next position
         self.slots: list[Optional[Request]] = [None] * batch
@@ -238,6 +257,8 @@ class ServeEngine(_StatsMixin):
 
     def admit(self, req: Request) -> bool:
         req.prompt = _normalize_prompt(req.prompt, self.bos_id)
+        if req.eos_id is None:
+            req.eos_id = self.eos_id
         for i, s in enumerate(self.slots):
             if s is None:
                 self.slots[i] = req
@@ -245,10 +266,33 @@ class ServeEngine(_StatsMixin):
                 return True
         return False
 
+    def _emit_token(self, slot: int, req: Request, logits_row: np.ndarray) -> bool:
+        """Host-side argmax + bookkeeping for one fresh token; returns True
+        (and frees the slot) when the request just completed — ``max_new``
+        reached or the token *is* the request's ``eos_id`` (the seed engine
+        never checked EOS and decoded garbage to the length cap)."""
+        nxt = int(np.argmax(logits_row))
+        top2 = np.partition(logits_row.astype(np.float32), -2)[-2:]
+        req.margins.append(float(top2[1] - top2[0]))
+        if not req.generated:
+            req.first_token_at = time.perf_counter()
+        req.generated.append(nxt)
+        req.last_token = nxt
+        if len(req.generated) >= req.max_new or (req.eos_id is not None and nxt == req.eos_id):
+            req.done = True
+            req.finished_at = time.perf_counter()
+            self.slots[slot] = None
+            return True
+        return False
+
     def _prefill_slot(self, slot: int, req: Request):
         # Feed prompt tokens one at a time into this slot's cache lane.  Other
         # rows receive transient garbage at their *current* position, which
         # their own next real token overwrites before it is ever attended.
+        # The final prompt step's logits yield the first generated token here,
+        # booked under prefill — same convention as the paged engine (the seed
+        # engine deferred it to the first tick and booked it under decode,
+        # skewing decode_tok_s comparisons ~14%).
         t0 = time.perf_counter()
         self.pos[slot] = 0
         for t in req.prompt:
@@ -258,15 +302,19 @@ class ServeEngine(_StatsMixin):
                 self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy())
             )
             self.pos[slot] += 1
-        req._last_logits = np.asarray(jax.device_get(logits[slot, 0]))
+        last = np.asarray(jax.device_get(logits[slot, 0]))
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += len(req.prompt)
+        self._emit_token(slot, req, last)
 
     def tick(self) -> int:
         """Advance every live slot one token; returns number of live slots.
 
         Slots advance at *their own* positions (per-row cache writes), so
-        sequences admitted at different times interleave correctly.
+        sequences admitted at different times interleave correctly.  Each tick
+        feeds the previous token (``req.last_token``) and samples from the
+        fresh logits it produces — one forward per emitted token, none wasted
+        (the seed engine ran a final forward whose logits were never used).
         """
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
@@ -274,27 +322,16 @@ class ServeEngine(_StatsMixin):
         t0 = time.perf_counter()
         tok = np.zeros((self.batch, 1), np.int32)
         for i in live:
-            req = self.slots[i]
-            last = getattr(req, "_last_logits")
-            nxt = int(np.argmax(last))
-            top2 = np.partition(last.astype(np.float32), -2)[-2:]
-            req.margins.append(float(top2[1] - top2[0]))
-            if not req.generated:
-                req.first_token_at = time.perf_counter()
-            req.generated.append(nxt)
-            tok[i, 0] = nxt
+            tok[i, 0] = self.slots[i].last_token
         logits, self.cache = self._decode(self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy()))
         ln = np.asarray(jax.device_get(logits[:, 0]))
-        for i in live:
-            req = self.slots[i]
-            req._last_logits = ln[i]
-            self.pos[i] += 1
-            if len(req.generated) >= req.max_new:
-                req.done = True
-                req.finished_at = time.perf_counter()
-                self.slots[i] = None
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_tokens"] += len(live)
+        self.stats["decode_dispatches"] += 1
+        for i in live:
+            req = self.slots[i]
+            self.pos[i] += 1
+            self._emit_token(i, req, ln[i])
         return len(live)
 
     def generate(self, prompts: list, max_new: int = 16) -> list[list[int]]:
@@ -318,6 +355,9 @@ class ServeEngine(_StatsMixin):
     def _generate_lockstep(self, reqs: list) -> list[list[int]]:
         assert len(reqs) <= self.batch, "lockstep mode serves one group at a time"
         self.last_requests = reqs
+        for r in reqs:  # admit() is bypassed here — apply the engine default
+            if r.eos_id is None:
+                r.eos_id = self.eos_id
         lens = {len(r.prompt) for r in reqs}
         assert len(lens) == 1, "recurrent archs require equal-length prompt groups"
         T = lens.pop()
@@ -338,10 +378,10 @@ class ServeEngine(_StatsMixin):
             )
             self.pos[: len(reqs)] += 1
         ln = np.asarray(jax.device_get(logits[:, 0]))
-        for i, r in enumerate(reqs):
-            r._last_logits = ln[i]
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += T * len(reqs)
+        for i, r in enumerate(reqs):
+            self._emit_token(i, r, ln[i])
         while any(s is not None for s in self.slots):
             self.tick()
         return [r.generated for r in reqs]
@@ -385,8 +425,12 @@ class PagedServeEngine(_StatsMixin):
         kv_bits: int = 8,
         prefix_share: bool = False,
         bos_id: int = 0,
+        eos_id: Optional[int] = None,
+        decode_steps: int = 1,
         seed: int = 0,
     ):
+        if decode_steps < 1:
+            raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
         self.arch = arch
         self.params = params
         self.batch = batch
@@ -394,6 +438,8 @@ class PagedServeEngine(_StatsMixin):
         self.rt = rt or Runtime()
         self.sample_cfg = sample or SampleConfig()
         self.bos_id = bos_id
+        self.eos_id = eos_id  # default for requests that don't set their own
+        self.decode_steps = int(decode_steps)
         self.recurrent = any(s.kind in ("rwkv6", "hymba") for s in arch.stacks)
         self.cache = PagedKVCache(
             arch, batch, block_size=block_size, num_blocks=num_blocks,
@@ -409,6 +455,7 @@ class PagedServeEngine(_StatsMixin):
         self.stats = _fresh_stats()
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(2,))
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        self._megadecode = jax.jit(self._megastep_fn, donate_argnums=(2,))
 
     def params_struct(self, params):
         return params
@@ -443,6 +490,60 @@ class PagedServeEngine(_StatsMixin):
         tok = sample_tokens(logits[:, 0], self.sample_cfg, key)
         return tok, self._greedy_margin(logits[:, 0]), new_cache
 
+    def _megastep_fn(self, params, tok0, pools, bt, lens, active, rem, eos, key):
+        """``decode_steps`` decode ticks fused into one jitted ``lax.scan``
+        dispatch (the spec drafter's k-steps-in-one-scan shape, promoted to
+        the main decode loop).  All bookkeeping the per-tick path does on the
+        host runs on device instead:
+
+        * position advance — the carry holds per-row ``pos``; each row's
+          sampled token feeds the next tick's forward without a host
+          round-trip;
+        * finish masking — a row goes inactive the tick it emits its
+          ``eos`` id (``-1`` = no EOS for that row) or exhausts ``rem``
+          (remaining ``max_new`` budget), exactly mirroring
+          ``Scheduler.record_token``.  Inactive rows coast: their block
+          table is swapped for the all-trash-block-0 table, so their
+          (garbage) KV writes land in the trash block and their real cache
+          is never touched.  Per-slot non-pool leaves (ring kpos, recurrent
+          S/shift) do keep advancing for coasting rows — harmless, because
+          ``reset_slot`` zeroes them on the slot's next admission.
+
+        Returns ``(B, N)`` token ids / greedy margins / emitted flags plus
+        the advanced pools — one ``device_get`` per window instead of per
+        token.  ``emitted[i, j]`` is True iff row i was active entering tick
+        j; the host replays exactly those flags through ``record_token``, so
+        greedy output is token-identical to the per-tick path.
+        """
+        trash_bt = jnp.zeros_like(bt)
+        keys = jax.random.split(key, self.decode_steps)
+
+        def step(carry, k):
+            tok, pos, act, remaining, pools = carry
+            bte = jnp.where(act[:, None], bt, trash_bt)
+            cache = {**pools, "_paged": {"bt": bte}}
+            logits, new_cache, _ = apply_lm(
+                self.params_struct(params), self.arch, tokens=tok[:, None],
+                cache=cache, start_pos=pos, rt=self.rt,
+            )
+            nxt = sample_tokens(logits[:, 0], self.sample_cfg, k)
+            marg = self._greedy_margin(logits[:, 0])
+            emitted = act
+            adv = act.astype(jnp.int32)
+            pos2 = pos + adv
+            rem2 = remaining - adv
+            act2 = act & (nxt != eos) & (rem2 > 0)
+            return (nxt, pos2, act2, rem2, new_cache), (nxt, marg, emitted)
+
+        (_, _, _, _, pools), (toks, margs, emitted) = jax.lax.scan(
+            step, (tok0, lens, active, rem, pools), keys
+        )
+        # scan stacks along the leading (tick) axis; report (B, N)
+        return (
+            jnp.swapaxes(toks, 0, 1), jnp.swapaxes(margs, 0, 1),
+            jnp.swapaxes(emitted, 0, 1), pools,
+        )
+
     # -- request lifecycle --------------------------------------------------
 
     def _slot_tokens(self, req: Request) -> int:
@@ -459,6 +560,8 @@ class PagedServeEngine(_StatsMixin):
 
     def submit(self, req: Request) -> None:
         req.prompt = _normalize_prompt(req.prompt, self.bos_id)
+        if req.eos_id is None:
+            req.eos_id = self.eos_id
         total = self._slot_tokens(req)
         if total > self.max_seq:
             raise ValueError(f"request needs {total} positions > max_seq={self.max_seq}")
@@ -626,6 +729,7 @@ class PagedServeEngine(_StatsMixin):
         out, marg = (np.asarray(a) for a in jax.device_get((toks, margs)))
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_tokens"] += len(live)
+        self.stats["decode_dispatches"] += 1
         for i in live:
             self.cache.lens[i] += 1
             self.sched.slots[i].margins.append(float(marg[i]))
@@ -633,9 +737,73 @@ class PagedServeEngine(_StatsMixin):
                 self._release_slot(i)
         return len(live)
 
+    def megastep(self) -> int:
+        """Up to ``decode_steps`` decode ticks for every live slot in ONE
+        jitted dispatch (``_megastep_fn``); returns the number of live slots
+        advanced.  The per-tick host work is hoisted to window entry:
+
+        * **CoW preflight**: each slot's write span for the whole window —
+          ``[lens, lens + min(N, remaining))`` — is made writable once via
+          the batched ``ensure_writable`` (one pool rebuild), instead of one
+          call per slot per tick.  The span never exceeds the slot's
+          admission-time allocation because ``remaining`` caps it at
+          ``max_new`` and the final emitted token is never consumed.
+        * **one upload** of block tables / lens / masks, **one download** of
+          ``(B, N)`` token ids + margins + emitted flags per window.
+
+        The host then replays the emitted flags through
+        ``Scheduler.record_token`` in tick order; because the device finish
+        mask mirrors ``record_token`` exactly (EOS emit or ``max_new``
+        reached), a finished row's later flags are False and the replay
+        releases each slot at the same tick the per-tick path would have.
+        """
+        live = self.sched.live
+        if not live:
+            return 0
+        N = self.decode_steps
+        tok_in = np.zeros((self.batch,), np.int32)
+        active = np.zeros((self.batch,), bool)
+        rem = np.zeros((self.batch,), np.int32)
+        eos = np.full((self.batch,), -1, np.int32)  # -1: token ids are >= 0
+        for i in live:
+            req = self.sched.slots[i]
+            tok_in[i] = req.last_token
+            active[i] = True
+            rem[i] = req.max_new - len(req.generated)
+            if req.eos_id is not None:
+                eos[i] = req.eos_id
+            lo = int(self.cache.lens[i])
+            self.cache.ensure_writable(i, lo, lo + min(N, int(rem[i])))
+        t0 = time.perf_counter()
+        toks, margs, emitted, pools = self._megadecode(
+            self.params, jnp.asarray(tok_in), self.cache.pools, self.cache.bt(),
+            jnp.asarray(self.cache.lens.copy()), jnp.asarray(active),
+            jnp.asarray(rem), jnp.asarray(eos), self._next_key(),
+        )
+        self.cache.pools = pools
+        out, marg, em = (np.asarray(a) for a in jax.device_get((toks, margs, emitted)))
+        dt = time.perf_counter() - t0
+        total = 0
+        for j in range(N):
+            for i in live:
+                if not em[i, j]:
+                    continue
+                total += 1
+                self.cache.lens[i] += 1
+                self.sched.slots[i].margins.append(float(marg[i, j]))
+                if self.sched.record_token(i, int(out[i, j])):
+                    self._release_slot(i)
+        self.stats["decode_s"] += dt
+        self.stats["decode_tokens"] += total
+        self.stats["decode_dispatches"] += 1
+        return len(live)
+
     def _advance(self) -> int:
         """One decode round (subclass hook: the spec engine swaps in its
-        draft-verify round here)."""
+        draft-verify round here).  ``decode_steps > 1`` routes to the fused
+        megastep; 1 keeps the per-tick path (and its per-token parity role)."""
+        if self.decode_steps > 1:
+            return self.megastep()
         return self.tick()
 
     def step(self) -> int:

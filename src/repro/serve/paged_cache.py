@@ -436,7 +436,12 @@ class PagedKVCache:
         self.watermarks[slot] = max(int(self.watermarks[slot]), end)
         bs = self.block_size
         pairs: list[tuple[int, int]] = []
-        for j in range(start // bs, (end - 1) // bs + 1):
+        # a megastep window preflight may name a span past the slot's table
+        # (lens + N at the drain tail); positions beyond are never written
+        # (the on-device mask parks finished rows in trash), so clamp rather
+        # than index out of the table
+        j_hi = min((end - 1) // bs, self.tables.shape[1] - 1)
+        for j in range(start // bs, j_hi + 1):
             b = int(self.tables[slot, j])
             if b == TRASH_BLOCK or self.refcounts[b] <= 1:
                 continue

@@ -17,7 +17,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SampleConfig", "sample_tokens"]
+__all__ = ["SampleConfig", "sample_tokens", "TEMPERATURE_EPS"]
+
+# Below this, temperature sampling *is* greedy: dividing logits by a vanishing
+# temperature inflates them toward +/-inf, and exp() of that feeds NaN
+# probabilities into ``jax.random.categorical`` (--temperature 0 used to
+# decode pure garbage).  Routing to argmax is the correct limit.
+TEMPERATURE_EPS = 1e-6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +40,8 @@ class SampleConfig:
             raise ValueError(f"unknown sampling method {self.method!r}")
         if self.method == "topk" and self.top_k <= 0:
             raise ValueError("topk sampling needs top_k > 0")
+        if self.method in ("temperature", "topk") and self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
 
 
 def sample_tokens(logits: jnp.ndarray, cfg: SampleConfig, key) -> jnp.ndarray:
@@ -41,13 +49,17 @@ def sample_tokens(logits: jnp.ndarray, cfg: SampleConfig, key) -> jnp.ndarray:
 
     Greedy ignores ``key`` (deterministic argmax, first-index tie-break —
     identical to ``np.argmax`` on the same logits, which is what the
-    paged-vs-contiguous parity gates rely on).
+    paged-vs-contiguous parity gates rely on).  ``temperature <=
+    TEMPERATURE_EPS`` takes the greedy path too (the zero-temperature limit;
+    dividing by it would blow logits up to inf and sample NaN), and ``top_k``
+    is clamped to the vocab size (``lax.top_k`` hard-crashes past it, and
+    top-V-of-V is plain temperature sampling anyway).
     """
     lf = logits.astype(jnp.float32)
-    if cfg.method == "greedy":
+    if cfg.method == "greedy" or cfg.temperature <= TEMPERATURE_EPS:
         return jnp.argmax(lf, axis=-1).astype(jnp.int32)
     if cfg.method == "topk":
-        vals = jax.lax.top_k(lf, cfg.top_k)[0]
+        k = min(cfg.top_k, lf.shape[-1])
+        vals = jax.lax.top_k(lf, k)[0]
         lf = jnp.where(lf < vals[..., -1:], -jnp.inf, lf)
-    t = max(cfg.temperature, 1e-6)
-    return jax.random.categorical(key, lf / t, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lf / cfg.temperature, axis=-1).astype(jnp.int32)

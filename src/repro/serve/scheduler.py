@@ -35,6 +35,12 @@ class ServeRequest:
     uid: int
     prompt: np.ndarray  # (T,) int32, non-empty (engine normalizes)
     max_new: int = 16
+    # end-of-sequence token: the request finishes as soon as it *emits* this
+    # id (the EOS token is appended to ``generated``, then the slot and its
+    # cache blocks release immediately — no decoding past end-of-sequence,
+    # no blocks burned on garbage).  ``None`` defers to the engine's default
+    # (``eos_id=`` engine kwarg), which may itself be None (length-only stop).
+    eos_id: Optional[int] = None
     generated: list = dataclasses.field(default_factory=list)
     # greedy decision margins: top-2 logit gap at the step that produced
     # generated[t] — what the int8-KV parity bound reads (a mismatch only
@@ -49,16 +55,31 @@ class ServeRequest:
     # proposed for / accepted by this request — per-request acceptance rate
     spec_proposed: int = 0
     spec_accepted: int = 0
-    submitted_at: float = 0.0
-    first_token_at: float = 0.0
-    finished_at: float = 0.0
+    # latency timestamps: ``None`` until the event happens.  They used to
+    # default to 0.0, so reading ``ttft``/``latency`` on an in-flight request
+    # returned epoch-scale *negative* values (now - 0.0 negated) that a
+    # percentile aggregation would silently swallow; the properties now
+    # refuse instead of lying.
+    submitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
 
     @property
     def latency(self) -> float:
+        if self.submitted_at is None or self.finished_at is None:
+            raise RuntimeError(
+                f"request {self.uid}: latency read before completion "
+                f"(submitted={self.submitted_at}, finished={self.finished_at})"
+            )
         return self.finished_at - self.submitted_at
 
     @property
     def ttft(self) -> float:
+        if self.submitted_at is None or self.first_token_at is None:
+            raise RuntimeError(
+                f"request {self.uid}: ttft read before the first token "
+                f"(submitted={self.submitted_at}, first_token={self.first_token_at})"
+            )
         return self.first_token_at - self.submitted_at
 
 
@@ -140,13 +161,18 @@ class Scheduler:
 
     def record_token(self, slot: int, token: int) -> bool:
         """Append a sampled token; returns True (and frees the slot) when the
-        request just completed.  The engine releases cache blocks on True."""
+        request just completed — either ``max_new`` tokens emitted or the
+        token *is* the request's ``eos_id`` (the EOS token itself is recorded,
+        then the request stops; nothing decodes past end-of-sequence).  The
+        engine releases cache blocks on True."""
         req = self.slots[slot]
         if not req.generated:
             req.first_token_at = time.perf_counter()
         req.generated.append(token)
         req.last_token = token
-        if len(req.generated) >= req.max_new:
+        if len(req.generated) >= req.max_new or (
+            req.eos_id is not None and token == req.eos_id
+        ):
             req.done = True
             req.finished_at = time.perf_counter()
             self.slots[slot] = None

@@ -161,7 +161,10 @@ class SpecServeEngine(PagedServeEngine):
                 self._plain_rounds = 0
                 return self.spec_round(probe=True)
         self.spec_stats["fallback_rounds"] += 1
-        return self.tick()
+        # fall back through the parent's round, not raw tick(): with
+        # decode_steps > 1 that is the fused megastep, so even a drafter
+        # whose acceptance collapsed keeps the dispatch-per-token win
+        return super()._advance()
 
     def spec_round(self, probe: bool = False) -> int:
         """Draft k, verify in one batched call, accept-prefix, roll back."""
@@ -189,6 +192,7 @@ class SpecServeEngine(PagedServeEngine):
         self.cache.pools = pools
         am, mg = (np.asarray(a) for a in jax.device_get((am_d, mg_d)))
         self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_dispatches"] += 2  # draft scan + batched verify
 
         emitted_total = 0
         round_accepted = 0

@@ -1,0 +1,189 @@
+"""Decode megastep: N decode ticks fused into one jitted lax.scan dispatch.
+
+The megastep is a pure dispatch fusion of the per-tick paged decode loop —
+position advance, EOS and max_new finish masking run on device, finished
+rows coast writing into the trash block — so greedy token parity against the
+per-tick path is the gate, including mid-window EOS, prefix-share adopters,
+recurrent stacks, and the spec engine's fallback rounds.  The dispatch
+counter is the scoreboard: ~1/N decode dispatches per generated token.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models.lm import apply_lm, init_cache, init_lm
+from repro.nn.module import unbox
+from repro.serve.engine import PagedServeEngine, Request
+from repro.serve.spec import SpecServeEngine
+
+KEY = jax.random.PRNGKey(0)
+KW = dict(batch=2, max_seq=64, block_size=4, prefill_chunk=4)
+
+
+def _params(arch):
+    return unbox(init_lm(KEY, arch))
+
+
+def _greedy_reference(arch, params, prompt, max_new, max_seq=64):
+    """Step-by-step single-sequence decode as the oracle."""
+    cache = init_cache(arch, 1, max_seq, dtype=jnp.dtype(arch.compute_dtype))
+    logits = None
+    for pos, t in enumerate(prompt):
+        logits, cache, _ = apply_lm(
+            params, arch, tokens=jnp.asarray([[t]], jnp.int32), cache=cache,
+            start_pos=jnp.asarray(pos, jnp.int32),
+        )
+    out = []
+    pos = len(prompt)
+    for _ in range(max_new):
+        nxt = int(jnp.argmax(logits[0, 0]))
+        out.append(nxt)
+        logits, cache, _ = apply_lm(
+            params, arch, tokens=jnp.asarray([[nxt]], jnp.int32), cache=cache,
+            start_pos=jnp.asarray(pos, jnp.int32),
+        )
+        pos += 1
+    return out
+
+
+def _prompts(arch, seed=0, lens=(5, 3, 9, 2)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, arch.vocab, (n,)).astype(np.int32) for n in lens]
+
+
+@pytest.mark.parametrize("steps", [2, 4, 8])
+def test_megastep_matches_per_tick_paged(steps):
+    """Mixed prompt lengths, more requests than slots (slot recycling mid
+    window sequence), max_new=5 deliberately not a multiple of any window
+    size so the drain tail exercises partially-active windows."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    prompts = _prompts(arch)
+    tick = PagedServeEngine(arch, params, **KW)
+    want = tick.generate(prompts, max_new=5)
+    mega = PagedServeEngine(arch, params, decode_steps=steps, **KW)
+    assert mega.generate(prompts, max_new=5) == want
+    assert mega.cache.free_blocks == mega.cache.num_blocks - 1
+    tp = mega.throughput()
+    assert 0 < tp["dispatches_per_token"] < 1
+    assert mega.stats["decode_tokens"] == tick.stats["decode_tokens"]
+
+
+def test_megastep_eos_mid_window_parity_and_early_release():
+    """A row whose EOS lands mid window must stop exactly where the per-tick
+    path stops (its later in-window samples are masked, never recorded) and
+    release its slot/blocks at window replay, not at max_new."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    prompts = _prompts(arch, seed=1, lens=(5, 7, 4))
+    probe = PagedServeEngine(arch, params, **KW)
+    full = probe.generate(prompts, max_new=6)
+    eos = full[0][2]  # request 0 provably emits this mid-stream (greedy)
+    tick = PagedServeEngine(arch, params, eos_id=eos, **KW)
+    want = tick.generate(prompts, max_new=6)
+    mega = PagedServeEngine(arch, params, eos_id=eos, decode_steps=8, **KW)
+    got = mega.generate(prompts, max_new=6)
+    assert got == want
+    assert got[0] == full[0][: full[0].index(eos) + 1]
+    assert any(len(o) < 6 for o in got)  # early termination really happened
+    assert mega.cache.free_blocks == mega.cache.num_blocks - 1
+
+
+def test_megastep_prefix_share_adopters_match():
+    """Adopted (refcounted, possibly shared) blocks inside a megastep window:
+    the entry preflight must CoW the whole window span, so adopters decode
+    identically to both the per-tick sharing engine and plain paged."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    rng = np.random.default_rng(2)
+    common = rng.integers(0, arch.vocab, (9,)).astype(np.int32)
+    prompts = [np.concatenate([common, rng.integers(0, arch.vocab, (n,)).astype(np.int32)])
+               for n in (4, 2, 6)]
+    plain = PagedServeEngine(arch, params, **KW)
+    want = plain.generate(prompts, max_new=5)
+    tick_px = PagedServeEngine(arch, params, prefix_share=True, **KW)
+    assert tick_px.generate(prompts, max_new=5) == want
+    mega_px = PagedServeEngine(arch, params, prefix_share=True, decode_steps=4, **KW)
+    assert mega_px.generate(prompts, max_new=5) == want
+    assert mega_px.cache.prefix_hits > 0  # sharing actually engaged
+
+
+def test_megastep_recurrent_arch_matches_reference():
+    """Recurrent state is not block-paged, so coasting rows advance garbage
+    state — harmless (finished rows are never read; reset_slot re-zeroes on
+    admission).  Active rows must still match the stepwise oracle."""
+    arch = reduced(get_arch("rwkv6-7b"))
+    params = _params(arch)
+    prompts = _prompts(arch, seed=3, lens=(5, 3, 7))
+    mega = PagedServeEngine(arch, params, decode_steps=4, **KW)
+    got = mega.generate(prompts, max_new=5)
+    for p, o in zip(prompts, got):
+        assert o == _greedy_reference(arch, params, list(p), 5)
+
+
+def test_megastep_spec_engine_fallback_composes():
+    """A spec engine whose acceptance gate never opens must fall back through
+    the megastep (not raw per-tick decode) and stay token-identical."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    prompts = _prompts(arch, seed=4, lens=(5, 6))
+    plain = PagedServeEngine(arch, params, **KW)
+    want = plain.generate(prompts, max_new=6)
+    spec = SpecServeEngine(
+        arch, params, spec_k=3, min_accept=2.0, probe_interval=10**6,
+        decode_steps=4, **KW,
+    )
+    assert spec.generate(prompts, max_new=6) == want
+    assert spec.spec_stats["rounds"] == 0  # gate never opened
+    assert spec.spec_stats["fallback_rounds"] > 0
+    assert 0 < spec.throughput()["dispatches_per_token"] < 1  # megastep ran
+
+
+def test_megastep_dispatch_accounting_exact():
+    """One request, max_new=9, N=4: the first token is booked under prefill,
+    the remaining 8 decode tokens fit exactly two fused windows."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    mega = PagedServeEngine(arch, params, decode_steps=4, **KW)
+    out = mega.generate([np.arange(6, dtype=np.int32)], max_new=9)
+    assert len(out[0]) == 9
+    assert mega.stats["decode_tokens"] == 8
+    assert mega.stats["decode_dispatches"] == 2
+    assert mega.throughput()["dispatches_per_token"] == 0.25
+
+
+def test_megastep_kv_int8_matches_per_tick_int8():
+    """The fused window reads/writes the same int8 block pools the per-tick
+    engine does — identical codes in, identical greedy tokens out."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    prompts = _prompts(arch, seed=5, lens=(6, 4))
+    tick = PagedServeEngine(arch, params, kv_quant=True, **KW)
+    want = tick.generate(prompts, max_new=5)
+    mega = PagedServeEngine(arch, params, kv_quant=True, decode_steps=4, **KW)
+    assert mega.generate(prompts, max_new=5) == want
+
+
+def test_megastep_per_request_eos_override():
+    """Per-request eos_id beats the engine default inside the device mask
+    (the eos array is per-row, not a scalar)."""
+    arch = reduced(get_arch("yi-6b"))
+    params = _params(arch)
+    prompts = _prompts(arch, seed=6, lens=(5, 5))
+    probe = PagedServeEngine(arch, params, **KW)
+    full = probe.generate(prompts, max_new=6)
+    eos0 = full[0][1]
+    mega = PagedServeEngine(arch, params, decode_steps=8, **KW)
+    reqs = [
+        Request(uid=0, prompt=prompts[0], max_new=6, eos_id=eos0),
+        Request(uid=1, prompt=prompts[1], max_new=6, eos_id=-1),  # never fires
+    ]
+    for r in reqs:
+        mega.submit(r)
+    while not mega.sched.idle():
+        mega.step()
+    assert reqs[0].generated == full[0][: full[0].index(eos0) + 1]
+    assert reqs[1].generated == full[1]

@@ -114,6 +114,43 @@ def test_scheduler_lockstep_groups_equal_lengths():
     assert s.admissions(lambda r: True) == []  # engine busy -> no admission
 
 
+def test_scheduler_eos_finishes_early_and_frees_slot():
+    """Regression: record_token only ever checked max_new — an eos_id was
+    never consulted, so real traffic decoded garbage past end-of-sequence
+    and burned blocks until the length cap."""
+    s = Scheduler(1, prefill_chunk=4)
+    r = ServeRequest(uid=0, prompt=np.arange(3, dtype=np.int32), max_new=8, eos_id=42)
+    s.submit(r)
+    s.admissions(lambda q: True)
+    assert not s.record_token(0, 7)
+    assert s.record_token(0, 42)  # the EOS emit itself completes the request
+    assert r.done and r.generated == [7, 42]
+    assert s.slots[0] is None  # slot freed immediately, not at max_new
+    assert r.latency >= 0
+
+
+def test_request_latency_stats_guarded_before_events():
+    """Regression: the timestamps defaulted to 0.0, so latency/ttft read on
+    an in-flight request returned epoch-scale negative values that percentile
+    aggregations would silently swallow; they now refuse instead of lying."""
+    r = ServeRequest(uid=0, prompt=np.arange(2, dtype=np.int32), max_new=2)
+    with pytest.raises(RuntimeError):
+        r.latency
+    with pytest.raises(RuntimeError):
+        r.ttft
+    s = Scheduler(1)
+    s.submit(r)
+    s.admissions(lambda q: True)
+    with pytest.raises(RuntimeError):  # submitted, but no first token yet
+        r.ttft
+    with pytest.raises(RuntimeError):
+        r.latency
+    s.record_token(0, 5)
+    assert r.ttft >= 0
+    s.record_token(0, 6)
+    assert r.done and r.latency >= r.ttft >= 0
+
+
 # ---------------------------------------------------------------------------
 # engine parity (the tentpole acceptance gate)
 # ---------------------------------------------------------------------------
@@ -382,6 +419,31 @@ def test_sampling_temperature_is_key_deterministic():
         SampleConfig(method="topk", top_k=0)
     with pytest.raises(ValueError):
         SampleConfig(method="nucleus")
+
+
+def test_sampling_zero_temperature_is_greedy():
+    """Regression: temperature 0 divided logits by the 1e-6 floor, inflating
+    them to +/-inf and feeding NaN probabilities into jax.random.categorical
+    (--temperature 0 decoded garbage); the zero-temperature limit IS argmax."""
+    logits = jnp.asarray(np.random.default_rng(3).normal(size=(5, 13)), jnp.float32)
+    want = np.argmax(np.asarray(logits), -1)
+    for temp in (0.0, 1e-7):
+        cfg = SampleConfig(method="temperature", temperature=temp)
+        np.testing.assert_array_equal(np.asarray(sample_tokens(logits, cfg, KEY)), want)
+    with pytest.raises(ValueError):
+        SampleConfig(method="temperature", temperature=-0.5)
+
+
+def test_sampling_topk_beyond_vocab_is_clamped():
+    """Regression: top_k > vocab crashed inside lax.top_k; top-V-of-V is
+    plain temperature sampling, so the clamp must sample identically to it."""
+    logits = jnp.asarray(np.random.default_rng(4).normal(size=(4, 7)), jnp.float32)
+    cfg = SampleConfig(method="topk", top_k=99, temperature=0.8)
+    toks = np.asarray(sample_tokens(logits, cfg, KEY))
+    assert ((0 <= toks) & (toks < 7)).all()
+    plain = np.asarray(sample_tokens(
+        logits, SampleConfig(method="temperature", temperature=0.8), KEY))
+    np.testing.assert_array_equal(toks, plain)
 
 
 def test_paged_engine_temperature_sampling_runs():

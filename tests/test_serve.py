@@ -77,10 +77,62 @@ def test_engine_stats_split_prefill_vs_decode():
     engine = ServeEngine(arch, params, batch=2, max_seq=32)
     engine.generate([np.arange(5, dtype=np.int32)], max_new=3)
     assert engine.stats["prefill_tokens"] == 5
-    assert engine.stats["decode_tokens"] == 3
+    # the first generated token comes from the prefill dispatch's logits and
+    # is booked under prefill (the seed engine booked it under decode,
+    # skewing decode_tok_s vs the paged engine by max_new/(max_new-1))
+    assert engine.stats["decode_tokens"] == 2
+    assert engine.stats["decode_dispatches"] == 2
     assert engine.stats["prefill_s"] > 0 and engine.stats["decode_s"] > 0
+    assert engine.throughput()["dispatches_per_token"] == 1.0
     engine.reset_stats()
     assert engine.stats["prefill_tokens"] == 0
+    assert engine.stats["decode_dispatches"] == 0
+
+
+def test_decode_accounting_convention_matches_paged():
+    """Regression (BENCH 64 vs 56): both engines must book the identical
+    workload's tokens under the same prefill/decode split, or every
+    cross-engine decode_tok_s comparison is skewed by max_new/(max_new-1)."""
+    from repro.serve.engine import PagedServeEngine
+
+    arch = reduced(get_arch("yi-6b"))
+    params = unbox(init_lm(KEY, arch))
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, arch.vocab, (n,)).astype(np.int32) for n in (5, 3)]
+    contig = ServeEngine(arch, params, batch=2, max_seq=32)
+    paged = PagedServeEngine(arch, params, batch=2, max_seq=32, block_size=4,
+                             prefill_chunk=4)
+    assert contig.generate(prompts, max_new=4) == paged.generate(prompts, max_new=4)
+    for k in ("prefill_tokens", "decode_tokens"):
+        assert contig.stats[k] == paged.stats[k], (k, contig.stats, paged.stats)
+    assert contig.stats["decode_tokens"] == 2 * (4 - 1)
+
+
+def test_contiguous_engine_stops_on_eos():
+    """The engine-level EOS default: requests finish the step they emit the
+    id instead of decoding garbage to max_new (the seed engine never checked
+    an EOS anywhere)."""
+    arch = reduced(get_arch("yi-6b"))
+    params = unbox(init_lm(KEY, arch))
+    prompt = np.arange(5, dtype=np.int32)
+    ref = ServeEngine(arch, params, batch=2, max_seq=32)
+    full = ref.generate([prompt], max_new=6)[0]
+    eos = full[2]  # provably emitted mid-stream under greedy determinism
+    engine = ServeEngine(arch, params, batch=2, max_seq=32, eos_id=eos)
+    out = engine.generate([prompt], max_new=6)[0]
+    stop = full.index(eos)
+    assert out == full[: stop + 1]  # EOS itself is recorded, nothing after
+    req = engine.last_requests[0]
+    assert req.done and req.latency >= 0 and req.ttft >= 0
+    # per-request override beats the engine default
+    engine2 = ServeEngine(arch, params, batch=2, max_seq=32, eos_id=eos)
+    from repro.serve.engine import Request
+
+    r = Request(uid=0, prompt=prompt, max_new=6, eos_id=-1)  # never emitted
+    engine2.admit(r)
+    while engine2.tick():
+        pass
+    assert r.generated == full
 
 
 def test_deploy_int8_weights_respect_budget_and_serve():
