@@ -1,6 +1,9 @@
 """Serving benchmark: contiguous per-token-prefill baseline vs the paged
-engine family (fp32 / int8 KV blocks / prefix sharing / speculative
-decoding) on a mixed-length workload with a shared-prefix cohort.
+engine family (fp32 / int8 KV blocks / int8 KV composed with the fused
+decode megastep / prefix sharing / speculative decoding) on a mixed-length
+workload with a shared-prefix cohort.  ``run_cluster()`` adds the routed
+two-replica cluster cohort: capacity scaling vs a single replica and the
+mid-wave replica-kill requeue drill (``--cluster`` on the CLI).
 
 Reports continuous-batching throughput (tok/s, split prefill vs decode) and
 per-request end-to-end latency p50/p99 for every engine, the paged engine's
@@ -133,6 +136,11 @@ def run(
     # the int8-KV / prefix-share / spec comparisons were defined against.
     paged_mega = PagedServeEngine(arch, params, decode_steps=decode_steps, **pkw)
     paged_q8 = PagedServeEngine(arch, params, kv_quant=True, **pkw)
+    # int8 KV blocks *composed with* the fused decode megastep: the two
+    # optimizations must stack (quantized pools ride the same N-tick fused
+    # dispatch), not merely coexist in separate engines
+    paged_q8m = PagedServeEngine(arch, params, kv_quant=True,
+                                 decode_steps=decode_steps, **pkw)
     paged_px = PagedServeEngine(arch, params, prefix_share=True, **pkw)
     # pin the workload's common system prefix (same rng draw as _workload):
     # prefilled once here, never evicted, so even the *first* shared-cohort
@@ -141,7 +149,8 @@ def run(
     pinned_tokens = paged_px.pin_prompt(common)
     spec = (SpecServeEngine(arch, params, spec_k=spec_k, **pkw)
             if spec_ok else None)
-    engines = [e for e in (contig, paged, paged_mega, paged_q8, paged_px, spec)
+    engines = [e for e in (contig, paged, paged_mega, paged_q8, paged_q8m,
+                           paged_px, spec)
                if e is not None]
     # Warmup pass covers every jit shape (the paged engine compiles one
     # prefill per distinct chunk length), so the timed pass measures
@@ -157,11 +166,12 @@ def run(
             e.cache.pool_rebuilds = 0
             e.cache.bt_full_uploads = e.cache.bt_row_patches = 0
 
-    reqs_c, reqs_p, reqs_m, reqs_q, reqs_x = (workload() for _ in range(5))
+    reqs_c, reqs_p, reqs_m, reqs_q, reqs_qm, reqs_x = (workload() for _ in range(6))
     _drive_contiguous(contig, reqs_c)
     _drive_paged(paged, reqs_p)
     _drive_paged(paged_mega, reqs_m)
     _drive_paged(paged_q8, reqs_q)
+    _drive_paged(paged_q8m, reqs_qm)
     _drive_paged(paged_px, reqs_x)
     reqs_s = None
     if spec is not None:
@@ -173,6 +183,11 @@ def run(
     # the megastep is a pure dispatch fusion: greedy tokens must be identical
     assert [r.generated for r in reqs_m] == [r.generated for r in reqs_p], \
         "megastep engine diverged from per-tick paged decode"
+    # ...and it stays a pure fusion over int8 pools: the fused int8 engine
+    # must match the per-tick int8 engine token-for-token (both share the
+    # same quantized numerics; only the dispatch count differs)
+    assert [r.generated for r in reqs_qm] == [r.generated for r in reqs_q], \
+        "int8-KV megastep engine diverged from per-tick int8-KV decode"
     # prefix sharing and speculative decoding are lossless: exact parity
     assert [r.generated for r in reqs_x] == [r.generated for r in reqs_p], \
         "prefix-sharing engine diverged"
@@ -193,6 +208,7 @@ def run(
         "paged_megastep": _stats_row(paged_mega, reqs_m),
         "decode_steps": decode_steps,
         "paged_int8_kv": _stats_row(paged_q8, reqs_q),
+        "paged_megastep_int8_kv": _stats_row(paged_q8m, reqs_qm),
         "paged_prefix_share": _stats_row(paged_px, reqs_x),
         # fixed lanes vs token-proportional blocks (same dtype, so the slot
         # count ratio is the memory ratio for the seq-indexed leaves)
@@ -261,6 +277,17 @@ def run(
         out["paged_int8_kv"]["decode_tok_s"] / out["paged"]["decode_tok_s"]
         if out["paged"]["decode_tok_s"] > 0 else float("inf")
     )
+    # the composed engine (int8 pools + fused megastep): dispatch cost per
+    # token must match the fp32 megastep (~1/N), and its steady-state decode
+    # must not fall behind the per-tick int8 engine it fuses
+    out["int8_kv_megastep_dispatches_per_token"] = (
+        out["paged_megastep_int8_kv"]["dispatches_per_token"]
+    )
+    out["int8_kv_megastep_decode_ratio"] = (
+        out["paged_megastep_int8_kv"]["decode_tok_s"]
+        / out["paged_int8_kv"]["decode_tok_s"]
+        if out["paged_int8_kv"]["decode_tok_s"] > 0 else float("inf")
+    )
     # the prefix-share cliff gate: prefill-dominated latency (TTFT p50) of
     # the sharing engine vs plain paged on the identical workload.  The seed
     # regression was ~13x (a recompile per distinct shared-prefix length);
@@ -273,7 +300,7 @@ def run(
     print("engine,tok_s,prefill_tok_s,decode_tok_s,dispatches_per_token,"
           "latency_p50_s,latency_p99_s")
     rows = ["contiguous", "paged", "paged_megastep", "paged_int8_kv",
-            "paged_prefix_share"]
+            "paged_megastep_int8_kv", "paged_prefix_share"]
     if "spec" in out:
         rows.append("spec")
     for name in rows:
@@ -290,6 +317,9 @@ def run(
     print(f"kv_bytes_per_token,{out['kv_bytes_per_token_fp32']}B fp32,"
           f"{out['kv_bytes_per_token_int8']}B int8,ratio {out['kv_bytes_ratio']:.2f}x,"
           f"decode_ratio {out['int8_kv_decode_ratio']:.2f}")
+    print(f"int8_kv_megastep,dispatches_per_token "
+          f"{out['int8_kv_megastep_dispatches_per_token']:.3f},"
+          f"decode_ratio_vs_tick_int8 {out['int8_kv_megastep_decode_ratio']:.2f}")
     print(f"prefix_share,hits {out['prefix_hits']},shared_tokens "
           f"{out['prefix_hit_tokens']},cow_copies {out['prefix_cow_copies']},"
           f"pinned_tokens {out['prefix_pinned_tokens']},"
@@ -298,6 +328,119 @@ def run(
         print(f"spec,k {out['spec_k']},acceptance {out['spec_acceptance_rate']:.2f},"
               f"decode_speedup {out['spec_decode_speedup']:.2f},"
               f"throughput_speedup {out['spec_throughput_speedup']:.2f}")
+    return out
+
+
+def run_cluster(
+    arch_name: str = "yi-6b",
+    requests: int = 10,
+    max_new: int = 6,
+    batch: int = 2,
+    max_seq: int = 64,
+    block_size: int = 8,
+    prefill_chunk: int = 16,
+    seed: int = 0,
+) -> dict:
+    """Two-replica routed cluster vs a single replica on the skewed bursty
+    wave, plus a mid-wave replica-kill pass.
+
+    Three passes over the identical workload, all through the Router so the
+    single-replica baseline pays the same routing overhead: (1) one replica,
+    (2) two replicas, (3) two replicas with the busiest one killed mid-wave.
+    Throughput is fleet **capacity** — total tokens over the busiest
+    replica's engine-measured busy seconds (the multi-host makespan; see
+    ``launch/serve_cluster.py``) — because a single-host CI runner
+    interleaves replicas on one core and cannot show wall-clock speedup.
+    The 2-replica pass must reach >= 1.6x the 1-replica capacity (a routing
+    *balance* claim: a router that piles work on one replica fails it), the
+    kill pass must complete every request with token-exact output (the
+    at-most-once requeue claim), and all passes must match pass 1
+    token-for-token.
+    """
+    from repro.launch.serve_cluster import aggregate_capacity, build_workload
+    from repro.serve.cluster import (
+        InProcessReplica, ReplicaConfig, Router, make_cluster_configs,
+    )
+    from repro.serve.cluster.replica import build_engine
+
+    arch = reduced(get_arch(arch_name))
+    params = unbox(init_lm(jax.random.PRNGKey(seed), arch))
+    base = ReplicaConfig(
+        arch=arch_name, reduced=True, seed=seed, batch=batch, max_seq=max_seq,
+        block_size=block_size, prefill_chunk=prefill_chunk,
+    )
+    cfgs = make_cluster_configs(base, replicas=2)
+    # one warmed engine per replica, shared across the timed passes (a fresh
+    # InProcessReplica handle per pass wraps the same engine, so XLA compiles
+    # are paid once here and the timed passes measure steady-state serving)
+    engines = {c.name: build_engine(c, params=params) for c in cfgs}
+    rng = np.random.default_rng(seed)
+    prompts = build_workload(rng, requests, 12, 4, min(arch.vocab, 50))
+    for eng in engines.values():
+        warm = [Request(uid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        _drive_paged(eng, warm)
+
+    def routed_pass(names, kill_after=None):
+        for eng in engines.values():
+            eng.reset_stats()
+        handles = [InProcessReplica(c, engine=engines[c.name])
+                   for c in cfgs if c.name in names]
+        router = Router(handles)
+        rids = [router.submit(p, max_new=max_new) for p in prompts]
+        state = {"killed": None}
+
+        def hook(r, step):
+            if state["killed"] is not None:
+                return
+            done = sum(1 for q in r.reqs.values() if q.done)
+            if done < kill_after:
+                return
+            alive = [st for st in r.states.values() if st.alive]
+            if len(alive) < 2:
+                return
+            victim = max(alive, key=lambda st: (len(st.inflight), st.name))
+            if victim.inflight:
+                r.kill(victim.name)
+                state["killed"] = victim.name
+
+        res = router.drain(on_step=hook if kill_after is not None else None)
+        outs = [res[r] for r in rids]
+        complete = all(q.done and q.emitted for q in router.reqs.values())
+        agg = aggregate_capacity(router.collect_stats())
+        requeues, deaths = router.requeues, router.deaths
+        router.close()
+        return outs, agg, requeues, deaths, complete
+
+    outs1, agg1, _, _, _ = routed_pass({cfgs[0].name})
+    outs2, agg2, _, _, _ = routed_pass({c.name for c in cfgs})
+    assert outs2 == outs1, "2-replica routed output diverged from 1-replica"
+    # the kill pass runs last: the victim engine is left with stranded slots
+    outs3, _, requeues, deaths, complete = routed_pass(
+        {c.name for c in cfgs}, kill_after=max(1, requests // 4))
+    assert outs3 == outs1, \
+        "requeued requests after the replica kill diverged (duplicate or lost tokens)"
+
+    out = {
+        "arch": arch_name,
+        "requests": requests,
+        "cluster_1rep_tok_s": agg1["agg_tok_s"],
+        "cluster_2rep_tok_s": agg2["agg_tok_s"],
+        "cluster_busy_s": agg2["busy_s"],
+        "cluster_scaling": (agg2["agg_tok_s"] / agg1["agg_tok_s"]
+                            if agg1["agg_tok_s"] > 0 else float("inf")),
+        "cluster_deaths": deaths,
+        "cluster_requeues": requeues,
+        # 1.0 iff every request in the kill pass finished with its full,
+        # token-exact stream (outs3 equality above guarantees no duplicates)
+        "cluster_requeue_complete": float(complete and deaths == 1),
+    }
+    print("cluster,replicas,agg_tok_s")
+    print(f"cluster,1,{out['cluster_1rep_tok_s']:.1f}")
+    print(f"cluster,2,{out['cluster_2rep_tok_s']:.1f}")
+    print(f"cluster_scaling,{out['cluster_scaling']:.2f},"
+          f"requeue_complete,{out['cluster_requeue_complete']:.1f},"
+          f"deaths {out['cluster_deaths']},requeues {out['cluster_requeues']}")
     return out
 
 
@@ -312,6 +455,8 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--decode-steps", type=int, default=8,
                     help="fused decode ticks per dispatch for the megastep engine")
+    ap.add_argument("--cluster", action="store_true",
+                    help="also run the 2-replica routed cluster cohort")
     ap.add_argument("--json", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -321,6 +466,12 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk, decode_steps=args.decode_steps,
         seed=args.seed,
     )
+    if args.cluster:
+        out["cluster"] = run_cluster(
+            arch_name=args.arch, requests=args.requests, max_new=args.max_new,
+            batch=args.batch, max_seq=args.max_seq, block_size=args.block_size,
+            prefill_chunk=args.prefill_chunk, seed=args.seed,
+        )
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)

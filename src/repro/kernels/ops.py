@@ -19,10 +19,20 @@ from repro.kernels import ref
 from repro.kernels.a2q_quantize import a2q_quantize_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.int_matmul import int_matmul_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (
+    paged_attention_pallas,
+    paged_mla_attention_pallas,
+)
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 
-__all__ = ["int_matmul", "a2q_quantize", "flash_attention", "paged_attention", "rwkv6_scan"]
+__all__ = [
+    "int_matmul",
+    "a2q_quantize",
+    "flash_attention",
+    "paged_attention",
+    "paged_mla_attention",
+    "rwkv6_scan",
+]
 
 
 def _default_interpret(interpret: Optional[bool]) -> bool:
@@ -201,8 +211,11 @@ def paged_attention(
     step's write).  Returns ``(B, H, Dh)``.  Oracle:
     ``ref.ref_paged_attention``.
 
-    ``kps``/``vps`` (``(NB, bs, KV)`` fp32): the pools are int8 and the
-    kernel dequantizes in-register.  Oracle: ``ref.ref_paged_attention_q8``.
+    ``kps``/``vps`` (``(NB, bs, KV)`` fp32): the pools are integer and the
+    kernel dequantizes in-register — int8 codes directly (oracle:
+    ``ref.ref_paged_attention_q8``) or, when the pools are uint8, the packed
+    int4 layout at feature width ``Dh // 2``, unpacked + sign-extended in
+    register (oracle: ``ref.ref_paged_attention_q4``).
 
     ``window``: sliding-window masking — each row attends keys at
     ``kpos >= length - window`` only (windowed-decode kernel coverage).
@@ -212,6 +225,8 @@ def paged_attention(
     G = H // KV
     if (kps is None) != (vps is None):
         raise ValueError("paged_attention: kps and vps must be given together")
+    if kp.dtype == jnp.uint8 and kps is None:
+        raise ValueError("paged_attention: packed int4 pools need kps/vps")
     if window is not None and window < 1:
         raise ValueError("paged_attention: window must be >= 1")
     out = paged_attention_pallas(
@@ -227,6 +242,55 @@ def paged_attention(
         interpret=_default_interpret(interpret),
     )
     return out.reshape(B, H, Dh)
+
+
+def paged_mla_attention(
+    q_lat: jnp.ndarray,
+    q_pe: jnp.ndarray,
+    ckvp: jnp.ndarray,
+    kpep: jnp.ndarray,
+    bt: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    ckvs: Optional[jnp.ndarray] = None,
+    kpes: Optional[jnp.ndarray] = None,
+    scale: float,
+    aq_scale: Optional[jnp.ndarray] = None,
+    act_bits: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """MLA absorbed-decode latent attention over paged compressed pools.
+
+    ``q_lat (B, H, R)`` is the query already absorbed through the up-proj's
+    key half, ``q_pe (B, H, P)`` the rope half; pools ``ckvp (NB, bs, R)`` /
+    ``kpep (NB, bs, P)`` hold the shared latent + rope key per token (no head
+    axis — that is the MLA bandwidth win), table ``bt (B, MB)``, ``lengths``
+    counting valid tokens including this step's write.  Returns the latent
+    output ``o_lat (B, H, R)`` (fp32); the caller up-projects through
+    ``w_v``.  Oracle: ``ref.ref_paged_mla_attention``.
+
+    ``ckvs``/``kpes`` (``(NB, bs)`` fp32): the pools are integer — int8
+    codes, or packed int4 at half feature width when uint8 — and the kernel
+    dequantizes in-register.  ``aq_scale``/``act_bits`` replay the absorb
+    path's activation fake-quant on the dequantized latent.  ``scale`` is the
+    absorbed score scale ``(qk_nope_dim + qk_rope_dim) ** -0.5`` (required —
+    not derivable from latent shapes)."""
+    if (ckvs is None) != (kpes is None):
+        raise ValueError("paged_mla_attention: ckvs and kpes must be given together")
+    return paged_mla_attention_pallas(
+        q_lat,
+        q_pe,
+        ckvp,
+        kpep,
+        bt,
+        lengths,
+        ckvs,
+        kpes,
+        scale=scale,
+        aq_scale=aq_scale,
+        act_bits=act_bits,
+        interpret=_default_interpret(interpret),
+    )
 
 
 def rwkv6_scan(

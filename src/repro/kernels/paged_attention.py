@@ -24,6 +24,22 @@ int8 and the kernel dequantizes *in register* inside the online-softmax loop:
 the int8 block is what DMAs from HBM (~4x less decode bandwidth than fp32),
 the fp32 view never exists outside VMEM.  Oracle:
 ``ref.ref_paged_attention_q8``.
+
+Packed int4 pools (uint8, two codes per byte, half the feature width) ride
+the same scale machinery: the kernel detects the byte-width from the pool
+dtype, DMAs the nibble-packed block, and unpacks + sign-extends in register
+before the per-slot rescale — ~8x less decode bandwidth than fp32.  Oracle:
+``ref.ref_paged_attention_q4``.
+
+``paged_mla_attention_*`` is the latent-attention sibling for MLA absorbed
+decode: scores are taken directly against the compressed ``(ckv, kpe)``
+latent pools (rank R + rope P per token instead of H heads x Dh), the PV
+accumulation reuses the *same* ckv block, and the per-head up-projections
+stay outside the kernel.  Supports fp32 / int8 / packed-int4 latent pools
+and an optional in-kernel activation fake-quant of the dequantized latent
+(`clip(round(x/s)) * s`) so the absorbed-decode numerics — including the
+A2Q activation quantizer the absorb path folds in — match the gathered
+oracle ``ref.ref_paged_mla_attention``.
 """
 
 from __future__ import annotations
@@ -36,9 +52,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["paged_attention_kernel", "paged_attention_pallas"]
+__all__ = [
+    "paged_attention_kernel",
+    "paged_attention_pallas",
+    "paged_mla_attention_kernel",
+    "paged_mla_attention_pallas",
+]
 
 _NEG_INF = -1e30
+
+
+def _unpack_nibbles_f32(u: jnp.ndarray) -> jnp.ndarray:
+    """Packed uint8 ``(bs, D // 2)`` -> fp32 codes ``(bs, D)`` (element 2i in
+    the low nibble, 2i+1 in the high; ``(x ^ 8) - 8`` sign extension) —
+    in-register twin of the layer-side ``_unpack_nibbles``."""
+    lo = (u & 0xF).astype(jnp.int32)
+    hi = (u >> 4).astype(jnp.int32)
+    se = lambda x: (x ^ 8) - 8
+    codes = jnp.stack([se(lo), se(hi)], axis=-1)
+    return codes.reshape(u.shape[0], u.shape[1] * 2).astype(jnp.float32)
 
 
 def paged_attention_kernel(
@@ -52,6 +84,7 @@ def paged_attention_kernel(
     block_size: int,
     mb_steps: int,
     quantized: bool,
+    packed: bool = False,
     window: Optional[int] = None,
 ):
     if quantized:
@@ -67,7 +100,10 @@ def paged_attention_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, Dh)
-    k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
+    if packed:
+        k = _unpack_nibbles_f32(k_ref[0, :, 0])  # (bs, Dh) from (bs, Dh // 2)
+    else:
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
     if quantized:
         # in-register dequant: the fp32 K block exists only in VMEM
         k = k * ks_ref[0, :, 0][:, None]
@@ -92,7 +128,10 @@ def paged_attention_kernel(
     p = jnp.where(valid, p, 0.0)
     l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
     m_ref[...] = m_new
-    v = v_ref[0, :, 0].astype(jnp.float32)
+    if packed:
+        v = _unpack_nibbles_f32(v_ref[0, :, 0])
+    else:
+        v = v_ref[0, :, 0].astype(jnp.float32)
     if quantized:
         v = v * vs_ref[0, :, 0][:, None]
     pv = jax.lax.dot_general(
@@ -128,20 +167,24 @@ def paged_attention_pallas(
     int8 pools dequantized in-kernel against the per-slot scales.
     ``window`` masks to the sliding window ending at the query position
     (keys at ``kpos >= length - window``) — the windowed-decode coverage for
-    ring/sliding-window archs."""
+    ring/sliding-window archs.  uint8 pools are the nibble-packed int4 layout
+    (feature width ``Dh // 2``) and are unpacked in register."""
     B, KV, G, Dh = q.shape
-    NB, bs, _, _ = kp.shape
+    NB, bs, _, Dhp = kp.shape
     MB = bt.shape[1]
     quantized = kps is not None
+    packed = kp.dtype == jnp.uint8
+    if packed and not quantized:
+        raise ValueError("packed int4 pools need kps/vps scale pools")
     if scale is None:
         scale = Dh**-0.5
 
     kernel = functools.partial(
         paged_attention_kernel, scale=scale, block_size=bs, mb_steps=MB,
-        quantized=quantized, window=window,
+        quantized=quantized, packed=packed, window=window,
     )
     pool_spec = pl.BlockSpec(
-        (1, bs, 1, Dh), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)
+        (1, bs, 1, Dhp), lambda b, h, j, bt_ref, len_ref: (bt_ref[b, j], 0, h, 0)
     )
     in_specs = [
         pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
@@ -170,5 +213,166 @@ def paged_attention_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, Dh), q.dtype),
+        interpret=interpret,
+    )(bt.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent attention: absorbed decode directly over the compressed pools.
+# ---------------------------------------------------------------------------
+
+
+def paged_mla_attention_kernel(
+    bt_ref,  # (B, MB) scalar-prefetch block table
+    len_ref,  # (B,)   scalar-prefetch per-row lengths
+    ql_ref,  # (1, H, R)  absorbed query in latent space
+    qp_ref,  # (1, H, P)  rope query half
+    ckv_ref,  # (1, bs, R) latent block bt[b, j]; int8 / packed uint8 when quantized
+    kpe_ref,  # (1, bs, P) rope-key block
+    *rest,  # [ckvs_ref, kpes_ref][, aq_ref], o_ref, m, l, acc
+    scale: float,
+    block_size: int,
+    mb_steps: int,
+    quantized: bool,
+    packed: bool,
+    act_bits: Optional[int],
+):
+    idx = 0
+    if quantized:
+        ckvs_ref, kpes_ref = rest[idx], rest[idx + 1]  # (1, bs) fp32 per-token scales
+        idx += 2
+    if act_bits is not None:
+        aq_ref = rest[idx]  # (1, 1) fp32 activation-quantizer scale
+    o_ref, m_ref, l_ref, acc_ref = rest[-4:]
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ql = ql_ref[0].astype(jnp.float32)  # (H, R)
+    qp = qp_ref[0].astype(jnp.float32)  # (H, P)
+    if packed:
+        ckv = _unpack_nibbles_f32(ckv_ref[0])  # (bs, R)
+        kpe = _unpack_nibbles_f32(kpe_ref[0])  # (bs, P)
+    else:
+        ckv = ckv_ref[0].astype(jnp.float32)
+        kpe = kpe_ref[0].astype(jnp.float32)
+    if quantized:
+        ckv = ckv * ckvs_ref[0][:, None]
+        kpe = kpe * kpes_ref[0][:, None]
+    if act_bits is not None:
+        # The absorb path runs the latent through the up-projection's A2Q
+        # activation quantizer; replay the fake-quant on the dequantized
+        # block so score *and* PV see exactly the quantized latent.
+        n = -(1 << (act_bits - 1))
+        p_max = (1 << (act_bits - 1)) - 1
+        s_aq = aq_ref[0, 0]
+        ckv = jnp.clip(jnp.round(ckv / s_aq), n, p_max) * s_aq
+
+    s = jax.lax.dot_general(
+        ql, ckv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (H, bs)
+    s += jax.lax.dot_general(
+        qp, kpe, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s *= scale
+
+    length = len_ref[b]
+    kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+    valid = kpos < length
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[...]  # (H, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(
+        p, ckv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (H, R) — PV reuses the same (dequantized, act-quantized) latent block
+    acc_ref[...] = alpha * acc_ref[...] + pv
+
+    @pl.when(j == mb_steps - 1)
+    def _flush():
+        l = l_ref[...]
+        norm = jnp.where(l > 0.0, 1.0 / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0] = (acc_ref[...] * norm).astype(o_ref.dtype)
+
+
+def paged_mla_attention_pallas(
+    q_lat: jnp.ndarray,  # (B, H, R) — q_nope absorbed through w_k
+    q_pe: jnp.ndarray,  # (B, H, P)
+    ckvp: jnp.ndarray,  # (NB, bs, R) latent pool (fp / int8 / packed uint8)
+    kpep: jnp.ndarray,  # (NB, bs, P) rope-key pool
+    bt: jnp.ndarray,  # (B, MB) int32
+    lengths: jnp.ndarray,  # (B,) int32
+    ckvs: Optional[jnp.ndarray] = None,  # (NB, bs) fp32 latent scales
+    kpes: Optional[jnp.ndarray] = None,
+    *,
+    scale: float,
+    aq_scale: Optional[jnp.ndarray] = None,  # scalar activation-quant scale
+    act_bits: Optional[int] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns ``(B, H, R)`` latent attention outputs (``o_lat``; the caller
+    up-projects through ``w_v``).  ``scale`` is the absorbed score scale
+    ``(qk_nope_dim + qk_rope_dim) ** -0.5`` — not derivable from the latent
+    shapes, so it is required.  ``aq_scale``/``act_bits`` replay the A2Q
+    activation fake-quant on the dequantized latent in register (``aq_scale``
+    is a traced scalar, shipped as a ``(1, 1)`` operand)."""
+    B, H, R = q_lat.shape
+    P = q_pe.shape[-1]
+    NB, bs = ckvp.shape[:2]
+    MB = bt.shape[1]
+    quantized = ckvs is not None
+    packed = ckvp.dtype == jnp.uint8
+    if packed and not quantized:
+        raise ValueError("packed int4 latent pools need ckvs/kpes scale pools")
+    if (act_bits is None) != (aq_scale is None):
+        raise ValueError("aq_scale and act_bits must be given together")
+
+    kernel = functools.partial(
+        paged_mla_attention_kernel, scale=scale, block_size=bs, mb_steps=MB,
+        quantized=quantized, packed=packed, act_bits=act_bits,
+    )
+    in_specs = [
+        pl.BlockSpec((1, H, R), lambda b, j, bt_ref, len_ref: (b, 0, 0)),
+        pl.BlockSpec((1, H, P), lambda b, j, bt_ref, len_ref: (b, 0, 0)),
+        pl.BlockSpec((1, bs, ckvp.shape[-1]),
+                     lambda b, j, bt_ref, len_ref: (bt_ref[b, j], 0, 0)),
+        pl.BlockSpec((1, bs, kpep.shape[-1]),
+                     lambda b, j, bt_ref, len_ref: (bt_ref[b, j], 0, 0)),
+    ]
+    operands = [q_lat, q_pe, ckvp, kpep]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, bs), lambda b, j, bt_ref, len_ref: (bt_ref[b, j], 0)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [ckvs.astype(jnp.float32), kpes.astype(jnp.float32)]
+    if act_bits is not None:
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, j, bt_ref, len_ref: (0, 0)))
+        operands.append(jnp.asarray(aq_scale, jnp.float32).reshape(1, 1))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, MB),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, H, R), lambda b, j, bt_ref, len_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, R), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, R), jnp.float32),
         interpret=interpret,
     )(bt.astype(jnp.int32), lengths.astype(jnp.int32), *operands)

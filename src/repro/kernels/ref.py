@@ -23,6 +23,8 @@ __all__ = [
     "ref_flash_attention",
     "ref_paged_attention",
     "ref_paged_attention_q8",
+    "ref_paged_attention_q4",
+    "ref_paged_mla_attention",
     "ref_rwkv6",
 ]
 
@@ -223,6 +225,91 @@ def ref_paged_attention_q8(
     kd = kp.astype(jnp.float32) * kps.astype(jnp.float32)[..., None]
     vd = vp.astype(jnp.float32) * vps.astype(jnp.float32)[..., None]
     return ref_paged_attention(q, kd, vd, bt, lengths, scale=scale, window=window)
+
+
+def _unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """Packed uint8 ``(..., D // 2)`` -> sign-extended int32 ``(..., D)``:
+    element 2i from the low nibble, 2i+1 from the high, ``(x ^ 8) - 8``
+    two's-complement sign extension (the layer-side pack/unpack convention)."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    se = lambda x: (x ^ 8) - 8
+    out = jnp.stack([se(lo), se(hi)], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def ref_paged_attention_q4(
+    q: jnp.ndarray,  # (B, H, Dh)
+    kp: jnp.ndarray,  # (NB, bs, KV, Dh // 2) packed uint8 key pool
+    vp: jnp.ndarray,  # (NB, bs, KV, Dh // 2) packed uint8 value pool
+    kps: jnp.ndarray,  # (NB, bs, KV) fp32 per-slot key scales
+    vps: jnp.ndarray,  # (NB, bs, KV) fp32 per-slot value scales
+    bt: jnp.ndarray,  # (B, MB) int32 block table
+    lengths: jnp.ndarray,  # (B,) int32
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Packed-int4-pool paged-attention oracle: unpack the nibble pairs,
+    sign-extend, rescale against the per-slot fp32 scales, then the fp32
+    gathered-view softmax.  Same dequant the kernel performs in register."""
+    kd = _unpack_nibbles(kp).astype(jnp.float32) * kps.astype(jnp.float32)[..., None]
+    vd = _unpack_nibbles(vp).astype(jnp.float32) * vps.astype(jnp.float32)[..., None]
+    return ref_paged_attention(q, kd, vd, bt, lengths, scale=scale, window=window)
+
+
+def ref_paged_mla_attention(
+    q_lat: jnp.ndarray,  # (B, H, R) absorbed latent query
+    q_pe: jnp.ndarray,  # (B, H, P) rope query half
+    ckvp: jnp.ndarray,  # (NB, bs, R) latent pool (fp / int8 / packed uint8)
+    kpep: jnp.ndarray,  # (NB, bs, P) rope-key pool
+    bt: jnp.ndarray,  # (B, MB) int32 block table
+    lengths: jnp.ndarray,  # (B,) int32
+    ckvs: Optional[jnp.ndarray] = None,  # (NB, bs) fp32 latent scales
+    kpes: Optional[jnp.ndarray] = None,
+    *,
+    scale: float,
+    aq_scale: Optional[jnp.ndarray] = None,
+    act_bits: Optional[int] = None,
+) -> jnp.ndarray:
+    """MLA absorbed-decode oracle: gather the compressed latent / rope-key
+    pools through the block table (dequantizing int8 or packed-int4 codes
+    against their per-token scales), optionally replay the A2Q activation
+    fake-quant on the latent (``clip(round(x / aq_scale)) * aq_scale``, the
+    absorb path's quantizer), then latent-space scores and PV:
+
+        s = (q_lat @ ckv^T + q_pe @ kpe^T) * scale
+        o_lat = softmax(s) @ ckv                         (B, H, R)
+
+    The caller up-projects ``o_lat`` through ``w_v`` exactly as the absorbed
+    layer path does."""
+    B, H, R = q_lat.shape
+    NB, bs = ckvp.shape[:2]
+    MB = bt.shape[1]
+    ckv = ckvp[bt].reshape(B, MB * bs, ckvp.shape[-1])
+    kpe = kpep[bt].reshape(B, MB * bs, kpep.shape[-1])
+    if ckvp.dtype == jnp.uint8:
+        ckv = _unpack_nibbles(ckv)
+        kpe = _unpack_nibbles(kpe)
+    ckv = ckv.astype(jnp.float32)
+    kpe = kpe.astype(jnp.float32)
+    if ckvs is not None:
+        ckv = ckv * ckvs[bt].reshape(B, MB * bs).astype(jnp.float32)[..., None]
+        kpe = kpe * kpes[bt].reshape(B, MB * bs).astype(jnp.float32)[..., None]
+    if act_bits is not None:
+        n, p_max = -(1 << (act_bits - 1)), (1 << (act_bits - 1)) - 1
+        s_aq = jnp.asarray(aq_scale, jnp.float32)
+        ckv = jnp.clip(jnp.round(ckv / s_aq), n, p_max) * s_aq
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), ckv)
+    s += jnp.einsum("bhp,bsp->bhs", q_pe.astype(jnp.float32), kpe)
+    s *= scale
+    kpos = jnp.arange(MB * bs)[None, :]
+    valid = kpos < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, :], jnp.exp(s - m), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0.0, p / jnp.maximum(denom, 1e-30), 0.0)
+    return jnp.einsum("bhs,bsr->bhr", p, ckv)
 
 
 def ref_rwkv6(

@@ -354,7 +354,7 @@ def apply_attention(
         return _apply_mla(
             params, x, a, q, positions, cache,
             q_chunk=q_chunk, compute_dtype=compute_dtype, absorb=mla_absorb,
-            view=view, int_forward=int_forward,
+            view=view, decode_kernel=decode_kernel, int_forward=int_forward,
         )
     B, T, D = x.shape
     H, KV, Dh = a.heads, a.kv_heads, a.head_dim
@@ -388,13 +388,10 @@ def apply_attention(
                 "kp": _paged_write(cache["kp"], kh, bt, positions),
                 "vp": _paged_write(cache["vp"], vh, bt, positions),
             }
-        kernel_ok = (
-            decode_kernel and T == 1 and a.causal and a.chunk is None
-            # packed int4 pools stay on the gathered dequant path (the kernel
-            # DMAs int8 codes); windowed decode is covered via the kernel's
-            # window mask
-            and (not quant or cache["kp"].dtype == jnp.int8)
-        )
+        # int8 and packed-int4 pools both ride the kernel (it detects the
+        # byte width from the pool dtype); windowed decode is covered via
+        # the kernel's window mask
+        kernel_ok = decode_kernel and T == 1 and a.causal and a.chunk is None
         if kernel_ok:
             from repro.kernels import ops
 
@@ -455,6 +452,7 @@ def _apply_mla(
     compute_dtype,
     absorb: bool,
     view: Optional[dict] = None,
+    decode_kernel: bool = False,
     int_forward: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     B, T, D = x.shape
@@ -474,6 +472,13 @@ def _apply_mla(
     kpe = kv_a[..., a.kv_lora_rank :].reshape(B, T, 1, rope)
     kpe = apply_rope(kpe, positions, a.rope_theta or 10000.0).reshape(B, T, rope)
 
+    # Absorbed single-token decode over a paged latent cache routes through
+    # the Pallas MLA latent-attention kernel: scores and PV run directly on
+    # the pool blocks, so the gathered (B, S, R) latent view is never built.
+    use_kernel = (
+        decode_kernel and absorb and T == 1 and a.causal
+        and cache is not None and "ckvp" in cache
+    )
     if cache is not None and "ckvp" in cache:  # paged latent cache
         assert view is not None, "paged MLA cache needs a block-table view"
         bt = view["bt"]
@@ -481,16 +486,21 @@ def _apply_mla(
             ckvp_new, ckvs_new = _paged_write_q8(cache["ckvp"], cache["ckvs"], ckv, bt, positions)
             kpep_new, kpes_new = _paged_write_q8(cache["kpep"], cache["kpes"], kpe, bt, positions)
             cache = {"ckvp": ckvp_new, "ckvs": ckvs_new, "kpep": kpep_new, "kpes": kpes_new}
-            ckv_all = _paged_gather_deq(cache["ckvp"], cache["ckvs"], bt)
-            kpe_all = _paged_gather_deq(cache["kpep"], cache["kpes"], bt)
+            if not use_kernel:
+                ckv_all = _paged_gather_deq(cache["ckvp"], cache["ckvs"], bt)
+                kpe_all = _paged_gather_deq(cache["kpep"], cache["kpes"], bt)
         else:
             cache = {
                 "ckvp": _paged_write(cache["ckvp"], ckv, bt, positions),
                 "kpep": _paged_write(cache["kpep"], kpe, bt, positions),
             }
-            ckv_all = _paged_gather(cache["ckvp"], bt)
-            kpe_all = _paged_gather(cache["kpep"], bt)
-        kpos = _paged_kpos(positions, ckv_all.shape[1])
+            if not use_kernel:
+                ckv_all = _paged_gather(cache["ckvp"], bt)
+                kpe_all = _paged_gather(cache["kpep"], bt)
+        if use_kernel:
+            ckv_all = kpe_all = kpos = None
+        else:
+            kpos = _paged_kpos(positions, ckv_all.shape[1])
     elif cache is not None:
         cache = _write_cache(cache, {"ckv": ckv, "kpe": kpe}, positions[:, 0], ring=False)
         ckv_all, kpe_all, kpos = cache["ckv"], cache["kpe"], cache["kpos"]
@@ -505,24 +515,39 @@ def _apply_mla(
         # Numerically identical to the materialized path (incl. the activation
         # quantizer, applied to the latent exactly as lin(wkv_b, .) would).
         w_full = _mla_up_matrix(wkv_b, a, q)  # (kv_lora, H, nope+vd)
-        if q.mode != "none" and "aq" in wkv_b:
-            from repro.core.quantizers import apply_act_quant
-
-            ckv_all = apply_act_quant(
-                {"log2_scale": wkv_b["aq"]["log2_scale"]}, ckv_all, q.act_bits, signed=True
-            )
+        has_aq = q.mode != "none" and "aq" in wkv_b
         w_k, w_v = w_full[..., :nope], w_full[..., nope:]
         q_lat = jnp.einsum("bthn,lhn->bthl", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
         scale = (nope + rope) ** -0.5
-        s = jnp.einsum("bthl,bsl->bths", q_lat, ckv_all.astype(jnp.float32))
-        s += jnp.einsum("bthr,bsr->bths", q_pe.astype(jnp.float32), kpe_all.astype(jnp.float32))
-        s *= scale
-        qp = positions[:, :, None]
-        kp = kpos[:, None, :]
-        mask = (kp >= 0) & (kp <= qp)
-        s = jnp.where(mask[:, :, None, :], s, _NEG)
-        p = jax.nn.softmax(s, axis=-1)
-        o_lat = jnp.einsum("bths,bsl->bthl", p, ckv_all.astype(jnp.float32))
+        if use_kernel:
+            from repro.kernels import ops
+
+            aq_scale = None
+            if has_aq:
+                aq_scale = jnp.exp2(wkv_b["aq"]["log2_scale"].astype(jnp.float32))
+            o_lat = ops.paged_mla_attention(
+                q_lat[:, 0], q_pe[:, 0].astype(jnp.float32),
+                cache["ckvp"], cache["kpep"], bt, positions[:, 0] + 1,
+                ckvs=cache.get("ckvs"), kpes=cache.get("kpes"), scale=scale,
+                aq_scale=aq_scale,
+                act_bits=q.act_bits if aq_scale is not None else None,
+            )[:, None]
+        else:
+            if has_aq:
+                from repro.core.quantizers import apply_act_quant
+
+                ckv_all = apply_act_quant(
+                    {"log2_scale": wkv_b["aq"]["log2_scale"]}, ckv_all, q.act_bits, signed=True
+                )
+            s = jnp.einsum("bthl,bsl->bths", q_lat, ckv_all.astype(jnp.float32))
+            s += jnp.einsum("bthr,bsr->bths", q_pe.astype(jnp.float32), kpe_all.astype(jnp.float32))
+            s *= scale
+            qp = positions[:, :, None]
+            kp = kpos[:, None, :]
+            mask = (kp >= 0) & (kp <= qp)
+            s = jnp.where(mask[:, :, None, :], s, _NEG)
+            p = jax.nn.softmax(s, axis=-1)
+            o_lat = jnp.einsum("bths,bsl->bthl", p, ckv_all.astype(jnp.float32))
         out = jnp.einsum("bthl,lhv->bthv", o_lat, w_v.astype(jnp.float32))
         out = out.astype(compute_dtype).reshape(B, T, H * vd)
         return lin(params["wo"], x=out), cache

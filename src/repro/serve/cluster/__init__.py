@@ -1,0 +1,13 @@
+from repro.serve.cluster.replica import (  # noqa: F401
+    InProcessReplica,
+    Replica,
+    ReplicaConfig,
+    SubprocessReplica,
+    build_engine,
+)
+from repro.serve.cluster.router import ClusterRequest, Router  # noqa: F401
+from repro.serve.cluster.disagg import (  # noqa: F401
+    handoff_local,
+    make_cluster_configs,
+    parse_disagg,
+)

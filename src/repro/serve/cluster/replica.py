@@ -1,0 +1,428 @@
+"""Cluster replica: one serving engine behind a mailbox.
+
+A :class:`Replica` wraps one :class:`~repro.serve.engine.PagedServeEngine`
+(any flag combination — ``--int-forward``, ``--kv-int8``, ``--decode-steps``,
+``--prefix-share``, speculative) and speaks a small message protocol with the
+router.  The same replica code runs two transports:
+
+* **in-process** (:class:`InProcessReplica`): commands/events move through a
+  pair of deques and the router drives ``pump()`` directly — fully
+  deterministic, the substrate for tests and the serve_bench cluster cohort
+  (every replica's engine keeps its own wall-clock ``stats``, so aggregate
+  capacity is measured per replica even though one host interleaves them);
+* **subprocess** (:class:`SubprocessReplica`): the replica owns a real
+  process (``spawn`` context — forking after jax initializes is unsafe) and
+  the same messages cross a ``multiprocessing.Pipe``.  The child rebuilds its
+  engine from the picklable :class:`ReplicaConfig` (params re-initialized
+  deterministically from the seed, so every replica — and the router-side
+  parity reference — serves identical weights).
+
+Protocol (plain dicts, picklable; numpy arrays allowed in handoff payloads):
+
+    router -> replica
+      {"op": "submit",  "rid", "prompt", "max_new", "eos_id"}   full lifecycle
+      {"op": "prefill", "rid", "prompt", "max_new", "eos_id"}   prefill role:
+                        run the prompt, export KV, reply with a handoff event
+      {"op": "adopt",   "rid", "prompt", "max_new", "eos_id", "payload"}
+                        decode role: import migrated KV, decode from it
+      {"op": "reset_stats"} | {"op": "stats"} | {"op": "shutdown"}
+
+    replica -> router
+      {"type": "hello", "name", "role", "num_blocks", "block_size", "batch"}
+      {"type": "heartbeat", ...}      queue depth, free blocks, tok/s EWMAs, p99
+      {"type": "progress", "rid", "tokens", "done"}   full generated-so-far list
+                        (the router appends only the unseen suffix — the
+                        at-most-once emission guarantee lives router-side)
+      {"type": "handoff", "rid", "payload"}           exported KV + first token
+      {"type": "reject", "rid", "reason"}             request can never fit here
+      {"type": "stats", ...}                          throughput + migration counters
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "ReplicaConfig", "Replica", "InProcessReplica", "SubprocessReplica",
+    "build_engine",
+]
+
+# EWMA smoothing for the per-replica tok/s health signals: ~3-step memory,
+# fast enough to follow a load shift, slow enough to ride out one odd step
+_EWMA_ALPHA = 0.3
+
+
+@dataclasses.dataclass
+class ReplicaConfig:
+    """Everything needed to rebuild a replica's engine in another process.
+    Only names/scalars — params are re-initialized from ``seed`` (and
+    optionally deployed to int8), never shipped."""
+
+    name: str = "r0"
+    arch: str = "yi-6b"
+    reduced: bool = True
+    role: str = "both"  # both | prefill | decode
+    seed: int = 0
+    batch: int = 2
+    max_seq: int = 128
+    block_size: int = 16
+    prefill_chunk: int = 32
+    num_blocks: Optional[int] = None
+    kv_quant: bool = False
+    kv_bits: int = 8
+    prefix_share: bool = False
+    decode_steps: int = 1
+    eos_id: Optional[int] = None
+    deploy_int8: bool = False
+    int_forward: bool = False
+    spec_k: int = 0
+
+    def __post_init__(self):
+        if self.role not in ("both", "prefill", "decode"):
+            raise ValueError(f"unknown replica role {self.role!r}")
+
+
+def build_engine(cfg: ReplicaConfig, params=None):
+    """Construct the engine a :class:`ReplicaConfig` describes.  ``params``
+    (raw, un-deployed) may be passed to share one host copy across
+    in-process replicas; subprocesses re-derive them from the seed."""
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.models.lm import Runtime, init_lm
+    from repro.nn.module import unbox
+    from repro.serve.engine import PagedServeEngine, deploy_params
+
+    arch = get_arch(cfg.arch)
+    if cfg.reduced:
+        arch = reduced(arch)
+    if params is None:
+        params = unbox(init_lm(jax.random.PRNGKey(cfg.seed), arch))
+    if cfg.deploy_int8 or cfg.int_forward:
+        params = deploy_params(params, arch.quant)
+    kw = dict(
+        batch=cfg.batch, max_seq=cfg.max_seq, block_size=cfg.block_size,
+        prefill_chunk=cfg.prefill_chunk, num_blocks=cfg.num_blocks,
+        kv_quant=cfg.kv_quant, kv_bits=cfg.kv_bits,
+        prefix_share=cfg.prefix_share, eos_id=cfg.eos_id,
+        decode_steps=cfg.decode_steps, seed=cfg.seed,
+        rt=Runtime(int_forward=cfg.int_forward),
+    )
+    if cfg.spec_k > 0:
+        from repro.serve.spec import SpecServeEngine
+
+        return SpecServeEngine(arch, params, spec_k=cfg.spec_k, **kw)
+    return PagedServeEngine(arch, params, **kw)
+
+
+class LocalMailbox:
+    """In-process transport: two deques, zero copies, deterministic order."""
+
+    def __init__(self):
+        self._to_replica: deque = deque()
+        self._to_router: deque = deque()
+
+    # replica side
+    def recv_commands(self) -> list:
+        out = list(self._to_replica)
+        self._to_replica.clear()
+        return out
+
+    def send_event(self, ev: dict) -> None:
+        self._to_router.append(ev)
+
+    # router side
+    def send_command(self, cmd: dict) -> None:
+        self._to_replica.append(cmd)
+
+    def recv_events(self) -> list:
+        out = list(self._to_router)
+        self._to_router.clear()
+        return out
+
+
+class PipeMailbox:
+    """Replica side of a ``multiprocessing.Pipe`` connection."""
+
+    def __init__(self, conn):
+        self.conn = conn
+
+    def recv_commands(self) -> list:
+        out = []
+        try:
+            while self.conn.poll():
+                out.append(self.conn.recv())
+        except (EOFError, OSError):
+            out.append({"op": "shutdown"})  # router went away
+        return out
+
+    def send_event(self, ev: dict) -> None:
+        try:
+            self.conn.send(ev)
+        except (BrokenPipeError, OSError):
+            pass
+
+
+class Replica:
+    """One engine + protocol state.  ``pump()`` is the whole replica loop:
+    drain commands, run pending prefill handoffs, advance the engine one
+    step, report progress, heartbeat."""
+
+    def __init__(self, cfg: ReplicaConfig, box, engine=None):
+        self.cfg = cfg
+        self.box = box
+        self.engine = engine if engine is not None else build_engine(cfg)
+        self._track: dict = {}  # rid -> (Request, tokens already reported)
+        self._pending_prefills: deque = deque()
+        self._latencies: list = []
+        self._prev = dict(self.engine.stats)
+        self._ewma = {"prefill_tok_s": 0.0, "decode_tok_s": 0.0}
+        self.served = 0
+        self.shutdown = False
+        self.dead = False  # fault injection: a dead replica goes silent
+        cache = self.engine.cache
+        self.box.send_event({
+            "type": "hello", "name": cfg.name, "role": cfg.role,
+            "num_blocks": cache.num_blocks, "block_size": cache.block_size,
+            "batch": self.engine.batch,
+        })
+
+    # -- command handling ---------------------------------------------------
+
+    def _mk_request(self, cmd):
+        from repro.serve.engine import Request
+
+        return Request(
+            uid=int(cmd["rid"]),
+            prompt=np.asarray(cmd["prompt"], np.int32),
+            max_new=int(cmd["max_new"]),
+            eos_id=cmd.get("eos_id"),
+        )
+
+    def _handle(self, cmd: dict) -> None:
+        op = cmd["op"]
+        if op == "submit":
+            if self.cfg.role == "prefill":
+                raise RuntimeError(f"{self.cfg.name}: prefill-role replica got a full submit")
+            req = self._mk_request(cmd)
+            try:
+                self.engine.submit(req)
+            except ValueError as e:
+                self.box.send_event({"type": "reject", "rid": req.uid, "reason": str(e)})
+                return
+            self._track[req.uid] = (req, 0)
+        elif op == "prefill":
+            self._pending_prefills.append(self._mk_request(cmd))
+        elif op == "adopt":
+            if self.cfg.role == "prefill":
+                raise RuntimeError(f"{self.cfg.name}: prefill-role replica got an adopt")
+            req = self._mk_request(cmd)
+            try:
+                self.engine.submit_handoff(req, cmd["payload"])
+            except ValueError as e:
+                self.box.send_event({"type": "reject", "rid": req.uid, "reason": str(e)})
+                return
+            self._track[req.uid] = (req, 0)
+        elif op == "reset_stats":
+            self.engine.reset_stats()
+            self._prev = dict(self.engine.stats)
+            self._latencies.clear()
+            self._ewma = {"prefill_tok_s": 0.0, "decode_tok_s": 0.0}
+            self.served = 0
+        elif op == "stats":
+            cache = self.engine.cache
+            self.box.send_event({
+                "type": "stats", "name": self.cfg.name, "served": self.served,
+                "throughput": self.engine.throughput(),
+                "migrated_blocks_in": cache.migrated_blocks_in,
+                "migrated_blocks_out": cache.migrated_blocks_out,
+                "migration_bytes_in": cache.migration_bytes_in,
+                "migration_bytes_out": cache.migration_bytes_out,
+                "prefix_hits": cache.prefix_hits,
+            })
+        elif op == "shutdown":
+            self.shutdown = True
+        else:
+            raise ValueError(f"unknown op {op!r}")
+
+    # -- loop body ----------------------------------------------------------
+
+    def pump(self) -> bool:
+        """One replica turn; returns True if engine work happened (the
+        subprocess loop sleeps briefly on False)."""
+        if self.dead or self.shutdown:
+            return False
+        for cmd in self.box.recv_commands():
+            self._handle(cmd)
+            if self.dead or self.shutdown:
+                return False
+        worked = False
+        # prefill-handoff service: one prompt per pump keeps the replica
+        # responsive to kills/heartbeats between prompts
+        if self._pending_prefills:
+            req = self._pending_prefills[0]
+            if self.engine.can_prefill_handoff(req):
+                self._pending_prefills.popleft()
+                payload = self.engine.prefill_handoff(req)
+                self.box.send_event(
+                    {"type": "handoff", "rid": req.uid, "payload": payload}
+                )
+                self.served += 1
+                worked = True
+        if not self.engine.sched.idle():
+            self.engine.step()
+            worked = True
+        self._report_progress()
+        self._update_ewma()
+        self.box.send_event(self._heartbeat())
+        return worked
+
+    def _report_progress(self) -> None:
+        done = []
+        for rid, (req, sent) in self._track.items():
+            if len(req.generated) > sent or (req.done and sent == 0):
+                self.box.send_event({
+                    "type": "progress", "rid": rid,
+                    "tokens": list(req.generated), "done": req.done,
+                })
+                self._track[rid] = (req, len(req.generated))
+            if req.done:
+                done.append(rid)
+                self._latencies.append(req.latency)
+                self.served += 1
+        for rid in done:
+            del self._track[rid]
+
+    def _update_ewma(self) -> None:
+        cur = self.engine.stats
+        for phase in ("prefill", "decode"):
+            dt = cur[f"{phase}_s"] - self._prev[f"{phase}_s"]
+            dtok = cur[f"{phase}_tokens"] - self._prev[f"{phase}_tokens"]
+            if dt > 0 and dtok > 0:
+                inst = dtok / dt
+                old = self._ewma[f"{phase}_tok_s"]
+                self._ewma[f"{phase}_tok_s"] = (
+                    inst if old == 0.0 else (1 - _EWMA_ALPHA) * old + _EWMA_ALPHA * inst
+                )
+        self._prev = dict(cur)
+
+    def _heartbeat(self) -> dict:
+        cache = self.engine.cache
+        lats = self._latencies
+        return {
+            "type": "heartbeat", "name": self.cfg.name,
+            "queued": len(self.engine.sched.queue) + len(self._pending_prefills),
+            "live": len(self.engine.sched.live),
+            "free_blocks": cache.free_blocks,
+            "reclaimable_blocks": cache.reclaimable_blocks(),
+            "ewma_prefill_tok_s": self._ewma["prefill_tok_s"],
+            "ewma_decode_tok_s": self._ewma["decode_tok_s"],
+            "p99_s": float(np.percentile(lats, 99)) if lats else 0.0,
+            "p50_s": float(np.percentile(lats, 50)) if lats else 0.0,
+            "served": self.served,
+        }
+
+
+def _replica_main(cfg: ReplicaConfig, conn) -> None:
+    box = PipeMailbox(conn)
+    rep = Replica(cfg, box)
+    while not rep.shutdown:
+        if not rep.pump() and not rep.dead:
+            # idle: block briefly on the pipe instead of spinning
+            conn.poll(0.002)
+
+
+class InProcessReplica:
+    """Deterministic handle: the router's ``step()`` drives ``pump()``."""
+
+    transport = "inproc"
+
+    def __init__(self, cfg: ReplicaConfig, engine=None, params=None):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.box = LocalMailbox()
+        if engine is None and params is not None:
+            engine = build_engine(cfg, params=params)
+        self.replica = Replica(cfg, self.box, engine=engine)
+
+    def send(self, cmd: dict) -> None:
+        self.box.send_command(cmd)
+
+    def poll(self) -> list:
+        return self.box.recv_events()
+
+    def pump(self) -> bool:
+        if self.replica.dead:
+            return False
+        return self.replica.pump()
+
+    def alive(self) -> bool:
+        return not self.replica.dead
+
+    def kill(self) -> None:
+        """Fault injection: the replica goes silent mid-flight (in-flight
+        requests stranded until the router requeues them)."""
+        self.replica.dead = True
+
+    def close(self) -> None:
+        self.replica.shutdown = True
+
+
+class SubprocessReplica:
+    """Real-process handle over a spawn-context pipe."""
+
+    transport = "subproc"
+
+    def __init__(self, cfg: ReplicaConfig):
+        self.cfg = cfg
+        self.name = cfg.name
+        ctx = multiprocessing.get_context("spawn")
+        self.conn, child = ctx.Pipe()
+        self.proc = ctx.Process(target=_replica_main, args=(cfg, child), daemon=True)
+        self.proc.start()
+        child.close()
+
+    def send(self, cmd: dict) -> None:
+        try:
+            self.conn.send(cmd)
+        except (BrokenPipeError, OSError):
+            pass
+
+    def poll(self) -> list:
+        out = []
+        try:
+            while self.conn.poll():
+                out.append(self.conn.recv())
+        except (EOFError, OSError):
+            pass
+        return out
+
+    def pump(self) -> bool:
+        return False  # the child process pumps itself
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def kill(self) -> None:
+        self.proc.terminate()
+
+    def close(self) -> None:
+        if self.proc.is_alive():
+            self.send({"op": "shutdown"})
+            self.proc.join(timeout=30)
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout=10)
+
+    def __del__(self):
+        try:
+            if self.proc.is_alive():
+                self.proc.terminate()
+        except Exception:
+            pass

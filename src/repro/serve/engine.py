@@ -453,6 +453,9 @@ class PagedServeEngine(_StatsMixin):
         )
         self._key = jax.random.PRNGKey(seed)
         self.stats = _fresh_stats()
+        # disaggregation: uid -> exported-KV payload awaiting adoption
+        # (submit_handoff queues the request; _admit consumes the payload)
+        self._handoffs: dict = {}
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(2,))
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
         self._megadecode = jax.jit(self._megastep_fn, donate_argnums=(2,))
@@ -569,6 +572,123 @@ class PagedServeEngine(_StatsMixin):
             raise ValueError("request exceeds the paged cache's total block budget")
         self.sched.submit(req)
 
+    # -- prefill/decode disaggregation --------------------------------------
+
+    def can_prefill_handoff(self, req: Request) -> bool:
+        """Capacity probe for a prefill-role replica: a borrowed slot and
+        enough blocks for the *prompt only* (decode headroom is the decode
+        replica's budget)."""
+        return (
+            any(r is None for r in self.sched.slots)
+            and self.cache.blocks_needed(len(req.prompt))
+            <= self.cache.free_blocks + self.cache.reclaimable_blocks()
+        )
+
+    def prefill_handoff(self, req: Request) -> dict:
+        """Prefill-role entry point of the disaggregated cluster: run the
+        prompt through the isolated chunked prefill on a borrowed free slot,
+        export the written KV blocks at wire width, release the slot, and
+        return the migration payload — the request never enters this
+        engine's decode loop.  The payload carries the prefill's sampled
+        first token (and its greedy margin), so the decode replica adopts
+        at exactly the state a local admission would have produced:
+
+            {"kv": <export_blocks payload>, "first_token": int, "margin": float}
+        """
+        req.prompt = _normalize_prompt(req.prompt, self.bos_id)
+        if req.eos_id is None:
+            req.eos_id = self.eos_id
+        if len(req.prompt) > self.max_seq:
+            raise ValueError(f"prompt of {len(req.prompt)} tokens > max_seq={self.max_seq}")
+        free = [i for i, r in enumerate(self.sched.slots) if r is None]
+        if not free:
+            raise RuntimeError("prefill_handoff needs a free slot")
+        slot = free[0]
+        self.cache.reset_slot(slot)
+        self.cache.allocate(slot, len(req.prompt))
+        self.sched.slots[slot] = req  # prefill_plan reads the slot binding
+        try:
+            t0 = time.perf_counter()
+            tok = marg = None
+            for chunk, start in self.sched.prefill_plan(slot):
+                self.cache.ensure_writable(slot, start, start + len(chunk))
+                sub = self.cache.slice_slot(slot)
+                tok, marg, new_pools = self._prefill(
+                    self.params, jnp.asarray(chunk[None, :]), sub,
+                    self.cache.bt_row(slot), jnp.int32(start), self._next_key(),
+                )
+                self.cache.merge_slot(slot, new_pools)
+            self.cache.lens[slot] = len(req.prompt)
+            tok_h, marg_h = jax.device_get((tok, marg))
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            self.stats["prefill_tokens"] += len(req.prompt)
+            payload = {
+                "kv": self.cache.export_blocks(slot),
+                "first_token": int(tok_h[0]),
+                "margin": float(marg_h[0]),
+            }
+        finally:
+            self.sched.slots[slot] = None
+            req.prefilled = 0  # a requeued copy must be able to re-prefill
+            self.cache.release(slot)
+        return payload
+
+    def submit_handoff(self, req: Request, payload: dict) -> None:
+        """Decode-role entry point: queue a request whose prompt KV arrives
+        as a migrated block payload from a prefill replica.  Admission goes
+        through the normal scheduler/block gate (the full prompt + max_new
+        reservation), but ``_admit`` imports the payload's blocks instead of
+        recomputing the prompt — zero prefill dispatches, decode resumes at
+        ``len(prompt)`` with the handed-off first token already recorded."""
+        req.prompt = _normalize_prompt(req.prompt, self.bos_id)
+        if req.eos_id is None:
+            req.eos_id = self.eos_id
+        kv = payload["kv"]
+        if kv["tokens"] != len(req.prompt):
+            raise ValueError(
+                f"handoff payload covers {kv['tokens']} tokens, "
+                f"prompt has {len(req.prompt)}"
+            )
+        # fail at the queue boundary, not inside a later _admit: geometry
+        # skew means the fleets were launched with mismatched cache configs
+        if kv["block_size"] != self.cache.block_size:
+            raise ValueError(
+                f"handoff block_size {kv['block_size']} != {self.cache.block_size}"
+            )
+        if kv["kv_quant"] != self.cache.kv_quant or (
+            kv["kv_quant"] and kv["kv_bits"] != self.cache.kv_bits
+        ):
+            raise ValueError(
+                f"handoff kv_quant/kv_bits ({kv['kv_quant']}, {kv['kv_bits']}) do "
+                f"not match this cache ({self.cache.kv_quant}, {self.cache.kv_bits})"
+            )
+        total = self._slot_tokens(req)
+        if total > self.max_seq:
+            raise ValueError(f"request needs {total} positions > max_seq={self.max_seq}")
+        if self.cache.blocks_needed(total) > self.cache.num_blocks - 1:
+            raise ValueError("request exceeds the paged cache's total block budget")
+        self._handoffs[req.uid] = payload
+        self.sched.submit(req)
+
+    def _admit_handoff(self, slot: int, req: Request, payload: dict) -> None:
+        """Adopt migrated prompt KV into a fresh slot: import the wire
+        blocks, grow the allocation to the full decode reservation, and
+        record the prefill replica's first token.  No prompt forward runs
+        here — ``prefill_tokens`` counts zero recomputed tokens, mirroring
+        the prefix-adoption accounting."""
+        self.cache.reset_slot(slot)
+        t0 = time.perf_counter()
+        self.cache.import_blocks(slot, payload["kv"])
+        self.cache.allocate(slot, self._slot_tokens(req))
+        req.prefilled = len(req.prompt)
+        req.margins.append(float(payload["margin"]))
+        if self.prefix_share:
+            self.cache.register_prefix(slot, req.prompt)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self._on_admitted(slot, req)
+        if self.sched.record_token(slot, int(payload["first_token"])):
+            self._release_slot(slot)
+
     def _admission_gate(self):
         """Round-local block budget: each admitted request reserves its
         worst-case blocks against the same free pool, so a round can never
@@ -612,6 +732,9 @@ class PagedServeEngine(_StatsMixin):
         buy a copy-on-write fault; when ``block_size`` divides
         ``prefill_chunk`` the trimmed run is all-full blocks the adopter
         never writes, and admission costs zero CoW dispatches."""
+        payload = self._handoffs.pop(req.uid, None)
+        if payload is not None:
+            return self._admit_handoff(slot, req, payload)
         self.cache.reset_slot(slot)
         adopted = 0
         if self.prefix_share:

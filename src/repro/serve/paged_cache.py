@@ -296,6 +296,14 @@ class PagedKVCache:
         self._bt_dirty: set[int] = set()
         self.bt_full_uploads = 0
         self.bt_row_patches = 0
+        # KV-block migration counters (prefill/decode disaggregation):
+        # blocks and wire bytes exported to / imported from a peer cache.
+        # Wire width is the *storage* width — int8 codes ship as int8,
+        # packed int4 ships as uint8 nibble pairs, scales as fp32.
+        self.migrated_blocks_out = 0
+        self.migrated_blocks_in = 0
+        self.migration_bytes_out = 0
+        self.migration_bytes_in = 0
         # all seq-indexed state lives in pools (no ring / recurrent per-slot
         # leaves) — the precondition for prefix sharing and spec rollback
         names = {
@@ -758,3 +766,89 @@ class PagedKVCache:
             "rc": jnp.asarray(self.refcounts),
             "wm": jnp.asarray(self.watermarks),
         }
+
+    # -- KV-block migration (prefill/decode disaggregation) ------------------
+
+    def _migration_guard(self) -> None:
+        if not self.fully_paged:
+            raise ValueError(
+                "KV-block migration needs a fully paged cache (no ring / "
+                "recurrent per-slot leaves); this arch keeps per-slot state "
+                "outside the block pools"
+            )
+
+    def export_blocks(self, slot: int) -> dict:
+        """Serialize ``slot``'s written KV into a host-side wire payload: one
+        gathered array per pool leaf (codes at storage width — int8 codes as
+        int8, packed int4 as uint8 nibble pairs, scale pools as fp32) for
+        the blocks covering ``lens[slot]`` tokens, plus the geometry needed
+        to validate adoption.  The slot keeps its blocks — export is a read.
+        This is the prefill→decode transfer unit of the disaggregated
+        cluster: a decode replica feeds the payload to
+        :meth:`import_blocks` and resumes at position ``tokens`` without
+        recomputing the prompt."""
+        self._migration_guard()
+        n_tok = int(self.lens[slot])
+        if n_tok <= 0:
+            raise ValueError(f"slot {slot} has no written tokens to export")
+        need = self.blocks_needed(n_tok)
+        ids = jnp.asarray(self._owned[slot][:need], jnp.int32)
+        leaves = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.pools)[0]:
+            if _leaf_name(path) in POOL_KEYS:
+                leaves[jax.tree_util.keystr(path)] = np.asarray(leaf[:, ids])
+        nbytes = sum(a.nbytes for a in leaves.values())
+        self.migrated_blocks_out += need
+        self.migration_bytes_out += nbytes
+        return {
+            "tokens": n_tok,
+            "n_blocks": need,
+            "block_size": self.block_size,
+            "kv_quant": self.kv_quant,
+            "kv_bits": self.kv_bits,
+            "leaves": leaves,
+        }
+
+    def import_blocks(self, slot: int, payload: dict) -> None:
+        """Adopt an exported payload into an empty ``slot``: allocate fresh
+        blocks for its token span, scatter every wire leaf into the local
+        pools (one batched set per leaf, one pool-pytree rebuild total),
+        and set ``lens``/``watermark`` so decode resumes at position
+        ``tokens``.  Geometry (block size, KV quantization, per-leaf dtype
+        and shape) must match the exporting cache — migration never
+        re-quantizes, so int8/int4 codes land bit-identical."""
+        self._migration_guard()
+        for field in ("block_size", "kv_quant", "kv_bits"):
+            if payload[field] != getattr(self, field):
+                raise ValueError(
+                    f"migration geometry mismatch: {field}="
+                    f"{payload[field]!r} vs local {getattr(self, field)!r}"
+                )
+        assert not self._owned[slot], "import_blocks needs an empty slot"
+        n_tok = int(payload["tokens"])
+        self.allocate(slot, n_tok)
+        ids = self._owned[slot]
+        assert len(ids) == payload["n_blocks"], "block count / geometry skew"
+        idx = jnp.asarray(ids, jnp.int32)
+        leaves = dict(payload["leaves"])
+
+        def one(path, leaf):
+            if _leaf_name(path) not in POOL_KEYS:
+                return leaf
+            arr = leaves.pop(jax.tree_util.keystr(path))
+            want = (leaf.shape[0], len(ids)) + leaf.shape[2:]
+            if arr.dtype != leaf.dtype or arr.shape != want:
+                raise ValueError(
+                    f"migration leaf mismatch at {jax.tree_util.keystr(path)}: "
+                    f"got {arr.dtype}{arr.shape}, want {leaf.dtype}{want}"
+                )
+            return leaf.at[:, idx].set(jnp.asarray(arr))
+
+        self.pools = jax.tree_util.tree_map_with_path(one, self.pools)
+        if leaves:
+            raise ValueError(f"payload has leaves unknown here: {sorted(leaves)}")
+        self.pool_rebuilds += 1
+        self.lens[slot] = n_tok
+        self.watermarks[slot] = n_tok
+        self.migrated_blocks_in += len(ids)
+        self.migration_bytes_in += sum(a.nbytes for a in payload["leaves"].values())

@@ -1,9 +1,23 @@
 """Shared pytest config: register the ``slow`` marker and the ``--runslow``
 flag.  ``slow`` tests spawn 8-fake-device subprocesses (tests must not set
 ``XLA_FLAGS`` in-process) and are skipped by default so the tier-1 command
-stays fast; run them with ``pytest --runslow``."""
+stays fast; run them with ``pytest --runslow``.
 
+The module-scoped cache purge below keeps the full suite viable in one
+process: each module compiles its own engines/kernels (cross-module jit
+reuse is ~zero — wrappers are per-instance), and with 300+ tests the
+accumulated live XLA CPU executables eventually segfault the compiler on a
+later, otherwise-innocent compile.  Dropping the caches at module teardown
+bounds the live-executable count at no recompile cost."""
+
+import jax
 import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_live_executables():
+    yield
+    jax.clear_caches()
 
 
 def pytest_addoption(parser):

@@ -1,0 +1,409 @@
+"""Disaggregated serving cluster: KV-block migration wire format, router
+policies/backpressure/stickiness, failover requeue with at-most-once token
+emission, prefill/decode disaggregation parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models.lm import init_lm
+from repro.nn.module import unbox
+from repro.serve.cluster import (
+    InProcessReplica,
+    ReplicaConfig,
+    Router,
+    SubprocessReplica,
+    build_engine,
+    handoff_local,
+    make_cluster_configs,
+    parse_disagg,
+)
+from repro.serve.cluster.router import _ReplicaState
+from repro.serve.engine import PagedServeEngine, Request
+
+KEY = jax.random.PRNGKey(0)
+ARCH = reduced(get_arch("yi-6b"))
+PARAMS = unbox(init_lm(KEY, ARCH))
+
+
+def _prompts(n, rng=None, lo=4, hi=10):
+    rng = rng or np.random.default_rng(0)
+    return [rng.integers(0, ARCH.vocab, (int(rng.integers(lo, hi)),)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _engine(**kw):
+    base = dict(batch=2, max_seq=64, block_size=4, prefill_chunk=4)
+    base.update(kw)
+    return PagedServeEngine(ARCH, PARAMS, **base)
+
+
+def _cfg(**kw):
+    base = dict(arch="yi-6b", reduced=True, batch=2, max_seq=64, block_size=4,
+                prefill_chunk=4)
+    base.update(kw)
+    return ReplicaConfig(**base)
+
+
+def _fleet(n=2, **kw):
+    cfgs = make_cluster_configs(_cfg(**kw), replicas=n)
+    return [InProcessReplica(c, params=PARAMS) for c in cfgs]
+
+
+# ---------------------------------------------------------------------------
+# KV-block migration wire format
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_quant,kv_bits,code_dtype", [
+    (False, 8, None), (True, 8, np.int8), (True, 4, np.uint8),
+])
+def test_export_blocks_wire_dtypes(kv_quant, kv_bits, code_dtype):
+    """Migration ships blocks at storage width: fp pools at cache dtype,
+    int8 codes as int8, packed int4 as uint8 nibble pairs, scales fp32 —
+    never a dequantized fp copy."""
+    eng = _engine(kv_quant=kv_quant, kv_bits=kv_bits)
+    req = Request(uid=0, prompt=np.arange(1, 8, dtype=np.int32), max_new=4)
+    payload = eng.prefill_handoff(req)
+    kv = payload["kv"]
+    assert kv["tokens"] == 7
+    assert kv["n_blocks"] == -(-7 // 4) == 2
+    assert kv["kv_quant"] == kv_quant and kv["kv_bits"] == kv_bits
+    code_keys = [k for k in kv["leaves"] if "kp'" in k or "vp'" in k]
+    scale_keys = [k for k in kv["leaves"] if "kps'" in k or "vps'" in k]
+    assert code_keys, "no pool leaves exported"
+    for k in code_keys:
+        arr = kv["leaves"][k]
+        assert isinstance(arr, np.ndarray) and arr.shape[1] == kv["n_blocks"]
+        if code_dtype is not None:
+            assert arr.dtype == code_dtype, (k, arr.dtype)
+    if kv_quant:
+        assert scale_keys, "quantized pools must ship their scale pools"
+        for k in scale_keys:
+            assert kv["leaves"][k].dtype == np.float32
+    assert eng.cache.migrated_blocks_out > 0
+    assert eng.cache.migration_bytes_out > 0
+
+
+def test_import_blocks_validates_geometry():
+    eng = _engine()
+    req = Request(uid=0, prompt=np.arange(1, 8, dtype=np.int32), max_new=4)
+    payload = eng.prefill_handoff(req)
+    other = _engine(block_size=8)
+    req2 = Request(uid=0, prompt=np.arange(1, 8, dtype=np.int32), max_new=4)
+    with pytest.raises(ValueError, match="block_size"):
+        other.submit_handoff(req2, payload)
+    q8 = _engine(kv_quant=True)
+    with pytest.raises(ValueError, match="kv_quant"):
+        q8.submit_handoff(req2, payload)
+
+
+@pytest.mark.parametrize("kv_quant,kv_bits", [(False, 8), (True, 8), (True, 4)])
+def test_handoff_local_token_identical(kv_quant, kv_bits):
+    """Disaggregated prefill->migrate->decode must be token-identical to the
+    same engine config running the request locally (greedy): migration moves
+    the exact stored codes, so there is no re-quantization error."""
+    prompts = _prompts(3, np.random.default_rng(1))
+    kw = dict(kv_quant=kv_quant, kv_bits=kv_bits)
+    single = _engine(**kw)
+    want = single.generate([p.tolist() for p in prompts], max_new=5)
+    pre, dec = _engine(**kw), _engine(**kw)
+    reqs = [Request(uid=i, prompt=p, max_new=5) for i, p in enumerate(prompts)]
+    for r in reqs:
+        handoff_local(pre, dec, r)
+    while not dec.sched.idle():
+        dec.step()
+    assert [r.generated for r in reqs] == want
+    assert dec.cache.migrated_blocks_in == pre.cache.migrated_blocks_out > 0
+
+
+# ---------------------------------------------------------------------------
+# routed fleet: parity, balance, stickiness, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_two_replica_routed_parity_and_balance():
+    """A 2-replica fleet returns exactly the single-engine greedy stream for
+    every request, and least-loaded routing actually uses both replicas."""
+    prompts = _prompts(6, np.random.default_rng(2))
+    router = Router(_fleet(2), policy="least-loaded")
+    rids = [router.submit(p, max_new=4) for p in prompts]
+    res = router.drain()
+    single = _engine()
+    want = single.generate([p.tolist() for p in prompts], max_new=4)
+    assert [res[r] for r in rids] == want
+    dispatched = {n: st.dispatched for n, st in router.states.items()}
+    assert all(v > 0 for v in dispatched.values()), dispatched
+    router.close()
+
+
+def test_sticky_prefix_routing():
+    """Requests sharing a first prompt block ride the same replica (radix
+    prompt-cache warmth); distinct prefixes spread out."""
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, ARCH.vocab, (4,)).astype(np.int32)  # one block
+    group = [np.concatenate([shared, rng.integers(0, ARCH.vocab, (3,)).astype(np.int32)])
+             for _ in range(3)]
+    router = Router(_fleet(2, prefix_share=True), policy="least-loaded", sticky=True)
+    rids = [router.submit(p, max_new=3) for p in group]
+    router.drain()
+    homes = {router.reqs[r].rid: None for r in rids}
+    # dispatch bookkeeping: every rid of the group must have been served by
+    # the same replica (stickiness pinned them)
+    served_by = set()
+    for name, st in router.states.items():
+        for r in rids:
+            if r in [k for k in st.inflight]:
+                served_by.add(name)
+    # inflight is empty after completion; use the sticky table instead
+    key = tuple(int(t) for t in shared[:4])
+    assert router._sticky.get(key) in router.states
+    counts = {n: st.dispatched for n, st in router.states.items()}
+    assert max(counts.values()) == len(group), counts  # all three on one replica
+    router.close()
+
+
+def test_backpressure_never_overcommits():
+    """The router's commitment ledger must never exceed a replica's pool
+    capacity at any step, even with a wave far larger than the fleet."""
+    handles = _fleet(2, num_blocks=12, max_seq=32)
+    router = Router(handles, policy="least-loaded")
+    prompts = _prompts(8, np.random.default_rng(4), lo=4, hi=8)
+    for p in prompts:
+        router.submit(p, max_new=4)
+
+    peak = {h.name: 0 for h in handles}
+
+    def watch(r, step):
+        for name, st in r.states.items():
+            assert st.committed <= st.capacity, (name, st.committed, st.capacity)
+            peak[name] = max(peak[name], st.committed)
+
+    res = router.drain(on_step=watch)
+    assert all(len(v) == 4 for v in res.values())
+    assert max(peak.values()) > 0
+    router.close()
+
+
+def test_oversized_request_fails_loudly():
+    router = Router(_fleet(1, num_blocks=8, max_seq=64))
+    router.submit(np.arange(1, 40, dtype=np.int32), max_new=8)  # > whole pool
+    with pytest.raises(RuntimeError, match="never be served"):
+        router.drain()
+    router.close()
+
+
+def test_weighted_latency_policy_prefers_faster_replica():
+    """Pure policy unit test on synthetic states: with EWMA signals the
+    weighted-latency score ranks the faster-draining replica first; cold
+    replicas (no signal) fall back to least-loaded ordering."""
+
+    class _H:
+        def __init__(self, name):
+            self.name = name
+            self.cfg = type("C", (), {"role": "both"})()
+
+    router = Router.__new__(Router)  # policy math only; no fleet
+    router.policy = "weighted-latency"
+    fast, slow = _ReplicaState(_H("fast")), _ReplicaState(_H("slow"))
+    for st, tok_s in ((fast, 100.0), (slow, 10.0)):
+        st.hello = {"num_blocks": 33, "block_size": 4}
+        st.hb = {"ewma_decode_tok_s": tok_s}
+        st.committed = 10
+    # same committed blocks: the faster replica has the shorter drain time
+    assert router._score(fast) < router._score(slow)
+    # a big backlog on the fast replica can still lose to an idle slow one
+    fast.committed = 30
+    slow.committed = 1
+    assert router._score(slow) < router._score(fast)
+    # cold replicas (ewma 0) order by committed blocks
+    cold_a, cold_b = _ReplicaState(_H("a")), _ReplicaState(_H("b"))
+    for st, c in ((cold_a, 5), (cold_b, 2)):
+        st.hello = {"num_blocks": 33, "block_size": 4}
+        st.committed = c
+    assert router._score(cold_b) < router._score(cold_a)
+
+
+# ---------------------------------------------------------------------------
+# failover: death detection, requeue, at-most-once emission
+# ---------------------------------------------------------------------------
+
+
+def test_kill_mid_wave_requeues_and_streams_exactly_once():
+    """Killing a replica mid-decode must (a) complete every request through
+    requeue, (b) emit each client token at most once — the final streams are
+    exactly the single-engine greedy streams, no duplicated prefix."""
+    prompts = _prompts(6, np.random.default_rng(5))
+    router = Router(_fleet(2), policy="least-loaded", heartbeat_timeout=5.0)
+    rids = [router.submit(p, max_new=5) for p in prompts]
+
+    state = {"killed": False}
+
+    def chaos(r, step):
+        if state["killed"]:
+            return
+        # kill the busier replica once tokens start flowing
+        if sum(len(q.emitted) for q in r.reqs.values()) >= 3:
+            victim = max(r.states.values(), key=lambda st: len(st.inflight))
+            r.kill(victim.name)
+            state["killed"] = True
+
+    res = router.drain(on_step=chaos)
+    assert state["killed"] and router.deaths == 1 and router.requeues >= 1
+    single = _engine()
+    want = single.generate([p.tolist() for p in prompts], max_new=5)
+    assert [res[r] for r in rids] == want  # exact => no dup, no gap
+    router.close()
+
+
+def test_heartbeat_timeout_detects_silent_replica():
+    """A replica that stops producing events (but whose handle still claims
+    alive) is declared dead after heartbeat_timeout on the injected clock,
+    and its in-flight work is requeued in order at the queue front."""
+
+    class _SilentHandle:
+        transport = "inproc"
+
+        def __init__(self, name):
+            self.name = name
+            self.cfg = type("C", (), {"role": "both"})()
+            self.sent = []
+
+        def send(self, cmd):
+            self.sent.append(cmd)
+
+        def poll(self):
+            return []
+
+        def pump(self):
+            return False
+
+        def alive(self):
+            return True  # lies: only the heartbeat timeout can catch it
+
+        def kill(self):
+            pass
+
+        def close(self):
+            pass
+
+    t = {"now": 0.0}
+    h = _SilentHandle("mute")
+    router = Router([h], heartbeat_timeout=2.0, clock=lambda: t["now"])
+    st = router.states["mute"]
+    st.hello = {"num_blocks": 33, "block_size": 4, "batch": 2}
+    st.last_seen = 0.0
+    r1 = router.submit(np.arange(1, 6, dtype=np.int32), max_new=3)
+    r2 = router.submit(np.arange(2, 7, dtype=np.int32), max_new=3)
+    router.step(now=1.0)  # dispatches both to the silent replica
+    assert set(st.inflight) == {r1, r2}
+    router.step(now=1.5)
+    assert st.alive
+    router.step(now=4.0)  # > last_seen + timeout
+    assert not st.alive and router.deaths == 1 and router.requeues == 2
+    assert [c.rid for c in router.queue] == [r1, r2]  # front, original order
+    assert st.committed == 0 and not st.inflight
+
+
+# ---------------------------------------------------------------------------
+# prefill/decode disaggregation through the router
+# ---------------------------------------------------------------------------
+
+
+def test_parse_disagg():
+    assert parse_disagg("1:2") == (1, 2)
+    with pytest.raises(ValueError):
+        parse_disagg("3")
+    with pytest.raises(ValueError):
+        parse_disagg("0:2")
+
+
+def test_disagg_fleet_routed_parity():
+    """1 prefill + 1 decode replica: prompts run on the prefill replica,
+    blocks migrate, decode happens elsewhere — token-identical to a single
+    engine, prompt never recomputed (decode replica books no prompt-length
+    prefill beyond the adopted first tokens)."""
+    cfgs = make_cluster_configs(_cfg(), disagg=(1, 1))
+    handles = [InProcessReplica(c, params=PARAMS) for c in cfgs]
+    router = Router(handles, policy="least-loaded")
+    prompts = _prompts(4, np.random.default_rng(6))
+    rids = [router.submit(p, max_new=4) for p in prompts]
+    res = router.drain()
+    single = _engine()
+    want = single.generate([p.tolist() for p in prompts], max_new=4)
+    assert [res[r] for r in rids] == want
+    stats = router.collect_stats()
+    assert stats["p0"]["migrated_blocks_out"] > 0
+    assert stats["d0"]["migrated_blocks_in"] == stats["p0"]["migrated_blocks_out"]
+    # the decode replica re-ran no prompt tokens
+    assert stats["d0"]["throughput"]["prefill_tokens"] == 0
+    router.close()
+
+
+def test_disagg_decode_death_reuses_handoff():
+    """When a decode replica dies holding adopted requests, the router
+    re-dispatches the *retained* handoff payload: the prefill replica is
+    never asked to re-run the prompt."""
+    cfgs = make_cluster_configs(_cfg(), disagg=(1, 2))
+    handles = [InProcessReplica(c, params=PARAMS) for c in cfgs]
+    router = Router(handles, policy="least-loaded")
+    prompts = _prompts(4, np.random.default_rng(7))
+    rids = [router.submit(p, max_new=5) for p in prompts]
+
+    state = {"killed": False}
+
+    def chaos(r, step):
+        if state["killed"]:
+            return
+        for st in r.states.values():
+            if st.role == "decode" and st.alive and st.inflight:
+                r.kill(st.name)
+                state["killed"] = True
+                return
+
+    res = router.drain(on_step=chaos)
+    assert state["killed"] and router.requeues >= 1
+    single = _engine()
+    want = single.generate([p.tolist() for p in prompts], max_new=5)
+    assert [res[r] for r in rids] == want
+    stats = router.collect_stats()
+    served_prefills = stats["p0"]["served"]
+    assert served_prefills == len(prompts)  # one prefill per request, ever
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# subprocess transport
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_subprocess_transport_smoke():
+    """Two real spawn-context replica processes behind the router: the same
+    protocol crosses a multiprocessing.Pipe, outputs match a local engine."""
+    cfgs = make_cluster_configs(_cfg(), replicas=2)
+    handles = [SubprocessReplica(c) for c in cfgs]
+    router = Router(handles, policy="least-loaded", heartbeat_timeout=300.0)
+    try:
+        prompts = _prompts(3, np.random.default_rng(8))
+        rids = [router.submit(p, max_new=3) for p in prompts]
+        res = router.drain()
+        single = _engine()
+        want = single.generate([p.tolist() for p in prompts], max_new=3)
+        assert [res[r] for r in rids] == want
+    finally:
+        router.close()
+
+
+def test_build_engine_variants():
+    """ReplicaConfig reaches every engine flag: megastep, int8 KV, spec."""
+    e1 = build_engine(_cfg(decode_steps=4), params=PARAMS)
+    assert e1.decode_steps == 4
+    e2 = build_engine(_cfg(kv_quant=True, kv_bits=4), params=PARAMS)
+    assert e2.cache.kv_quant and e2.cache.kv_bits == 4
+    from repro.serve.spec import SpecServeEngine
+
+    e3 = build_engine(_cfg(spec_k=2), params=PARAMS)
+    assert isinstance(e3, SpecServeEngine)

@@ -414,3 +414,220 @@ def test_paged_attention_q8_window_matches_ref():
     got = ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs, window=W)
     want = ref.ref_paged_attention_q8(q, kq, vq, ks, vs, bt, ln, window=W)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+# ---------------------------------------------------------------------------
+# packed int4 paged-attention decode (nibble pools, in-register unpack)
+# ---------------------------------------------------------------------------
+
+
+def _pack_nibbles_np(codes):
+    u = codes.astype(np.uint8) & 0xF
+    return (u[..., 0::2] | (u[..., 1::2] << 4)).astype(np.uint8)
+
+
+def _q4_pools(rng, NB, bs, KV, Dh):
+    kc = rng.integers(-7, 8, (NB, bs, KV, Dh)).astype(np.int8)
+    vc = rng.integers(-7, 8, (NB, bs, KV, Dh)).astype(np.int8)
+    ks = jnp.asarray(rng.uniform(0.02, 0.2, (NB, bs, KV)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.02, 0.2, (NB, bs, KV)), jnp.float32)
+    return jnp.asarray(_pack_nibbles_np(kc)), jnp.asarray(_pack_nibbles_np(vc)), ks, vs
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (6, 1)])  # MHA, GQA, MQA
+def test_paged_attention_q4_matches_ref(H, KV):
+    """Packed-int4 pools (uint8, half feature width) with in-kernel unpack +
+    dequant against the jnp q4 oracle."""
+    B, Dh, NB, bs, MB = 3, 32, 16, 8, 4
+    lens = [19, 1, 32]
+    rng = np.random.default_rng(21)
+    kq, vq, ks, vs = _q4_pools(rng, NB, bs, KV, Dh)
+    _, _, bt, ln = _paged_setup(B, KV, Dh, NB, bs, MB, lens)
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs)
+    want = ref.ref_paged_attention_q4(q, kq, vq, ks, vs, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_q4_equals_unpacked_fp32_path():
+    """Nibble unpack + rescale in register is the same arithmetic as
+    unpacking the pools up front and running the fp32 kernel."""
+    B, H, Dh, NB, bs, MB = 2, 4, 16, 8, 4, 3
+    rng = np.random.default_rng(22)
+    kc = rng.integers(-7, 8, (NB, bs, H, Dh)).astype(np.int8)
+    vc = rng.integers(-7, 8, (NB, bs, H, Dh)).astype(np.int8)
+    ks = jnp.asarray(rng.uniform(0.02, 0.2, (NB, bs, H)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.02, 0.2, (NB, bs, H)), jnp.float32)
+    _, _, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [9, 12])
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(
+        q, jnp.asarray(_pack_nibbles_np(kc)), jnp.asarray(_pack_nibbles_np(vc)),
+        bt, ln, kps=ks, vps=vs,
+    )
+    kd = jnp.asarray(kc, jnp.float32) * ks[..., None]
+    vd = jnp.asarray(vc, jnp.float32) * vs[..., None]
+    want = ops.paged_attention(q, kd, vd, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_q4_ignores_trash_and_zero_rows():
+    B, H, Dh, NB, bs, MB = 2, 2, 16, 8, 4, 4
+    rng = np.random.default_rng(23)
+    kq, vq, ks, vs = _q4_pools(rng, NB, bs, H, Dh)
+    _, _, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [6, 6])
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    base = np.asarray(ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs))
+    bt2 = np.asarray(bt).copy()
+    bt2[:, 2:] = 7  # garbage beyond the 6-token prefix
+    redirected = np.asarray(
+        ops.paged_attention(q, kq, vq, jnp.asarray(bt2), ln, kps=ks, vps=vs)
+    )
+    np.testing.assert_array_equal(base, redirected)
+    z = np.asarray(
+        ops.paged_attention(q, kq, vq, bt, jnp.asarray([0, 6], jnp.int32), kps=ks, vps=vs)
+    )
+    assert np.isfinite(z).all() and np.abs(z[0]).max() == 0.0
+
+
+def test_paged_attention_q4_window_matches_ref():
+    """Window masking composes with the packed-int4 unpack path."""
+    B, H, KV, Dh, NB, bs, MB, W = 2, 4, 2, 16, 10, 4, 4, 6
+    rng = np.random.default_rng(24)
+    kq, vq, ks, vs = _q4_pools(rng, NB, bs, KV, Dh)
+    _, _, bt, ln = _paged_setup(B, KV, Dh, NB, bs, MB, [9, 14], seed=24)
+    q = jnp.asarray(rng.normal(size=(B, H, Dh)), jnp.float32)
+    got = ops.paged_attention(q, kq, vq, bt, ln, kps=ks, vps=vs, window=W)
+    want = ref.ref_paged_attention_q4(q, kq, vq, ks, vs, bt, ln, window=W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_q4_requires_scales():
+    B, H, Dh, NB, bs, MB = 1, 2, 16, 4, 4, 2
+    rng = np.random.default_rng(25)
+    kq, vq, _, _ = _q4_pools(rng, NB, bs, H, Dh)
+    _, _, bt, ln = _paged_setup(B, H, Dh, NB, bs, MB, [4])
+    q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.paged_attention(q, kq, vq, bt, ln)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent paged attention (absorbed decode over compressed pools)
+# ---------------------------------------------------------------------------
+
+_MLA_SCALE = (48 + 16) ** -0.5  # (qk_nope_dim + qk_rope_dim) ** -0.5
+
+
+def _mla_setup(rng, B, H, R, P, NB, bs, MB, lens):
+    ql = jnp.asarray(rng.normal(size=(B, H, R)), jnp.float32)
+    qp = jnp.asarray(rng.normal(size=(B, H, P)), jnp.float32)
+    bt = np.zeros((B, MB), np.int32)
+    nxt = 1
+    for b, ln in enumerate(lens):
+        for j in range(-(-ln // bs)):
+            bt[b, j] = nxt
+            nxt += 1
+    assert nxt <= NB
+    return ql, qp, jnp.asarray(bt), jnp.asarray(np.asarray(lens, np.int32))
+
+
+def test_paged_mla_attention_matches_ref():
+    """fp32 latent pools: kernel vs the gathered latent-softmax oracle,
+    mixed lengths including a single-token row."""
+    B, H, R, P, NB, bs, MB = 3, 8, 32, 8, 16, 8, 4
+    rng = np.random.default_rng(31)
+    ql, qp, bt, ln = _mla_setup(rng, B, H, R, P, NB, bs, MB, [19, 1, 32])
+    ckvp = jnp.asarray(rng.normal(size=(NB, bs, R)), jnp.float32)
+    kpep = jnp.asarray(rng.normal(size=(NB, bs, P)), jnp.float32)
+    got = ops.paged_mla_attention(ql, qp, ckvp, kpep, bt, ln, scale=_MLA_SCALE)
+    want = ref.ref_paged_mla_attention(ql, qp, ckvp, kpep, bt, ln, scale=_MLA_SCALE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_paged_mla_attention_quantized_matches_ref(bits):
+    """int8 / packed-int4 latent pools with per-token scales: in-register
+    dequant (and unpack) against the oracle."""
+    B, H, R, P, NB, bs, MB = 3, 8, 32, 8, 16, 8, 4
+    rng = np.random.default_rng(32 + bits)
+    ql, qp, bt, ln = _mla_setup(rng, B, H, R, P, NB, bs, MB, [19, 1, 30])
+    if bits == 8:
+        ckvp = jnp.asarray(rng.integers(-127, 128, (NB, bs, R)), jnp.int8)
+        kpep = jnp.asarray(rng.integers(-127, 128, (NB, bs, P)), jnp.int8)
+    else:
+        ckvp = jnp.asarray(_pack_nibbles_np(rng.integers(-7, 8, (NB, bs, R)).astype(np.int8)))
+        kpep = jnp.asarray(_pack_nibbles_np(rng.integers(-7, 8, (NB, bs, P)).astype(np.int8)))
+    ckvs = jnp.asarray(rng.uniform(0.005, 0.05, (NB, bs)), jnp.float32)
+    kpes = jnp.asarray(rng.uniform(0.005, 0.05, (NB, bs)), jnp.float32)
+    got = ops.paged_mla_attention(
+        ql, qp, ckvp, kpep, bt, ln, ckvs=ckvs, kpes=kpes, scale=_MLA_SCALE
+    )
+    want = ref.ref_paged_mla_attention(
+        ql, qp, ckvp, kpep, bt, ln, ckvs, kpes, scale=_MLA_SCALE
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_mla_attention_act_quant_matches_ref():
+    """The in-kernel activation fake-quant (clip(round(x/s)) * s on the
+    dequantized latent, the absorb path's A2Q quantizer) matches the oracle
+    on both the score and PV uses of the latent."""
+    B, H, R, P, NB, bs, MB = 2, 4, 16, 8, 10, 4, 4
+    rng = np.random.default_rng(35)
+    ql, qp, bt, ln = _mla_setup(rng, B, H, R, P, NB, bs, MB, [9, 14])
+    ckvp = jnp.asarray(rng.integers(-127, 128, (NB, bs, R)), jnp.int8)
+    kpep = jnp.asarray(rng.integers(-127, 128, (NB, bs, P)), jnp.int8)
+    ckvs = jnp.asarray(rng.uniform(0.005, 0.05, (NB, bs)), jnp.float32)
+    kpes = jnp.asarray(rng.uniform(0.005, 0.05, (NB, bs)), jnp.float32)
+    aq = jnp.asarray(0.017, jnp.float32)  # traced scalar, shipped as (1, 1)
+    got = ops.paged_mla_attention(
+        ql, qp, ckvp, kpep, bt, ln, ckvs=ckvs, kpes=kpes,
+        scale=_MLA_SCALE, aq_scale=aq, act_bits=8,
+    )
+    want = ref.ref_paged_mla_attention(
+        ql, qp, ckvp, kpep, bt, ln, ckvs, kpes,
+        scale=_MLA_SCALE, aq_scale=aq, act_bits=8,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    # act-quant must actually change the result (the flag is load-bearing)
+    plain = ops.paged_mla_attention(
+        ql, qp, ckvp, kpep, bt, ln, ckvs=ckvs, kpes=kpes, scale=_MLA_SCALE
+    )
+    assert np.abs(np.asarray(got) - np.asarray(plain)).max() > 1e-6
+
+
+def test_paged_mla_attention_ignores_trash_and_zero_rows():
+    B, H, R, P, NB, bs, MB = 2, 4, 16, 8, 10, 4, 4
+    rng = np.random.default_rng(36)
+    ql, qp, bt, ln = _mla_setup(rng, B, H, R, P, NB, bs, MB, [6, 6])
+    ckvp = jnp.asarray(rng.normal(size=(NB, bs, R)), jnp.float32)
+    kpep = jnp.asarray(rng.normal(size=(NB, bs, P)), jnp.float32)
+    base = np.asarray(
+        ops.paged_mla_attention(ql, qp, ckvp, kpep, bt, ln, scale=_MLA_SCALE)
+    )
+    bt2 = np.asarray(bt).copy()
+    bt2[:, 2:] = 9  # garbage beyond the 6-token prefix
+    redirected = np.asarray(
+        ops.paged_mla_attention(ql, qp, ckvp, kpep, jnp.asarray(bt2), ln, scale=_MLA_SCALE)
+    )
+    np.testing.assert_array_equal(base, redirected)
+    z = np.asarray(
+        ops.paged_mla_attention(
+            ql, qp, ckvp, kpep, bt, jnp.asarray([0, 6], jnp.int32), scale=_MLA_SCALE
+        )
+    )
+    assert np.isfinite(z).all() and np.abs(z[0]).max() == 0.0
+
+
+def test_paged_mla_attention_arg_validation():
+    B, H, R, P, NB, bs, MB = 1, 2, 16, 8, 4, 4, 2
+    rng = np.random.default_rng(37)
+    ql, qp, bt, ln = _mla_setup(rng, B, H, R, P, NB, bs, MB, [4])
+    ckvp = jnp.asarray(rng.normal(size=(NB, bs, R)), jnp.float32)
+    kpep = jnp.asarray(rng.normal(size=(NB, bs, P)), jnp.float32)
+    ckvs = jnp.asarray(rng.uniform(0.01, 0.05, (NB, bs)), jnp.float32)
+    with pytest.raises(ValueError):  # scale pools must pair
+        ops.paged_mla_attention(ql, qp, ckvp, kpep, bt, ln, ckvs=ckvs, scale=_MLA_SCALE)
+    with pytest.raises(ValueError):  # aq_scale and act_bits must pair
+        ops.paged_mla_attention(
+            ql, qp, ckvp, kpep, bt, ln, scale=_MLA_SCALE, act_bits=8
+        )
