@@ -70,6 +70,38 @@ def run() -> dict:
     print(f"int_matmul_int16_spill,0.0,scratch {vm - vm16} bytes saved per tile ok={ok}")
     rows.append(dict(name="int16_spill", saved=vm - vm16, ok=ok))
 
+    # requantizing epilogue (int8-out chaining): acc -> rescale -> act replay
+    # -> round/clamp -> int8 codes, bit-exact vs the jnp oracle for both pow2
+    # and arbitrary out scales (f32 divide either way)
+    out_pow2 = jnp.exp2(jnp.asarray(rng.integers(-4, 0, (256,)), jnp.float32))
+    out_rand = jnp.asarray(rng.uniform(0.01, 0.3, (256,)), jnp.float32)
+    us = time_call(lambda: ops.int_matmul(x, w, scale=scale, bias=bias, out_scale=out_pow2))
+    ok = True
+    for out_scale, act_fn in ((out_pow2, None), (out_rand, None), (out_pow2, "relu2"),
+                              (out_rand, "gelu")):
+        got = ops.int_matmul(x, w, scale=scale, bias=bias, out_scale=out_scale,
+                             act_fn=act_fn)
+        want = ref.ref_int_matmul_requant(x, w, scale, out_scale, bias=bias,
+                                          act_fn=act_fn)
+        ok &= bool((np.asarray(got) == np.asarray(want)).all())
+    print(f"int_matmul_requant_epilogue,{us:.1f},int8-out chaining: pow2+random "
+          f"out_scale, relu2/gelu replay, bit-exact={ok}")
+    rows.append(dict(name="int_matmul_requant", ok=ok))
+
+    # unsigned-8 symmetrization: u8 codes travel as q-128 and the kernel adds
+    # 128*colsum(w) back at flush — exact in int32, so the old N<=7 unsigned
+    # restriction on the fused path is gone
+    xu = jnp.asarray(rng.integers(0, 256, (64, 256)) - 128, jnp.int8)
+    su = jnp.asarray(rng.uniform(0.001, 0.1, (64,)), jnp.float32)
+    got = ops.int_matmul(xu, ws, scale=su, in_signed=False, block_k=64)
+    offs = 128 * np.asarray(ws, np.int64).sum(axis=0)
+    acc = (np.asarray(xu, np.int64) @ np.asarray(ws, np.int64)) + offs
+    want = acc.astype(np.float32) * np.asarray(su)[None, :]
+    ok = bool((np.asarray(got) == want.astype(np.float32)).all())
+    print(f"int_matmul_u8_symmetrize,0.0,offset=128*colsum(w) restores unsigned "
+          f"codes exactly ok={ok}")
+    rows.append(dict(name="int_matmul_u8_sym", ok=ok))
+
     # a2q_quantize fused kernel
     v = jnp.asarray(rng.normal(size=(2048, 512)), jnp.float32)
     t = jnp.asarray(rng.normal(size=(512,)) + 3, jnp.float32)

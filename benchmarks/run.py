@@ -145,6 +145,15 @@ def main(argv=None):
             results["serve"]["int8_kv_megastep_dispatches_per_token"] <= 0.2,
         "serve_int8_megastep_decode_not_slower":
             results["serve"]["int8_kv_megastep_decode_ratio"] >= 0.95,
+        # int8-out chaining: deployed layers pay ZERO standalone act-quant
+        # dispatches (every activation quantizer folds into the W8A8 kernel:
+        # epilogue requant on chained edges, prologue quant at chain breaks),
+        # and the fold must not cost decode throughput vs the unchained
+        # integer fast path (0.95 = wall-clock noise floor on shared runners)
+        "serve_int_chain_requant_dispatches":
+            results["serve"]["int_chain_requant_dispatches"] == 0,
+        "serve_int_chain_decode_not_slower":
+            results["serve"]["int_chain_decode_ratio"] >= 0.95,
         # disaggregated cluster: two routed replicas reach >= 1.6x one
         # replica's busy-time capacity (routing balance), and a mid-wave
         # replica kill completes every request token-exactly via requeue

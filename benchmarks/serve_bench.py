@@ -37,9 +37,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.models.lm import init_lm
+from repro.models.lm import Runtime, init_lm
 from repro.nn.module import unbox
-from repro.serve.engine import PagedServeEngine, Request, ServeEngine, parity_up_to_ties
+from repro.serve.engine import (
+    PagedServeEngine, Request, ServeEngine, deploy_params, parity_up_to_ties,
+)
 from repro.serve.spec import SpecServeEngine
 
 
@@ -141,6 +143,14 @@ def run(
     # dispatch), not merely coexist in separate engines
     paged_q8m = PagedServeEngine(arch, params, kv_quant=True,
                                  decode_steps=decode_steps, **pkw)
+    # the integer fast path and its int8-out chained variant run the deployed
+    # artifact (int8 weights + scales).  The chained engine folds activation
+    # quantization into the W8A8 kernel (epilogue requant / prologue quant);
+    # both share the exact same quantized numerics, so greedy tokens must be
+    # identical between them — chaining is a pure dispatch fusion.
+    dep = deploy_params(params, arch.quant)
+    paged_int = PagedServeEngine(arch, dep, rt=Runtime(int_forward=True), **pkw)
+    paged_intc = PagedServeEngine(arch, dep, rt=Runtime(int_chain=True), **pkw)
     paged_px = PagedServeEngine(arch, params, prefix_share=True, **pkw)
     # pin the workload's common system prefix (same rng draw as _workload):
     # prefilled once here, never evicted, so even the *first* shared-cohort
@@ -150,7 +160,7 @@ def run(
     spec = (SpecServeEngine(arch, params, spec_k=spec_k, **pkw)
             if spec_ok else None)
     engines = [e for e in (contig, paged, paged_mega, paged_q8, paged_q8m,
-                           paged_px, spec)
+                           paged_int, paged_intc, paged_px, spec)
                if e is not None]
     # Warmup pass covers every jit shape (the paged engine compiles one
     # prefill per distinct chunk length), so the timed pass measures
@@ -166,12 +176,15 @@ def run(
             e.cache.pool_rebuilds = 0
             e.cache.bt_full_uploads = e.cache.bt_row_patches = 0
 
-    reqs_c, reqs_p, reqs_m, reqs_q, reqs_qm, reqs_x = (workload() for _ in range(6))
+    reqs_c, reqs_p, reqs_m, reqs_q, reqs_qm, reqs_i, reqs_ic, reqs_x = (
+        workload() for _ in range(8))
     _drive_contiguous(contig, reqs_c)
     _drive_paged(paged, reqs_p)
     _drive_paged(paged_mega, reqs_m)
     _drive_paged(paged_q8, reqs_q)
     _drive_paged(paged_q8m, reqs_qm)
+    _drive_paged(paged_int, reqs_i)
+    _drive_paged(paged_intc, reqs_ic)
     _drive_paged(paged_px, reqs_x)
     reqs_s = None
     if spec is not None:
@@ -194,6 +207,10 @@ def run(
     if reqs_s is not None:
         assert [r.generated for r in reqs_s] == [r.generated for r in reqs_p], \
             "speculative engine diverged from plain greedy decode"
+    # int8-out chaining is a pure dispatch fusion over the integer fast path:
+    # the chained engine must match the unchained int engine token-for-token
+    assert [r.generated for r in reqs_ic] == [r.generated for r in reqs_i], \
+        "int8-chained engine diverged from unchained int-forward decode"
     # int8 KV is lossy: hold it to the parity bound instead of bit equality
     ok, ties, detail = parity_up_to_ties(
         reqs_p, [r.generated for r in reqs_q], eps=0.05
@@ -209,6 +226,8 @@ def run(
         "decode_steps": decode_steps,
         "paged_int8_kv": _stats_row(paged_q8, reqs_q),
         "paged_megastep_int8_kv": _stats_row(paged_q8m, reqs_qm),
+        "paged_int_forward": _stats_row(paged_int, reqs_i),
+        "paged_int_forward_chained": _stats_row(paged_intc, reqs_ic),
         "paged_prefix_share": _stats_row(paged_px, reqs_x),
         # fixed lanes vs token-proportional blocks (same dtype, so the slot
         # count ratio is the memory ratio for the seq-indexed leaves)
@@ -288,6 +307,19 @@ def run(
         / out["paged_int8_kv"]["decode_tok_s"]
         if out["paged_int8_kv"]["decode_tok_s"] > 0 else float("inf")
     )
+    # int8-out chaining headlines (run.py claims): the chained engine must
+    # launch ZERO standalone act-quant dispatches for deployed layers (the
+    # stats-contract field, trace-time count of apply_linear call sites), and
+    # folding the quantizer into the kernel must not slow steady-state decode
+    # vs the unchained integer fast path
+    out["int_chain_requant_dispatches"] = (
+        out["paged_int_forward_chained"]["int_chain_requant_dispatches"]
+    )
+    out["int_chain_decode_ratio"] = (
+        out["paged_int_forward_chained"]["decode_tok_s"]
+        / out["paged_int_forward"]["decode_tok_s"]
+        if out["paged_int_forward"]["decode_tok_s"] > 0 else float("inf")
+    )
     # the prefix-share cliff gate: prefill-dominated latency (TTFT p50) of
     # the sharing engine vs plain paged on the identical workload.  The seed
     # regression was ~13x (a recompile per distinct shared-prefix length);
@@ -300,7 +332,8 @@ def run(
     print("engine,tok_s,prefill_tok_s,decode_tok_s,dispatches_per_token,"
           "latency_p50_s,latency_p99_s")
     rows = ["contiguous", "paged", "paged_megastep", "paged_int8_kv",
-            "paged_megastep_int8_kv", "paged_prefix_share"]
+            "paged_megastep_int8_kv", "paged_int_forward",
+            "paged_int_forward_chained", "paged_prefix_share"]
     if "spec" in out:
         rows.append("spec")
     for name in rows:
@@ -320,6 +353,10 @@ def run(
     print(f"int8_kv_megastep,dispatches_per_token "
           f"{out['int8_kv_megastep_dispatches_per_token']:.3f},"
           f"decode_ratio_vs_tick_int8 {out['int8_kv_megastep_decode_ratio']:.2f}")
+    print(f"int_chain,standalone_act_quant {out['int_chain_requant_dispatches']},"
+          f"folded {out['paged_int_forward_chained']['int_chain_folded']},"
+          f"chained {out['paged_int_forward_chained']['int_chain_chained']},"
+          f"decode_ratio_vs_unchained {out['int_chain_decode_ratio']:.2f}")
     print(f"prefix_share,hits {out['prefix_hits']},shared_tokens "
           f"{out['prefix_hit_tokens']},cow_copies {out['prefix_cow_copies']},"
           f"pinned_tokens {out['prefix_pinned_tokens']},"

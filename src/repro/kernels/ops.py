@@ -62,6 +62,15 @@ def int_matmul(
     mode: str = "exact",
     scale: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
+    offset: Optional[jnp.ndarray] = None,
+    out_scale: Optional[jnp.ndarray] = None,
+    out_bits: int = 8,
+    out_signed: bool = True,
+    act_fn: Optional[str] = None,
+    cast_dtype=jnp.float32,
+    aq_scale: Optional[jnp.ndarray] = None,
+    in_bits: int = 8,
+    in_signed: bool = True,
     out_dtype=jnp.float32,
     block_m: int = 128,
     block_n: int = 128,
@@ -77,6 +86,24 @@ def int_matmul(
     ``s8`` with the activation scale folded in) engages the fused epilogue:
     the int32 accumulator is rescaled (+ ``bias``) in VMEM and the op returns
     ``out_dtype`` instead of raw int32.  Oracle: ``ref.ref_int_matmul_fused``.
+
+    Int8-out chaining (oracle: ``ref.ref_int_matmul_requant``):
+
+    * ``in_signed=False, in_bits=8`` declares that ``x`` carries *symmetrized*
+      unsigned codes (``true_code - 128`` as int8, or the fp32 prologue input
+      of an unsigned consumer); the wrapper adds the exact correction
+      ``128 * colsum(w)`` to the accumulator at flush, so unsigned-activation
+      layers ride the fused path at full ``N=8``.
+    * ``out_scale`` (scalar or per-column ``(N,)`` fp32 — the *next* layer's
+      activation scale) engages the requantizing epilogue: the rescaled
+      accumulator is passed through ``act_fn`` (``None``/``'relu2'``/
+      ``'gelu'``, replayed in ``cast_dtype`` exactly as the layer code
+      computes it) and re-quantized to int8 codes for ``out_bits``/
+      ``out_signed`` in the same flush — the op returns int8, and unsigned
+      targets come out symmetrized.
+    * ``aq_scale`` (scalar fp32) engages the quantizing prologue: ``x``
+      arrives fp32 and each tile is quantized in-register before the dot —
+      the chain-break entry point needs no standalone act-quant dispatch.
     """
     M, K = x.shape
     _, N = w.shape
@@ -84,8 +111,9 @@ def int_matmul(
     bn = min(block_n, _round_up(N, 128))
     bk = min(block_k, _round_up(K, 128))
     Np = _round_up(N, bn)
-    xp = _pad_axis(_pad_axis(x, 0, _round_up(M, bm)), 1, _round_up(K, bk))
-    wp = _pad_axis(_pad_axis(w, 0, _round_up(K, bk)), 1, Np)
+    Kp = _round_up(K, bk)
+    xp = _pad_axis(_pad_axis(x, 0, _round_up(M, bm)), 1, Kp)
+    wp = _pad_axis(_pad_axis(w, 0, Kp), 1, Np)
     if scale is not None:
         scale = _pad_axis(
             jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (N,)).reshape(1, N), 1, Np
@@ -94,11 +122,39 @@ def int_matmul(
         if scale is None:
             raise ValueError("int_matmul: bias requires an epilogue scale")
         bias = _pad_axis(jnp.asarray(bias, jnp.float32).reshape(1, N), 1, Np)
+    if not in_signed and in_bits == 8:
+        # symmetrized unsigned operand: q = qs + 128, so
+        # acc_true = acc_sym + 128 * colsum(w).  Exact in int32; w's K padding
+        # is zeros, so the unpadded colsum is already correct.
+        sym = 128 * jnp.sum(w.astype(jnp.int32), axis=0)
+        offset = sym if offset is None else jnp.asarray(offset, jnp.int32) + sym
+    if offset is not None:
+        if scale is None:
+            raise ValueError("int_matmul: offset requires an epilogue scale")
+        offset = _pad_axis(jnp.asarray(offset, jnp.int32).reshape(1, N), 1, Np)
+    if out_scale is not None:
+        if scale is None:
+            raise ValueError("int_matmul: out_scale requires an epilogue scale")
+        # pad columns divide by 1 (never 0) and are sliced off below
+        out_scale = _pad_axis(
+            jnp.broadcast_to(jnp.asarray(out_scale, jnp.float32), (N,)).reshape(1, N),
+            1, Np, value=1,
+        )
+    if aq_scale is not None:
+        if scale is None:
+            raise ValueError("int_matmul: aq_scale requires an epilogue scale")
+        aq_scale = _pad_axis(
+            jnp.broadcast_to(jnp.asarray(aq_scale, jnp.float32), (K,)).reshape(1, K),
+            1, Kp, value=1,
+        )
     out = int_matmul_pallas(
         xp,
         wp,
         scale,
         bias,
+        offset,
+        out_scale,
+        aq_scale,
         acc_bits=acc_bits,
         mode=mode,
         block_m=bm,
@@ -106,6 +162,12 @@ def int_matmul(
         block_k=bk,
         spill_dtype=jnp.int16 if spill_int16 else jnp.int32,
         out_dtype=out_dtype,
+        out_bits=out_bits,
+        out_signed=out_signed,
+        act_fn=act_fn,
+        cast_dtype=cast_dtype,
+        in_bits=in_bits,
+        in_signed=in_signed,
         interpret=_default_interpret(interpret),
     )
     return out[:M, :N]

@@ -19,6 +19,7 @@ __all__ = [
     "saturate_bits",
     "ref_int_matmul",
     "ref_int_matmul_fused",
+    "ref_int_matmul_requant",
     "ref_a2q_quantize",
     "ref_flash_attention",
     "ref_paged_attention",
@@ -90,18 +91,70 @@ def ref_int_matmul_fused(
     acc_bits: int = 32,
     mode: str = "exact",
     block_k: Optional[int] = None,
+    offset: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Fused-epilogue oracle: the integer matmul followed by the per-column
     rescale (+ bias) in fp32 — exactly ``matmul -> scale``.  The kernel's
     in-VMEM epilogue matches the scale-only form bit-for-bit (one fp32
     multiply either way); with ``bias`` the kernel's rescale+add may contract
     into an FMA (one rounding vs the oracle's two), so agreement is to 1-ulp
-    float tolerance."""
+    float tolerance.  ``offset`` (``(N,)`` int32 — the unsigned-symmetrization
+    correction ``128 * colsum(w)``) is added to the int32 accumulator before
+    the rescale, exactly as the kernel does at flush."""
     acc = ref_int_matmul(x, w, acc_bits=acc_bits, mode=mode, block_k=block_k)
+    if offset is not None:
+        acc = acc + jnp.asarray(offset, jnp.int32).reshape(1, -1)
     out = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32).reshape(1, -1)
     if bias is not None:
         out = out + jnp.asarray(bias, jnp.float32).reshape(1, -1)
     return out
+
+
+def ref_int_matmul_requant(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray,
+    out_scale: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    offset: Optional[jnp.ndarray] = None,
+    out_bits: int = 8,
+    out_signed: bool = True,
+    act_fn: Optional[str] = None,
+    cast_dtype=jnp.float32,
+    acc_bits: int = 32,
+) -> jnp.ndarray:
+    """Requantizing-epilogue oracle (the int8-out chaining flush): integer
+    matmul, per-column rescale (+ bias), the producer/consumer activation
+    replay, then the *next* layer's ``act_quant_int`` — ``clip(round(y /
+    out_scale))`` — emitted as int8 codes.  Unsigned targets come out
+    *symmetrized* (``true_code - 128``), matching the kernel's convention for
+    feeding the next int8 MXU operand.
+
+    ``act_fn`` replays the call-site cast sequence bit-exactly: ``'relu2'``
+    squares relu in ``cast_dtype`` (rwkv6 channel-mix), ``'gelu'`` runs in
+    fp32 then casts back (the non-gated MLP), ``None`` is the bare
+    cast round-trip.
+    """
+    y = ref_int_matmul_fused(
+        x, w, scale, bias=bias, acc_bits=acc_bits, offset=offset
+    ).astype(cast_dtype)
+    if act_fn == "relu2":
+        y = jnp.square(jax.nn.relu(y))
+    elif act_fn == "gelu":
+        y = jax.nn.gelu(y.astype(jnp.float32)).astype(cast_dtype)
+    elif act_fn is not None:
+        raise ValueError(f"unknown chained activation {act_fn!r}")
+    if out_signed:
+        n, p = -(2 ** (out_bits - 1)), 2 ** (out_bits - 1) - 1
+    else:
+        n, p = 0, 2**out_bits - 1
+    q = jnp.clip(
+        jnp.round(y.astype(jnp.float32) / jnp.asarray(out_scale, jnp.float32).reshape(1, -1)),
+        n, p,
+    )
+    if not out_signed and out_bits == 8:
+        q = q - 128.0
+    return q.astype(jnp.int8)
 
 
 def ref_a2q_quantize(

@@ -86,6 +86,11 @@ def _report(tag: str, engine) -> dict:
         f"{tp['decode_dispatches']} dispatches = "
         f"{tp['dispatches_per_token']:.3f}/tok) | overall {tp['tok_s']:.1f} tok/s"
     )
+    if "int_chain_requant_dispatches" in tp:
+        print(f"[{tag}] chain report: {tp['int_chain_folded']} folded, "
+              f"{tp['int_chain_chained']} chained, "
+              f"{tp['int_chain_requant_dispatches']} standalone act-quant, "
+              f"{tp['int_chain_fallback']} fallback call sites")
     return tp
 
 
@@ -101,6 +106,12 @@ def main(argv=None):
     ap.add_argument("--deploy-int8", action="store_true")
     ap.add_argument("--int-forward", action="store_true",
                     help="fused W8A8 integer matmuls for deployed layers (implies --deploy-int8)")
+    ap.add_argument("--int-chain", action="store_true",
+                    help="int8-out chaining: fold activation quantization into "
+                         "the W8A8 kernel (epilogue requant on chained edges, "
+                         "prologue quant at chain breaks) so deployed layers "
+                         "pay zero standalone act-quant dispatches "
+                         "(implies --int-forward)")
     ap.add_argument("--kv-int8", action="store_true",
                     help="integer paged KV blocks with per-slot scales")
     ap.add_argument("--kv-bits", type=int, choices=(8, 4), default=8,
@@ -179,12 +190,17 @@ def main(argv=None):
         arch = reduced(arch)
     key = jax.random.PRNGKey(args.seed)
     params = unbox(init_lm(key, arch))
+    if args.int_chain:
+        args.int_forward = True  # chaining is a mode of the integer fast path
     if args.int_forward:
         args.deploy_int8 = True  # the W8A8 path consumes the deployed artifact
     if args.deploy_int8:
         params = deploy_params(params, arch.quant)
         print("serving deployed int8 weights (A2Q-guaranteed accumulator safety)")
-    if args.int_forward:
+    if args.int_chain:
+        print("int-chain: activation quantization folded into the W8A8 kernel "
+              "(int8 codes chained between deployed layers)")
+    elif args.int_forward:
         print("int-forward: deployed linears run the fused W8A8 integer kernel")
 
     rng = np.random.default_rng(args.seed)
@@ -224,7 +240,8 @@ def main(argv=None):
             kv_quant=args.kv_int8, kv_bits=args.kv_bits,
             prefix_share=args.prefix_share,
             eos_id=args.eos_id, decode_steps=args.decode_steps,
-            rt=Runtime(decode_kernel=decode_kernel, int_forward=args.int_forward),
+            rt=Runtime(decode_kernel=decode_kernel, int_forward=args.int_forward,
+                       int_chain=args.int_chain),
         )
         if args.spec_k > 0:
             from repro.serve.spec import ModelDrafter, SpecServeEngine
@@ -256,7 +273,8 @@ def main(argv=None):
 
     report: dict = {
         "arch": args.arch, "paged": bool(args.paged or args.parity_check),
-        "int_forward": args.int_forward, "kv_int8": args.kv_int8,
+        "int_forward": args.int_forward, "int_chain": args.int_chain,
+        "kv_int8": args.kv_int8,
         "kv_bits": args.kv_bits if args.kv_int8 else None,
         "spec_k": args.spec_k, "prefix_share": args.prefix_share,
         "shared_prefix": args.shared_prefix, "pin_prompt": args.pin_prompt,
@@ -337,7 +355,8 @@ def main(argv=None):
         # through the contiguous cache path) — without this the flag would be
         # a silent no-op here while the banner claims the W8A8 kernel is on
         engine = ServeEngine(arch, params, batch=args.batch, max_seq=args.max_seq,
-                             rt=Runtime(int_forward=args.int_forward),
+                             rt=Runtime(int_forward=args.int_forward,
+                                        int_chain=args.int_chain),
                              eos_id=args.eos_id)
         outs = engine.generate(prompts, max_new=args.max_new)
         report["contiguous"] = _report("contiguous", engine)

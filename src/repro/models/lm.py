@@ -16,6 +16,7 @@ walk (paper Sec. 4.1 / App. B, lambda = 1e-3).
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -26,7 +27,12 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.dist.sharding import ShardingRules, constrain
 from repro.nn.embedding import apply_embedding, init_embedding
-from repro.nn.linear import apply_linear, init_linear, linear_penalty
+from repro.nn.linear import (
+    apply_linear,
+    chain_report_scope,
+    init_linear,
+    linear_penalty,
+)
 from repro.nn.module import box, unbox
 from repro.nn.norms import apply_norm, init_norm
 from repro.nn.transformer import apply_stack, init_stack, init_stack_cache
@@ -51,17 +57,28 @@ class Runtime:
     W8A8 integer kernel (``kernels/int_matmul.py``) instead of dequant + a
     ``compute_dtype`` dot — the integer-fast serve path the A2Q accumulator
     guarantee makes safe.
+
+    ``int_chain`` (implies ``int_forward``) keeps activations integer
+    *between* deployed linears: producers requantize in their epilogue and
+    pass ``(codes, scale)`` (``nn.linear.IntAct``) to chained consumers;
+    chain-break consumers fold their act-quant into the kernel prologue —
+    zero standalone act-quant dispatches on the serve path.
+    ``chain_report`` holds the per-call-site disposition lists from the most
+    recent forward trace (see ``nn.linear.chain_report_scope``).
     """
 
     def __init__(self, mesh=None, ep_axis=None, rules=None, mla_absorb=False,
-                 grad_compress=None, decode_kernel=False, int_forward=False):
+                 grad_compress=None, decode_kernel=False, int_forward=False,
+                 int_chain=False):
         self.mesh = mesh
         self.ep_axis = ep_axis
         self.rules = rules
         self.mla_absorb = mla_absorb
         self.grad_compress = grad_compress
         self.decode_kernel = decode_kernel
-        self.int_forward = int_forward
+        self.int_forward = int_forward or int_chain
+        self.int_chain = int_chain
+        self.chain_report: dict = {}
 
     def batch_spec(self, ndim: int) -> P:
         if self.rules is None:
@@ -114,7 +131,7 @@ def _head_logits(params, arch: ArchConfig, h: jnp.ndarray, rt: Runtime) -> jnp.n
     else:
         logits = apply_linear(
             params["head"], h, arch.quant, boundary=True, compute_dtype=cd,
-            int_forward=rt.int_forward,
+            int_forward=rt.int_forward, int_chain=rt.int_chain, site="head",
         )
     if rt.mesh is not None:
         batch = rt.rules.rules.get("batch") or ()
@@ -181,23 +198,30 @@ def apply_lm(
 
     penalty = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
-    for i, s in enumerate(arch.stacks):
-        sp = params["stacks"][str(i)]
-        sc = cache.get(str(i)) if cache is not None else None
-        x, nc, pen = apply_stack(
-            sp, x, arch, s, positions, sc,
-            mesh=rt.mesh, ep_axis=rt.ep_axis, mla_absorb=rt.mla_absorb,
-            view=view, decode_kernel=rt.decode_kernel, int_forward=rt.int_forward,
-        )
-        x = constrain(x, rt.mesh, rt.batch_spec(3))
-        if nc is not None:
-            new_cache[str(i)] = nc
-        penalty = penalty + pen
+    # the chain report is (re)populated at trace time: each jitted forward
+    # traces every apply_linear call site once, so after compilation the
+    # report lists exactly what the compiled program dispatches per step
+    with contextlib.ExitStack() as _scope:
+        if rt.int_forward:
+            _scope.enter_context(chain_report_scope(rt.chain_report))
+        for i, s in enumerate(arch.stacks):
+            sp = params["stacks"][str(i)]
+            sc = cache.get(str(i)) if cache is not None else None
+            x, nc, pen = apply_stack(
+                sp, x, arch, s, positions, sc,
+                mesh=rt.mesh, ep_axis=rt.ep_axis, mla_absorb=rt.mla_absorb,
+                view=view, decode_kernel=rt.decode_kernel,
+                int_forward=rt.int_forward, int_chain=rt.int_chain,
+            )
+            x = constrain(x, rt.mesh, rt.batch_spec(3))
+            if nc is not None:
+                new_cache[str(i)] = nc
+            penalty = penalty + pen
 
-    h = apply_norm(params["final_norm"], x, kind=arch.norm, eps=arch.norm_eps)
-    if "head" in params:
-        penalty = penalty + linear_penalty(params["head"], arch.quant, True, True)
-    logits = _head_logits(params, arch, h, rt)
+        h = apply_norm(params["final_norm"], x, kind=arch.norm, eps=arch.norm_eps)
+        if "head" in params:
+            penalty = penalty + linear_penalty(params["head"], arch.quant, True, True)
+        logits = _head_logits(params, arch, h, rt)
     out_cache = new_cache if cache is not None else None
     if return_hidden:
         return logits, out_cache, penalty, h

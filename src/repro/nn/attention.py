@@ -342,6 +342,7 @@ def apply_attention(
     view: Optional[dict] = None,
     decode_kernel: bool = False,
     int_forward: bool = False,
+    int_chain: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     """Returns (output, updated cache).  ``cache`` given => cached step over
     ``T >= 1`` new tokens (decode or chunked prefill).  A paged cache (keys
@@ -349,21 +350,27 @@ def apply_attention(
     ``view``; ``decode_kernel=True`` routes the paged ``T == 1`` read through
     the Pallas paged-attention kernel instead of the gathered-view ``_sdpa``.
     ``int_forward`` routes deployed projections through the fused W8A8 path.
+
+    Every attention projection is a chain break — wq/wk/wv feed rope + the
+    attention core and wo sits behind it — so ``int_chain`` folds each
+    act-quant into the kernel prologue (no int8 handoff between them).
     """
     if a.kind == "mla":
         return _apply_mla(
             params, x, a, q, positions, cache,
             q_chunk=q_chunk, compute_dtype=compute_dtype, absorb=mla_absorb,
             view=view, decode_kernel=decode_kernel, int_forward=int_forward,
+            int_chain=int_chain,
         )
     B, T, D = x.shape
     H, KV, Dh = a.heads, a.kv_heads, a.head_dim
     lin = functools.partial(
-        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+        apply_linear, cfg=q, compute_dtype=compute_dtype,
+        int_forward=int_forward, int_chain=int_chain,
     )
-    qh = lin(params["wq"], x=x).reshape(B, T, H, Dh)
-    kh = lin(params["wk"], x=x).reshape(B, T, KV, Dh)
-    vh = lin(params["wv"], x=x).reshape(B, T, KV, Dh)
+    qh = lin(params["wq"], x=x, site="attn.wq").reshape(B, T, H, Dh)
+    kh = lin(params["wk"], x=x, site="attn.wk").reshape(B, T, KV, Dh)
+    vh = lin(params["wv"], x=x, site="attn.wv").reshape(B, T, KV, Dh)
     if a.rope_theta is not None:
         qh = apply_rope(qh, positions, a.rope_theta)
         kh = apply_rope(kh, positions, a.rope_theta)
@@ -432,7 +439,7 @@ def apply_attention(
             causal=a.causal, window=a.window, chunk=a.chunk, q_chunk=q_chunk,
         )
     out = out.reshape(B, T, H * Dh)
-    return lin(params["wo"], x=out), new_cache
+    return lin(params["wo"], x=out, site="attn.wo"), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -454,20 +461,24 @@ def _apply_mla(
     view: Optional[dict] = None,
     decode_kernel: bool = False,
     int_forward: bool = False,
+    int_chain: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     B, T, D = x.shape
     H = a.heads
     nope, rope, vd = a.qk_nope_dim, a.qk_rope_dim, a.v_head_dim
+    # All MLA projections are chain breaks: norms, rope, reshapes, and the
+    # attention core sit between every producer/consumer pair.
     lin = functools.partial(
-        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+        apply_linear, cfg=q, compute_dtype=compute_dtype,
+        int_forward=int_forward, int_chain=int_chain,
     )
 
-    cq = apply_norm(params["q_norm"], lin(params["wq_a"], x=x))
-    qh = lin(params["wq_b"], x=cq).reshape(B, T, H, nope + rope)
+    cq = apply_norm(params["q_norm"], lin(params["wq_a"], x=x, site="mla.wq_a"))
+    qh = lin(params["wq_b"], x=cq, site="mla.wq_b").reshape(B, T, H, nope + rope)
     q_nope, q_pe = qh[..., :nope], qh[..., nope:]
     q_pe = apply_rope(q_pe, positions, a.rope_theta or 10000.0)
 
-    kv_a = lin(params["wkv_a"], x=x)
+    kv_a = lin(params["wkv_a"], x=x, site="mla.wkv_a")
     ckv = apply_norm(params["kv_norm"], kv_a[..., : a.kv_lora_rank])
     kpe = kv_a[..., a.kv_lora_rank :].reshape(B, T, 1, rope)
     kpe = apply_rope(kpe, positions, a.rope_theta or 10000.0).reshape(B, T, rope)
@@ -550,11 +561,11 @@ def _apply_mla(
             o_lat = jnp.einsum("bths,bsl->bthl", p, ckv_all.astype(jnp.float32))
         out = jnp.einsum("bthl,lhv->bthv", o_lat, w_v.astype(jnp.float32))
         out = out.astype(compute_dtype).reshape(B, T, H * vd)
-        return lin(params["wo"], x=out), cache
+        return lin(params["wo"], x=out, site="mla.wo"), cache
 
     # Materialized path (paper-faithful baseline): expand per-head K/V.
     S = ckv_all.shape[1]
-    kv = lin(wkv_b, x=ckv_all).reshape(B, S, H, nope + vd)
+    kv = lin(wkv_b, x=ckv_all, site="mla.wkv_b").reshape(B, S, H, nope + vd)
     k_nope, v = kv[..., :nope], kv[..., nope:]
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(kpe_all[:, :, None, :], (B, S, H, rope))], axis=-1
@@ -565,7 +576,7 @@ def _apply_mla(
         causal=a.causal, window=None, chunk=None, q_chunk=q_chunk,
     )
     out = out.reshape(B, T, H * vd)
-    return lin(params["wo"], x=out), cache
+    return lin(params["wo"], x=out, site="mla.wo"), cache
 
 
 def _mla_up_matrix(wkv_b_params: dict, a: AttnConfig, q: QuantConfig) -> jnp.ndarray:

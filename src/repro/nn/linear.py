@@ -27,11 +27,37 @@ W8A8 kernel (``kernels/int_matmul.py``), with the int16 partial-sum spill
 engaged automatically when the layer's A2Q ``acc_bits <= 16`` — the paper's
 guarantee is exactly what makes both the integer accumulation and the narrow
 carry safe on the serve path.
+
+Int8-out chaining (``int_chain=True`` / ``--int-chain``): deployed layers
+pass integer activations directly instead of round-tripping through fp32
+between every pair of linears.
+
+* A producer whose consumer is chain-eligible (``chain_out_aq`` returns the
+  consumer's quantizer descriptor) requantizes in its own epilogue and
+  returns an :class:`IntAct` — ``(codes int8, scale, bits, signed)`` —
+  killing the consumer's standalone act-quant dispatch *and* the fp32
+  activation materialization between them.
+* At chain-break points (residual adds, norms, attention cores — anywhere
+  the fp32 value is needed) the consumer instead folds its act-quant into
+  the kernel *prologue* (``aq_scale``): the fp32 input is quantized
+  in-register, so no deployed linear anywhere on the serve path pays a
+  standalone act-quant dispatch.
+* Unsigned 8-bit activations (rwkv6's post-relu² channel-mix ``wv``) ride
+  the fused path via signed symmetrization: codes travel as ``q - 128`` and
+  the kernel adds ``128 * colsum(w)`` back at flush — exact in int32.
+
+Every apply_linear call site reports its disposition (``folded`` /
+``chained`` / ``standalone`` / ``fallback``) into the active
+``chain_report_scope`` at trace time; the serve engine exposes the counts as
+stats-contract fields (``int_chain_requant_dispatches`` must be 0 when
+chaining is on — CI-gated).
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+import contextlib
+import warnings
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +81,91 @@ __all__ = [
     "deploy_linear",
     "init_conv",
     "apply_conv",
+    "IntAct",
+    "chain_out_aq",
+    "chain_report_scope",
 ]
+
+
+class IntAct(NamedTuple):
+    """A chained integer activation: the ``(codes, scale)`` convention.
+
+    ``codes`` are int8 with the layer-output shape; unsigned-domain codes
+    (``signed=False, bits=8``) are stored *symmetrized* (``true_code - 128``)
+    so they always fit the int8 MXU operand — the consuming kernel adds the
+    ``128 * colsum(w)`` correction at flush.  ``scale`` is the (per-tensor)
+    activation scale the codes were quantized with, i.e. the *consumer's*
+    ``exp2(aq.log2_scale)``.
+    """
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int
+    signed: bool
+
+
+def _int_act_to_fp(a: IntAct, dtype) -> jnp.ndarray:
+    """Re-materialize an IntAct to floating point (chain-repair fallback)."""
+    q = a.codes.astype(jnp.float32)
+    if not a.signed and a.bits == 8:
+        q = q + 128.0
+    return (q * a.scale).astype(dtype)
+
+
+# --- chain-report collector ------------------------------------------------
+#
+# apply_linear has no Runtime handle, so call-site dispositions are collected
+# through a module-level scope stack.  The scope is entered around a model
+# forward (models/lm.apply_lm) and populated at *trace* time — a jitted
+# forward traces each call site exactly once (the decode megastep's lax.scan
+# included), so the lists are per-dispatch-site counts of what the compiled
+# program actually launches.
+
+_ACTIVE_REPORT: list = []
+_WARNED: set = set()
+
+
+def _fresh_report() -> dict:
+    return {"folded": [], "chained": [], "standalone": [], "fallback": []}
+
+
+@contextlib.contextmanager
+def chain_report_scope(report: dict):
+    """Collect apply_linear dispositions into ``report`` (cleared on entry).
+
+    ``folded``     — act-quant ran inside the fused kernel (prologue or a
+                     chained IntAct consumption): zero standalone dispatches.
+    ``chained``    — the layer requantized in its epilogue and emitted int8
+                     codes for its consumer.
+    ``standalone`` — a deployed layer paid a separate act-quant dispatch
+                     before the fused kernel (the unchained int-forward
+                     baseline; must be empty under ``int_chain``).
+    ``fallback``   — the fused path was unavailable (non-deployed params,
+                     unsupported weight rank, MoE ragged experts, ...).
+    """
+    report.clear()
+    report.update(_fresh_report())
+    _ACTIVE_REPORT.append(report)
+    try:
+        yield report
+    finally:
+        _ACTIVE_REPORT.pop()
+
+
+def _record(kind: str, site: str):
+    if _ACTIVE_REPORT:
+        _ACTIVE_REPORT[-1][kind].append(site)
+
+
+def _warn_fallback_once(site: str, reason: str):
+    key = (site, reason)
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(
+            f"int_forward fallback at {site or '<unlabeled linear>'}: {reason} "
+            "(dequant path; counted in the chain report)",
+            stacklevel=3,
+        )
 
 
 def _bits(cfg: QuantConfig, boundary: bool) -> tuple[int, int]:
@@ -112,7 +222,9 @@ def init_linear(
 def _quant_weights(params: dict, cfg: QuantConfig, boundary: bool, input_signed: bool):
     M, N = _bits(cfg, boundary)
     if "q8" in params:  # deployed int8 storage (beyond-paper serve lever)
-        return params["q8"].astype(jnp.float32) * params["s8"]
+        # s8 is per-output-channel; stacked leaves carry leading batch dims
+        # (q8 (..., K, N), s8 (..., N)), so align it explicitly
+        return params["q8"].astype(jnp.float32) * params["s8"][..., None, :]
     if cfg.mode == "none":
         return params["w"]
     if cfg.mode == "qat":
@@ -128,75 +240,207 @@ def _quant_weights(params: dict, cfg: QuantConfig, boundary: bool, input_signed:
     raise ValueError(cfg.mode)
 
 
-def _int_forward_applicable(params: dict, N: int, input_signed: bool) -> bool:
-    """The fused W8A8 path needs deployed int8 storage, an activation
-    quantizer to produce the int8 operand, an int8-representable act code
-    range — signed ``N <= 8`` ([-128, 127]) or unsigned ``N <= 7`` ([0, 127];
-    unsigned 8-bit codes reach 255 and would wrap the int8 operand, so e.g.
-    the rwkv6 channel-mix ``wv`` after squared-relu stays on the dequant
-    path) — and an unstacked (2D) weight: vmapped expert/layer stacks keep
-    the dequant path (a ``pallas_call`` has no batching rule here)."""
-    if "q8" not in params or "aq" not in params or params["q8"].ndim != 2:
-        return False
-    return N <= 8 if input_signed else N <= 7
+def _int_forward_mode(params: dict, x, N: int) -> str:
+    """How this call can take the fused W8A8 path: ``'fused'`` (2D weights),
+    ``'vmap'`` (stacked 3D weight leaves batched over the kernel — the
+    leading axes of ``x`` and ``q8`` must line up), or ``''`` (dequant
+    fallback).  Needs deployed int8 storage, an activation quantizer to
+    produce the int8 operand, and ``N <= 8`` — unsigned 8-bit codes ride via
+    signed symmetrization (``q - 128`` + the colsum correction at flush), so
+    the old ``N <= 7`` unsigned restriction is gone."""
+    if "q8" not in params or "aq" not in params or N > 8:
+        return ""
+    q8 = params["q8"]
+    if q8.ndim == 2:
+        return "fused"
+    xc = x.codes if isinstance(x, IntAct) else x
+    if q8.ndim == 3 and xc.ndim >= 3 and xc.shape[0] == q8.shape[0]:
+        return "vmap"
+    return ""
+
+
+def chain_out_aq(
+    consumer: dict,
+    cfg: QuantConfig,
+    *,
+    boundary: bool = False,
+    input_signed: bool = True,
+    act_fn: Optional[str] = None,
+) -> Optional[dict]:
+    """The *consumer's* activation-quantizer descriptor, if the producer can
+    requantize into it (int8-out chaining).  ``None`` means the edge is a
+    chain break — the consumer is not deployed / not fusable — detected
+    statically from the deployed params, so the producer emits fp32 and the
+    consumer falls back to its own (prologue) quantization.
+
+    ``act_fn`` names the elementwise activation sitting *between* the two
+    linears (``'relu2'`` / ``'gelu'`` / ``None``); the producer's epilogue
+    replays it bit-exactly before requantizing.
+    """
+    N = _bits(cfg, boundary)[1]
+    if "q8" not in consumer or "aq" not in consumer or N > 8:
+        return None
+    if consumer["q8"].ndim != 2:
+        return None
+    return {
+        "log2_scale": consumer["aq"]["log2_scale"],
+        "bits": N,
+        "signed": input_signed,
+        "act_fn": act_fn,
+    }
 
 
 def _apply_linear_int8(
     params: dict,
-    x: jnp.ndarray,
+    x,
     cfg: QuantConfig,
     *,
     boundary: bool,
     input_signed: bool,
     compute_dtype,
-) -> jnp.ndarray:
-    """Fused W8A8 forward: one ``pallas_call`` from int8 activations to the
-    scaled output.  The activation scale folds into the per-channel weight
-    scale, so the epilogue is a single per-column fp32 rescale (+ bias); the
-    int16 partial-sum spill engages when A2Q guarantees ``acc_bits <= 16``.
+    int_chain: bool = False,
+    out_aq: Optional[dict] = None,
+    site: str = "",
+):
+    """Fused W8A8 forward: one ``pallas_call`` from activations to output.
+    The activation scale folds into the per-channel weight scale, so the
+    epilogue is a single per-column fp32 rescale (+ bias); the int16
+    partial-sum spill engages when A2Q guarantees ``acc_bits <= 16``.
+
+    Chaining changes where the activation quantizer runs:
+
+    * ``x`` is an :class:`IntAct` — the producer already requantized; the
+      codes feed the kernel directly (``folded``: no dispatch at all here).
+    * ``int_chain`` and ``x`` is fp — the quantizer folds into the kernel
+      *prologue* (``folded``).
+    * plain ``int_forward`` — the quantizer runs as its own dispatch ahead
+      of the kernel (``standalone``), with unsigned 8-bit codes symmetrized
+      into the int8 operand.
+
+    With ``out_aq`` (the consumer's quantizer) the epilogue requantizes and
+    the call returns an :class:`IntAct` instead of a float array.
     """
     from repro.kernels import ops
 
     M, N = _bits(cfg, boundary)
-    xq, x_scale = act_quant_int(
-        {"log2_scale": params["aq"]["log2_scale"]},
-        x.astype(jnp.float32), N, signed=input_signed,
-    )
-    K = x.shape[-1]
     a2q = cfg.mode == "a2q"
-    y = ops.int_matmul(
-        xq.astype(jnp.int8).reshape(-1, K),
-        params["q8"],
+    kw = dict(
         acc_bits=cfg.acc_bits if a2q else 32,
         mode="exact",
         spill_int16=a2q and cfg.acc_bits <= 16,
-        scale=x_scale * params["s8"].astype(jnp.float32),
         bias=params.get("b"),
     )
-    return y.reshape(*x.shape[:-1], y.shape[-1]).astype(compute_dtype)
+    if out_aq is not None:
+        kw.update(
+            out_scale=jnp.exp2(out_aq["log2_scale"].astype(jnp.float32)),
+            out_bits=out_aq["bits"],
+            out_signed=out_aq["signed"],
+            act_fn=out_aq["act_fn"],
+            cast_dtype=compute_dtype,
+        )
+    s8 = params["s8"].astype(jnp.float32)
+    if isinstance(x, IntAct):
+        # chained handoff: the producer quantized into *this* layer's aq
+        _record("folded", site)
+        codes, x_scale = x.codes, x.scale
+        K = codes.shape[-1]
+        lead = codes.shape[:-1]
+        y = ops.int_matmul(
+            codes.reshape(-1, K), params["q8"],
+            scale=x_scale * s8, in_bits=x.bits, in_signed=x.signed, **kw,
+        )
+    elif int_chain:
+        # chain break: fold the act-quant into the kernel prologue
+        _record("folded", site)
+        x_scale = jnp.exp2(params["aq"]["log2_scale"].astype(jnp.float32))
+        K = x.shape[-1]
+        lead = x.shape[:-1]
+        y = ops.int_matmul(
+            x.astype(jnp.float32).reshape(-1, K), params["q8"],
+            scale=x_scale * s8, aq_scale=x_scale,
+            in_bits=N, in_signed=input_signed, **kw,
+        )
+    else:
+        # unchained int forward: the act-quant is its own dispatch
+        _record("standalone", site)
+        xq, x_scale = act_quant_int(
+            {"log2_scale": params["aq"]["log2_scale"]},
+            x.astype(jnp.float32), N, signed=input_signed,
+        )
+        if not input_signed and N == 8:
+            xq = xq - 128.0  # symmetrize u8 codes into the int8 operand
+        K = x.shape[-1]
+        lead = x.shape[:-1]
+        y = ops.int_matmul(
+            xq.astype(jnp.int8).reshape(-1, K), params["q8"],
+            scale=x_scale * s8, in_bits=N, in_signed=input_signed, **kw,
+        )
+    if out_aq is not None:
+        _record("chained", site)
+        return IntAct(
+            codes=y.reshape(*lead, y.shape[-1]),
+            scale=jnp.exp2(out_aq["log2_scale"].astype(jnp.float32)),
+            bits=out_aq["bits"],
+            signed=out_aq["signed"],
+        )
+    return y.reshape(*lead, y.shape[-1]).astype(compute_dtype)
 
 
 def apply_linear(
     params: dict,
-    x: jnp.ndarray,
+    x,
     cfg: QuantConfig,
     *,
     boundary: bool = False,
     input_signed: bool = True,
     compute_dtype=jnp.bfloat16,
     int_forward: bool = False,
-) -> jnp.ndarray:
+    int_chain: bool = False,
+    out_aq: Optional[dict] = None,
+    site: str = "",
+):
     """``y = act_quant(x) @ quant(w) (+ b)`` in ``compute_dtype``.
 
     ``int_forward=True`` on a deployed layer (``q8``/``s8`` present) runs the
     fused W8A8 integer path instead of dequant + ``compute_dtype`` dot.
+    ``int_chain=True`` additionally folds the activation quantizer into the
+    kernel (prologue at chain breaks, the producer's epilogue on chained
+    edges); ``x`` may then be an :class:`IntAct`, and with ``out_aq`` (from
+    :func:`chain_out_aq`) the result is one too.  ``site`` labels this call
+    in the active chain report.
     """
     M, N = _bits(cfg, boundary)
-    if int_forward and _int_forward_applicable(params, N, input_signed):
+    mode = _int_forward_mode(params, x, N) if int_forward else ""
+    if mode == "fused":
         return _apply_linear_int8(
             params, x, cfg,
-            boundary=boundary, input_signed=input_signed, compute_dtype=compute_dtype,
+            boundary=boundary, input_signed=input_signed,
+            compute_dtype=compute_dtype, int_chain=int_chain,
+            out_aq=out_aq, site=site,
         )
+    if mode == "vmap":
+        # stacked weight leaves (vmapped layer stacks): batch the fused
+        # kernel over the leading axis — jax.vmap batches the pallas_call
+        fn = lambda p, xi: _apply_linear_int8(
+            p, xi, cfg,
+            boundary=boundary, input_signed=input_signed,
+            compute_dtype=compute_dtype, int_chain=int_chain, site=site,
+        )
+        return jax.vmap(fn)(params, x)
+    if int_forward and "q8" in params:
+        if "aq" not in params:
+            reason = "no activation quantizer in the deployed params"
+        elif N > 8:
+            reason = f"act bits N={N} > 8"
+        else:
+            reason = (f"stacked weight leaves (rank {params['q8'].ndim}) "
+                      "without a matching batched input")
+        _warn_fallback_once(site, reason)
+        _record("fallback", site)
+    if isinstance(x, IntAct):
+        # chain repair: the consumer can't take codes — re-materialize fp
+        _record("fallback", site)
+        x = _int_act_to_fp(x, compute_dtype)
     if cfg.mode != "none" and "aq" in params:
         x = apply_act_quant(
             {"log2_scale": params["aq"]["log2_scale"]}, x, N, signed=input_signed

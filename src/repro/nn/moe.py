@@ -35,7 +35,13 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import MoEConfig, QuantConfig
 from repro.core.a2q import a2q_norm_cap, apply_a2q, init_a2q
 from repro.core.quantizers import apply_act_quant, init_act_quant
-from repro.nn.linear import apply_linear, init_linear, linear_penalty
+from repro.nn.linear import (
+    apply_linear,
+    init_linear,
+    linear_penalty,
+    _record,
+    _warn_fallback_once,
+)
 from repro.nn.module import box, kaiming
 
 __all__ = ["init_moe", "apply_moe", "moe_penalty"]
@@ -170,8 +176,19 @@ def apply_moe(
     ep_axis: Optional[str] = None,
     mesh=None,
     compute_dtype=jnp.bfloat16,
+    int_forward: bool = False,
+    int_chain: bool = False,
 ) -> jnp.ndarray:
     B, T, d = x.shape
+    if int_forward and "q8" in params.get("w_in", {}):
+        # Routed experts run ragged_dot over the dequantized 3D weight view;
+        # there is no fused integer path here, so the entry act-quant stays a
+        # dequant-style fallback in the chain report (never "standalone").
+        _record("fallback", "moe.experts")
+        _warn_fallback_once(
+            "moe.experts",
+            "ragged expert dispatch keeps the dequantized weight view",
+        )
     if q.mode != "none" and "aq" in params:
         x = apply_act_quant({"log2_scale": params["aq"]["log2_scale"]}, x, q.act_bits, signed=True)
     x2d = x.reshape(B * T, d)
@@ -248,10 +265,17 @@ def apply_moe(
 
     out = out2d.reshape(B, T, d)
     if "shared_in" in params:
-        lin = functools.partial(apply_linear, cfg=q, compute_dtype=compute_dtype)
-        h = jax.nn.silu(lin(params["shared_gate"], x=x).astype(jnp.float32)).astype(compute_dtype)
-        h = h * lin(params["shared_in"], x=x)
-        out = out + lin(params["shared_out"], x=h)
+        # Shared experts are plain 2D linears; the silu gate makes every one a
+        # chain break, but they still ride the fused int path when deployed.
+        lin = functools.partial(
+            apply_linear, cfg=q, compute_dtype=compute_dtype,
+            int_forward=int_forward, int_chain=int_chain,
+        )
+        h = jax.nn.silu(
+            lin(params["shared_gate"], x=x, site="moe.shared_gate").astype(jnp.float32)
+        ).astype(compute_dtype)
+        h = h * lin(params["shared_in"], x=x, site="moe.shared_in")
+        out = out + lin(params["shared_out"], x=h, site="moe.shared_out")
     return out
 
 

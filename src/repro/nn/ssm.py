@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import QuantConfig, SSMConfig
-from repro.nn.linear import apply_linear, init_linear
+from repro.nn.linear import IntAct, apply_linear, chain_out_aq, init_linear
 from repro.nn.module import box, normal_init
 
 __all__ = [
@@ -232,28 +232,35 @@ def apply_rwkv6_timemix(
     *,
     compute_dtype=jnp.bfloat16,
     int_forward: bool = False,
+    int_chain: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     """state = {'S': (B,H,Dk,Dv), 'shift': (B,1,d)} for decode; None = parallel.
 
     With a state, ``T`` may exceed 1 (chunked prefill): the recurrence starts
     from the carried ``S`` and the updated state reflects all ``T`` steps, so
     feeding a prompt in chunks is equivalent to feeding it token by token.
+
+    Every time-mix projection is a chain break (wr/wk/wv/wg consume distinct
+    token-shift mixes of the fp input; wo sits behind the groupnorm + silu
+    gate), so under ``int_chain`` each folds its act-quant into the kernel
+    prologue — no int8 handoff exists inside this mixer.
     """
     B, T, D = x.shape
     Dk = ssm.head_dim
     H = D // Dk
     lin = functools.partial(
-        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+        apply_linear, cfg=q, compute_dtype=compute_dtype,
+        int_forward=int_forward, int_chain=int_chain,
     )
     last = state["shift"] if state is not None else None
     xs, new_shift = _token_shift(x, last)
     mix = params["mix"].astype(x.dtype)
     xr, xk, xv, xg, xw = (x + mix[i] * (xs - x) for i in range(5))
     to_heads = lambda t: t.reshape(B, T, H, Dk).transpose(0, 2, 1, 3)
-    r = to_heads(lin(params["wr"], x=xr))
-    k = to_heads(lin(params["wk"], x=xk))
-    v = to_heads(lin(params["wv"], x=xv))
-    g = lin(params["wg"], x=xg)
+    r = to_heads(lin(params["wr"], x=xr, site="tm.wr"))
+    k = to_heads(lin(params["wk"], x=xk, site="tm.wk"))
+    v = to_heads(lin(params["wv"], x=xv, site="tm.wv"))
+    g = lin(params["wg"], x=xg, site="tm.wg")
     lora = jnp.tanh(xw.astype(jnp.float32) @ params["w_lora_a"].astype(jnp.float32))
     dd = lora @ params["w_lora_b"].astype(jnp.float32)
     w = jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32) + dd))  # (B,T,D) in (0,1)
@@ -281,7 +288,7 @@ def apply_rwkv6_timemix(
     yf = (yf - yf.mean(-1, keepdims=True)) * (yf.var(-1, keepdims=True) + 1e-5) ** -0.5
     y = (yf.reshape(B, T, D) * params["ln_scale"].astype(jnp.float32)).astype(compute_dtype)
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype)
-    return lin(params["wo"], x=y), new_state
+    return lin(params["wo"], x=y, site="tm.wo"), new_state
 
 
 def init_rwkv6_channelmix(key, d_model: int, d_ff: int, q: QuantConfig) -> dict:
@@ -301,16 +308,25 @@ def apply_rwkv6_channelmix(
     *,
     compute_dtype=jnp.bfloat16,
     int_forward: bool = False,
+    int_chain: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
+    """``wk -> relu² -> wv`` is the archetypal int8 chain: under ``int_chain``
+    wk squares-relus the rescaled accumulator in its own epilogue and
+    requantizes straight into wv's (unsigned) quantizer — the codes cross as
+    an ``IntAct`` and no fp32 activation is ever materialized between them."""
     lin = functools.partial(
-        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+        apply_linear, cfg=q, compute_dtype=compute_dtype,
+        int_forward=int_forward, int_chain=int_chain,
     )
     last = state["shift"] if state is not None else None
     xs, new_shift = _token_shift(x, last)
     xk = x + params["mix"].astype(x.dtype) * (xs - x)
-    h = lin(params["wk"], x=xk)
-    h = jnp.square(jax.nn.relu(h))  # squared-relu: non-negative -> unsigned acts
-    out = lin(params["wv"], x=h, input_signed=False)
+    out_aq = (chain_out_aq(params["wv"], q, input_signed=False, act_fn="relu2")
+              if int_chain else None)
+    h = lin(params["wk"], x=xk, site="cm.wk", out_aq=out_aq)
+    if not isinstance(h, IntAct):
+        h = jnp.square(jax.nn.relu(h))  # squared-relu: non-negative -> unsigned acts
+    out = lin(params["wv"], x=h, input_signed=False, site="cm.wv")
     return out, ({"shift": new_shift} if state is not None else None)
 
 
@@ -343,21 +359,26 @@ def apply_mamba_heads(
     *,
     compute_dtype=jnp.bfloat16,
     int_forward: bool = False,
+    int_chain: bool = False,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
-    """state = {'S': (B,H,Dh,N)} for decode."""
+    """state = {'S': (B,H,Dh,N)} for decode.  All four projections are chain
+    breaks (the SSD core and the silu gate need fp values), so ``int_chain``
+    folds each act-quant into the kernel prologue only."""
     B, T, D = x.shape
     Dh = ssm.head_dim
     H = D // Dh
     N = ssm.state_dim
     lin = functools.partial(
-        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+        apply_linear, cfg=q, compute_dtype=compute_dtype,
+        int_forward=int_forward, int_chain=int_chain,
     )
-    xz = lin(params["in_proj"], x=x)
+    xz = lin(params["in_proj"], x=x, site="mamba.in_proj")
     xin, z = xz[..., :D], xz[..., D:]
-    bc = lin(params["bc_proj"], x=x).astype(jnp.float32).reshape(B, T, H, 2 * N)
+    bc = lin(params["bc_proj"], x=x, site="mamba.bc_proj").astype(jnp.float32).reshape(B, T, H, 2 * N)
     Bm, Cm = bc[..., :N].transpose(0, 2, 1, 3), bc[..., N:].transpose(0, 2, 1, 3)
     dt = jax.nn.softplus(
-        lin(params["dt_proj"], x=x).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+        lin(params["dt_proj"], x=x, site="mamba.dt_proj").astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
     )  # (B,T,H)
     A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
     a = jnp.exp(dt * A[None, None, :]).transpose(0, 2, 1)  # (B,H,T) decay in (0,1)
@@ -382,4 +403,4 @@ def apply_mamba_heads(
     skip = params["D"].astype(jnp.float32)[None, :, None, :] * xh
     y = (y + skip).transpose(0, 2, 1, 3).reshape(B, T, D).astype(compute_dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype)
-    return lin(params["out_proj"], x=y), new_state
+    return lin(params["out_proj"], x=y, site="mamba.out_proj"), new_state

@@ -26,7 +26,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, QuantConfig, StackConfig
 from repro.nn.attention import apply_attention, attention_penalty, init_attention, init_attn_cache
-from repro.nn.linear import apply_linear, init_linear, linear_penalty
+from repro.nn.linear import (
+    IntAct,
+    apply_linear,
+    chain_out_aq,
+    init_linear,
+    linear_penalty,
+)
 from repro.nn.moe import apply_moe, init_moe, moe_penalty
 from repro.nn.module import unbox, with_layers_axis
 from repro.nn.norms import apply_norm, init_norm
@@ -58,16 +64,29 @@ def _init_mlp(key, d: int, ff: int, q: QuantConfig, gated: bool, use_bias: bool)
     return p
 
 
-def _apply_mlp(p: dict, x, q: QuantConfig, compute_dtype, int_forward: bool = False) -> jnp.ndarray:
+def _apply_mlp(p: dict, x, q: QuantConfig, compute_dtype,
+               int_forward: bool = False, int_chain: bool = False) -> jnp.ndarray:
     lin = functools.partial(
-        apply_linear, cfg=q, compute_dtype=compute_dtype, int_forward=int_forward
+        apply_linear, cfg=q, compute_dtype=compute_dtype,
+        int_forward=int_forward, int_chain=int_chain,
     )
-    h = lin(p["w_in"], x=x)
     if "w_gate" in p:
-        h = jax.nn.silu(lin(p["w_gate"], x=x).astype(jnp.float32)).astype(compute_dtype) * h
-    else:
+        # gated MLP: the silu(gate) * up product is a chain break (an fp
+        # elementwise join of two linears), so every edge quantizes in its
+        # own prologue — no int8 handoff exists here
+        h = lin(p["w_in"], x=x, site="mlp.w_in")
+        h = jax.nn.silu(
+            lin(p["w_gate"], x=x, site="mlp.w_gate").astype(jnp.float32)
+        ).astype(compute_dtype) * h
+        return lin(p["w_out"], x=h, site="mlp.w_out")
+    # non-gated MLP: w_in -> gelu -> w_out is a true producer/consumer chain;
+    # w_in requantizes into w_out's quantizer in its epilogue (gelu replayed
+    # in-register) and hands int8 codes across
+    out_aq = (chain_out_aq(p["w_out"], q, act_fn="gelu") if int_chain else None)
+    h = lin(p["w_in"], x=x, site="mlp.w_in", out_aq=out_aq)
+    if not isinstance(h, IntAct):
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(compute_dtype)
-    return lin(p["w_out"], x=h)
+    return lin(p["w_out"], x=h, site="mlp.w_out")
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +139,7 @@ def _apply_block(
     view: Optional[dict] = None,
     decode_kernel: bool = False,
     int_forward: bool = False,
+    int_chain: bool = False,
 ):
     q = arch.quant
     cd = jnp.dtype(arch.compute_dtype)
@@ -131,31 +151,36 @@ def _apply_block(
             p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
             q_chunk=arch.attn_q_chunk, compute_dtype=cd, mla_absorb=mla_absorb,
             view=view, decode_kernel=decode_kernel, int_forward=int_forward,
+            int_chain=int_chain,
         )
         if c is not None:
             new_cache["attn"] = c
         if s.parallel_block:
             if s.kind == "moe":
-                ffn = apply_moe(p["moe"], h, s.moe, q, ep_axis=ep_axis, mesh=mesh, compute_dtype=cd)
+                ffn = apply_moe(p["moe"], h, s.moe, q, ep_axis=ep_axis, mesh=mesh,
+                                compute_dtype=cd, int_forward=int_forward,
+                                int_chain=int_chain)
             else:
-                ffn = _apply_mlp(p["mlp"], h, q, cd, int_forward)
+                ffn = _apply_mlp(p["mlp"], h, q, cd, int_forward, int_chain)
             x = x + attn_out + ffn
         else:
             x = x + attn_out
             h2 = norm(p["ln2"], x)
             if s.kind == "moe":
-                ffn = apply_moe(p["moe"], h2, s.moe, q, ep_axis=ep_axis, mesh=mesh, compute_dtype=cd)
+                ffn = apply_moe(p["moe"], h2, s.moe, q, ep_axis=ep_axis, mesh=mesh,
+                                compute_dtype=cd, int_forward=int_forward,
+                                int_chain=int_chain)
             else:
-                ffn = _apply_mlp(p["mlp"], h2, q, cd, int_forward)
+                ffn = _apply_mlp(p["mlp"], h2, q, cd, int_forward, int_chain)
             x = x + ffn
     elif s.kind == "rwkv6":
         h = norm(p["ln1"], x)
-        y, c = apply_rwkv6_timemix(p["tm"], h, s.ssm, q, (cache or {}).get("tm"), compute_dtype=cd, int_forward=int_forward)
+        y, c = apply_rwkv6_timemix(p["tm"], h, s.ssm, q, (cache or {}).get("tm"), compute_dtype=cd, int_forward=int_forward, int_chain=int_chain)
         if c is not None:
             new_cache["tm"] = c
         x = x + y
         h2 = norm(p["ln2"], x)
-        y2, c2 = apply_rwkv6_channelmix(p["cm"], h2, q, (cache or {}).get("cm"), compute_dtype=cd, int_forward=int_forward)
+        y2, c2 = apply_rwkv6_channelmix(p["cm"], h2, q, (cache or {}).get("cm"), compute_dtype=cd, int_forward=int_forward, int_chain=int_chain)
         if c2 is not None:
             new_cache["cm"] = c2
         x = x + y2
@@ -165,14 +190,15 @@ def _apply_block(
             p["attn"], h, s.attn, q, positions, (cache or {}).get("attn"),
             q_chunk=arch.attn_q_chunk, compute_dtype=cd,
             view=view, decode_kernel=decode_kernel, int_forward=int_forward,
+            int_chain=int_chain,
         )
         if c is not None:
             new_cache["attn"] = c
-        m_out, cm = apply_mamba_heads(p["mamba"], h, s.ssm, q, (cache or {}).get("mamba"), compute_dtype=cd, int_forward=int_forward)
+        m_out, cm = apply_mamba_heads(p["mamba"], h, s.ssm, q, (cache or {}).get("mamba"), compute_dtype=cd, int_forward=int_forward, int_chain=int_chain)
         if cm is not None:
             new_cache["mamba"] = cm
         x = x + 0.5 * (attn_out + m_out)
-        x = x + _apply_mlp(p["mlp"], norm(p["ln2"], x), q, cd, int_forward)
+        x = x + _apply_mlp(p["mlp"], norm(p["ln2"], x), q, cd, int_forward, int_chain)
     else:
         raise ValueError(s.kind)
 
@@ -240,12 +266,15 @@ def apply_stack(
     view: Optional[dict] = None,
     decode_kernel: bool = False,
     int_forward: bool = False,
+    int_chain: bool = False,
 ):
     """Scan ``s.count`` blocks.  Returns (x, new_cache, total_penalty).
 
     ``view`` (the paged block-table, shared by every layer), ``decode_kernel``
-    and ``int_forward`` (the fused W8A8 serve path) pass straight through to
-    the attention / linear layers.
+    and ``int_forward``/``int_chain`` (the fused W8A8 serve path and its
+    int8-out chaining) pass straight through to the attention / linear
+    layers.  Chained activations never cross a block boundary (every block
+    ends in a residual add — a chain break), so the scan carry stays fp.
     """
 
     def body(carry, layer_in):
@@ -255,6 +284,7 @@ def apply_stack(
             layer_params, xc, arch, s, positions, layer_cache,
             mesh=mesh, ep_axis=ep_axis, mla_absorb=mla_absorb,
             view=view, decode_kernel=decode_kernel, int_forward=int_forward,
+            int_chain=int_chain,
         )
         return xn, (new_cache, pen)
 

@@ -195,7 +195,7 @@ class _StatsMixin:
         st = self.stats
         total_s = st["prefill_s"] + st["decode_s"]
         total_tok = st["prefill_tokens"] + st["decode_tokens"]
-        return {
+        out = {
             **st,
             "prefill_tok_s": st["prefill_tokens"] / st["prefill_s"] if st["prefill_s"] > 0 else 0.0,
             "decode_tok_s": st["decode_tokens"] / st["decode_s"] if st["decode_s"] > 0 else 0.0,
@@ -204,6 +204,17 @@ class _StatsMixin:
                 st["decode_dispatches"] / st["decode_tokens"] if st["decode_tokens"] > 0 else 0.0
             ),
         }
+        rt = getattr(self, "rt", None)
+        if rt is not None and getattr(rt, "int_forward", False):
+            # Trace-time chain report from the last compiled forward: counts of
+            # apply_linear call sites by disposition.  Under --int-chain the
+            # stats contract requires zero standalone act-quant dispatches.
+            rep = getattr(rt, "chain_report", {}) or {}
+            out["int_chain_requant_dispatches"] = len(rep.get("standalone", ()))
+            out["int_chain_folded"] = len(rep.get("folded", ()))
+            out["int_chain_chained"] = len(rep.get("chained", ()))
+            out["int_chain_fallback"] = len(rep.get("fallback", ()))
+        return out
 
 
 class ServeEngine(_StatsMixin):

@@ -138,18 +138,23 @@ def test_int_forward_exact_when_scales_pow2_and_acts_integral():
     np.testing.assert_array_equal(np.asarray(y_deq), np.asarray(y_int))
 
 
-def test_int_forward_rwkv6_unsigned_channelmix_fallback():
+def test_int_forward_rwkv6_unsigned_channelmix_fused():
     """rwkv6's channel-mix ``wv`` consumes unsigned 8-bit acts (post-relu²,
-    codes up to 255 — past the int8 operand) so it must stay on the dequant
-    path while every signed projection runs W8A8: logits still ~ulp-close."""
+    codes up to 255 — past the int8 operand).  It now rides the fused W8A8
+    path via signed symmetrization (codes travel as ``q - 128``, the kernel
+    adds ``128 * colsum(w)`` back at flush — exact in int32): logits stay
+    ~ulp-close AND the chain report shows zero fallback call sites."""
     from repro.models.lm import Runtime
 
     arch = reduced(get_arch("rwkv6-7b"))
     deployed = deploy_params(unbox(init_lm(KEY, arch)), arch.quant)
     toks = jnp.asarray([[5, 1, 3, 2, 7, 6, 9, 8]], jnp.int32)  # T % ssm chunk == 0
     l_deq, _, _ = apply_lm(deployed, arch, tokens=toks)
-    l_int, _, _ = apply_lm(deployed, arch, tokens=toks, rt=Runtime(int_forward=True))
+    rt = Runtime(int_forward=True)
+    l_int, _, _ = apply_lm(deployed, arch, tokens=toks, rt=rt)
     np.testing.assert_allclose(np.asarray(l_deq), np.asarray(l_int), atol=1e-5)
+    assert rt.chain_report["fallback"] == [], rt.chain_report
+    assert "cm.wv" in rt.chain_report["standalone"]  # fused, own act-quant dispatch
 
 
 def test_int_forward_falls_back_off_the_int8_path():

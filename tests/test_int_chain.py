@@ -1,0 +1,308 @@
+"""Int8-out chaining: end-to-end integer activation flow through the fused
+W8A8 serve path.
+
+Layers: the requantizing epilogue (int32 acc -> per-column rescale -> act
+replay -> round/clamp -> int8 codes) is bit-exact vs its jnp oracle for pow2
+AND arbitrary out scales; unsigned 8-bit activations ride via signed
+symmetrization (codes travel as ``q - 128``, the kernel restores
+``128 * colsum(w)`` at flush — exact in int32); the prologue fold
+(``aq_scale``) quantizes fp inputs in-register to the same codes the host
+act-quant dispatch would produce.
+
+Linears: a chained producer->consumer pair (producer requantizes into the
+consumer's quantizer, consumer eats the IntAct codes directly) matches the
+unchained two-dispatch path bitwise under the pow2-scale witness; chain
+repair re-materializes fp32 when the consumer can't take codes; stacked 3D
+weight leaves vmap the fused kernel when the input batch lines up and fall
+back (warning + chain-report entry) when it doesn't.
+
+Engines: chained greedy decode is token-identical to the unchained integer
+fast path across GQA (yi), MLA+MoE (deepseek), and recurrent (rwkv6) archs,
+composes with the fused decode megastep and with speculative drafting, and
+the stats contract holds — zero standalone act-quant dispatches under
+``int_chain``, nonzero without it.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import QuantConfig
+from repro.kernels import ops, ref
+from repro.models.lm import Runtime, init_lm
+from repro.nn.linear import (
+    IntAct,
+    apply_linear,
+    chain_out_aq,
+    chain_report_scope,
+    init_linear,
+)
+from repro.nn.module import unbox
+from repro.serve.engine import PagedServeEngine, deploy_params
+
+KEY = jax.random.PRNGKey(0)
+CFG = QuantConfig(mode="a2q", weight_bits=8, act_bits=8, acc_bits=16)
+
+
+# ---------------------------------------------------------------------------
+# kernel: requantizing epilogue, u8 symmetrization, prologue fold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pow2_scales", [True, False])
+@pytest.mark.parametrize("act_fn", [None, "relu2", "gelu"])
+def test_requant_epilogue_bit_exact_vs_oracle(pow2_scales, act_fn):
+    """acc int32 -> f32 rescale (+bias) -> act replay -> round/clamp -> int8:
+    the kernel and the jnp oracle run the identical f32 op sequence, so the
+    emitted codes match bitwise for ANY scale, pow2 or not."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (16, 64)), jnp.int8)
+    w = jnp.asarray(rng.integers(-16, 16, (64, 32)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.001, 0.1, (32,)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    if pow2_scales:
+        out_scale = jnp.exp2(jnp.asarray(rng.integers(-4, 1, (32,)), jnp.float32))
+    else:
+        out_scale = jnp.asarray(rng.uniform(0.01, 0.5, (32,)), jnp.float32)
+    out_signed = act_fn != "relu2"  # relu2 output is nonnegative -> unsigned
+    got = ops.int_matmul(x, w, scale=scale, bias=bias, out_scale=out_scale,
+                         act_fn=act_fn, out_signed=out_signed, block_k=32)
+    want = ref.ref_int_matmul_requant(x, w, scale, out_scale, bias=bias,
+                                      act_fn=act_fn, out_signed=out_signed)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requant_epilogue_composes_with_int16_spill():
+    """The chaining epilogue must not disturb the A2Q int16 partial-sum
+    spill: small-norm weights, acc_bits=16, requant output still bit-exact."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 8, (8, 32)), jnp.int8)
+    w = jnp.asarray(rng.integers(-2, 3, (32, 16)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.01, 0.1, (16,)), jnp.float32)
+    out_scale = jnp.exp2(jnp.asarray(rng.integers(-3, 0, (16,)), jnp.float32))
+    got = ops.int_matmul(x, w, scale=scale, out_scale=out_scale,
+                         acc_bits=16, spill_int16=True, block_k=32)
+    want = ref.ref_int_matmul_requant(x, w, scale, out_scale, acc_bits=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_unsigned_codes_symmetrize_exactly():
+    """u8 codes in [0, 255] travel as ``q - 128`` int8; the auto-offset
+    ``128 * colsum(w)`` restores the true accumulator in int32 — the fused
+    result equals the direct unsigned dot exactly."""
+    rng = np.random.default_rng(2)
+    q_true = rng.integers(0, 256, (8, 32))  # unsigned codes, past int8
+    w = jnp.asarray(rng.integers(-16, 16, (32, 16)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.001, 0.1, (16,)), jnp.float32)
+    sym = jnp.asarray(q_true - 128, jnp.int8)
+    got = ops.int_matmul(sym, w, scale=scale, in_signed=False, block_k=32)
+    acc = q_true @ np.asarray(w, np.int64)
+    want = acc.astype(np.float32) * np.asarray(scale)[None, :]
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.float32))
+
+
+@pytest.mark.parametrize("signed", [True, False])
+def test_prologue_quant_matches_host_act_quant(signed):
+    """Folding the activation quantizer into the kernel prologue
+    (``aq_scale``) produces the same codes — hence bitwise the same output —
+    as the host act-quant dispatch feeding int8 into the kernel."""
+    from repro.core.quantizers import act_quant_int
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 32)) * 3, jnp.float32)
+    w = jnp.asarray(rng.integers(-16, 16, (32, 16)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.001, 0.1, (16,)), jnp.float32)
+    aq = {"log2_scale": jnp.asarray(-2.0, jnp.float32)}
+    xq, x_scale = act_quant_int(aq, x, 8, signed=signed)
+    if not signed:
+        xq = xq - 128.0
+    want = ops.int_matmul(xq.astype(jnp.int8), w, scale=scale,
+                          in_signed=signed, block_k=32)
+    got = ops.int_matmul(x, w, scale=scale, aq_scale=x_scale,
+                         in_signed=signed, block_k=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# linear: chained pair parity, chain repair, stacked (vmapped) leaves
+# ---------------------------------------------------------------------------
+
+
+def _deployed(rng, d_in, d_out, log2_scale=0.0):
+    """Pow2-witness deployed layer: integral products stay exact in f32."""
+    return {
+        "q8": jnp.asarray(rng.integers(-16, 16, (d_in, d_out)), jnp.int8),
+        "s8": jnp.exp2(jnp.asarray(rng.integers(-6, -2, (d_out,)), jnp.float32)),
+        "aq": {"log2_scale": jnp.asarray(log2_scale, jnp.float32)},
+    }
+
+
+def test_chained_pair_token_exact_pow2_witness():
+    """producer -> relu2 -> consumer: the chained path (epilogue requant ->
+    IntAct -> codes straight into the consumer) equals the unchained path
+    (fp out, host act-quant, second kernel) bitwise under pow2 scales."""
+    rng = np.random.default_rng(4)
+    prod = _deployed(rng, 32, 48)
+    cons = _deployed(rng, 48, 16, log2_scale=2.0)
+    x = jnp.asarray(rng.integers(-20, 20, (4, 32)), jnp.float32)
+    kw = dict(cfg=CFG, compute_dtype=jnp.float32, int_forward=True)
+
+    h = apply_linear(prod, x, **kw)
+    h = jnp.square(jax.nn.relu(h))
+    want = apply_linear(cons, h, input_signed=False, **kw)
+
+    out_aq = chain_out_aq(cons, CFG, input_signed=False, act_fn="relu2")
+    assert out_aq is not None
+    hq = apply_linear(prod, x, out_aq=out_aq, int_chain=True, **kw)
+    assert isinstance(hq, IntAct) and not hq.signed
+    got = apply_linear(cons, hq, input_signed=False, int_chain=True, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prologue_fold_token_exact_at_chain_break():
+    """At a chain break the consumer quantizes in the kernel prologue: same
+    output as the standalone act-quant dispatch, and the chain report logs
+    it as folded, not standalone."""
+    rng = np.random.default_rng(5)
+    dep = _deployed(rng, 32, 48)
+    x = jnp.asarray(rng.integers(-20, 20, (4, 32)), jnp.float32)
+    kw = dict(cfg=CFG, compute_dtype=jnp.float32, int_forward=True)
+    rep: dict = {}
+    with chain_report_scope(rep):
+        want = apply_linear(dep, x, site="a", **kw)
+        got = apply_linear(dep, x, site="b", int_chain=True, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert rep["standalone"] == ["a"] and rep["folded"] == ["b"]
+
+
+def test_chain_repair_rematerializes_fp():
+    """An IntAct reaching a non-deployed consumer is re-materialized to fp
+    (codes * scale, unsigned un-symmetrized) — output matches feeding the
+    equivalent fp activation, and the report counts a fallback."""
+    rng = np.random.default_rng(6)
+    p = unbox(init_linear(KEY, 48, 16, CFG))
+    codes = jnp.asarray(rng.integers(0, 256, (4, 48)) - 128, jnp.int8)
+    a = IntAct(codes=codes, scale=jnp.asarray(0.25, jnp.float32), bits=8, signed=False)
+    x_fp = (codes.astype(jnp.float32) + 128.0) * 0.25
+    rep: dict = {}
+    with chain_report_scope(rep):
+        got = apply_linear(p, a, cfg=CFG, compute_dtype=jnp.float32,
+                           input_signed=False, int_chain=True, site="repair")
+    want = apply_linear(p, x_fp, cfg=CFG, compute_dtype=jnp.float32,
+                        input_signed=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert "repair" in rep["fallback"]
+
+
+def test_stacked_weight_leaves_vmap_the_fused_kernel():
+    """3D q8 (E, K, N) with a matching batched input (E, M, K) batches the
+    fused kernel via vmap — per-slice output equals running each expert's 2D
+    layer through the int path directly."""
+    rng = np.random.default_rng(7)
+    E = 3
+    slices = [_deployed(rng, 32, 16) for _ in range(E)]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *slices)
+    x = jnp.asarray(rng.integers(-20, 20, (E, 4, 32)), jnp.float32)
+    kw = dict(cfg=CFG, compute_dtype=jnp.float32, int_forward=True)
+    got = apply_linear(stacked, x, **kw)
+    for e in range(E):
+        want = apply_linear(slices[e], x[e], **kw)
+        np.testing.assert_array_equal(np.asarray(got[e]), np.asarray(want))
+
+
+def test_stacked_weight_leaves_without_batched_input_fall_back():
+    """3D q8 with a 2D input can't ride the fused kernel: one structured
+    warning, a chain-report fallback entry, and dequant-path output."""
+    rng = np.random.default_rng(8)
+    slices = [_deployed(rng, 32, 16) for _ in range(2)]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *slices)
+    # stacked experts share one activation quantizer (the MoE layout)
+    stacked["aq"] = {"log2_scale": jnp.asarray(0.0, jnp.float32)}
+    x = jnp.asarray(rng.integers(-20, 20, (4, 32)), jnp.float32)
+    rep: dict = {}
+    import repro.nn.linear as linmod
+
+    linmod._WARNED.clear()
+    with chain_report_scope(rep):
+        with warnings.catch_warnings(record=True) as wlist:
+            warnings.simplefilter("always")
+            got = apply_linear(stacked, x, cfg=CFG, compute_dtype=jnp.float32,
+                               int_forward=True, site="stacked")
+    assert any("stacked weight leaves" in str(w.message) for w in wlist)
+    assert rep["fallback"] == ["stacked"]
+    want = apply_linear(stacked, x, cfg=CFG, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# engines: chained == unchained greedy decode; stats contract
+# ---------------------------------------------------------------------------
+
+EKW = dict(batch=2, max_seq=64, block_size=8, prefill_chunk=8)
+
+
+def _arch_and_deployed(name):
+    arch = reduced(get_arch(name))
+    return arch, deploy_params(unbox(init_lm(KEY, arch)), arch.quant)
+
+
+def _prompts(arch, lens=(6, 4, 9), seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, arch.vocab, (n,)).astype(np.int32) for n in lens]
+
+
+@pytest.mark.parametrize("name", ["yi-6b", "deepseek-v3-671b", "rwkv6-7b"])
+def test_chained_decode_token_identical_and_stats_contract(name):
+    """Chaining is a pure dispatch fusion over the integer fast path: greedy
+    tokens identical to unchained int-forward decode on GQA, MLA+MoE and
+    recurrent archs, with zero standalone act-quant dispatches in the
+    chained report and nonzero in the unchained one."""
+    arch, dep = _arch_and_deployed(name)
+    prompts = _prompts(arch)
+    plain = PagedServeEngine(arch, dep, rt=Runtime(int_forward=True), **EKW)
+    want = plain.generate(prompts, max_new=5)
+    chained = PagedServeEngine(arch, dep, rt=Runtime(int_chain=True), **EKW)
+    got = chained.generate(prompts, max_new=5)
+    assert got == want
+    tp_plain, tp_chain = plain.throughput(), chained.throughput()
+    assert tp_plain["int_chain_requant_dispatches"] > 0
+    assert tp_chain["int_chain_requant_dispatches"] == 0
+    assert tp_chain["int_chain_folded"] > 0
+    if name == "rwkv6-7b":  # the relu2 channel-mix is a true int8 chain
+        assert tp_chain["int_chain_chained"] > 0
+
+
+def test_chained_decode_composes_with_megastep():
+    """int_chain under the N-tick fused decode megastep: the lax.scan body
+    carries IntActs only inside a block (chain edges never cross ticks), and
+    tokens stay identical to per-tick chained decode."""
+    arch, dep = _arch_and_deployed("yi-6b")
+    prompts = _prompts(arch, lens=(5, 3, 8), seed=1)
+    tick = PagedServeEngine(arch, dep, rt=Runtime(int_chain=True), **EKW)
+    want = tick.generate(prompts, max_new=6)
+    mega = PagedServeEngine(arch, dep, rt=Runtime(int_chain=True),
+                            decode_steps=8, **EKW)
+    got = mega.generate(prompts, max_new=6)
+    assert got == want
+    assert mega.throughput()["int_chain_requant_dispatches"] == 0
+
+
+def test_chained_draft_composes_with_spec():
+    """Precision-staged drafting with a chained drafter: the draft scan runs
+    the chained W8A8 path, verify keeps the dequant dot — output must stay
+    token-identical to plain decode of the same deployed artifact."""
+    from repro.serve.spec import SpecServeEngine
+
+    arch, dep = _arch_and_deployed("yi-6b")
+    prompts = _prompts(arch, lens=(6, 4), seed=2)
+    plain = PagedServeEngine(arch, dep, **EKW)
+    want = plain.generate(prompts, max_new=5)
+    spec = SpecServeEngine(arch, dep, spec_k=3,
+                           draft_rt=Runtime(int_chain=True), **EKW)
+    assert spec.generate(prompts, max_new=5) == want
+    assert spec.acceptance_rate() > 0
