@@ -39,6 +39,8 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.models.lm import Runtime, init_lm
 from repro.nn.module import unbox
+from repro.obs import Obs, percentile
+from repro.obs.headroom import engine_headroom
 from repro.serve.engine import (
     PagedServeEngine, Request, ServeEngine, deploy_params, parity_up_to_ties,
 )
@@ -46,13 +48,15 @@ from repro.serve.spec import SpecServeEngine
 
 
 def _percentiles(reqs) -> dict:
-    lat = np.asarray([r.latency for r in reqs])
-    ttft = np.asarray([r.ttft for r in reqs])
+    # nearest-rank percentiles through the shared obs helper — the same math
+    # the engines' metrics histograms and the cluster heartbeat report
+    lat = [r.latency for r in reqs]
+    ttft = [r.ttft for r in reqs]
     return {
-        "latency_p50_s": float(np.percentile(lat, 50)),
-        "latency_p99_s": float(np.percentile(lat, 99)),
-        "ttft_p50_s": float(np.percentile(ttft, 50)),
-        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "latency_p50_s": percentile(lat, 50),
+        "latency_p99_s": percentile(lat, 99),
+        "ttft_p50_s": percentile(ttft, 50),
+        "ttft_p99_s": percentile(ttft, 99),
     }
 
 
@@ -152,6 +156,12 @@ def run(
     paged_int = PagedServeEngine(arch, dep, rt=Runtime(int_forward=True), **pkw)
     paged_intc = PagedServeEngine(arch, dep, rt=Runtime(int_chain=True), **pkw)
     paged_px = PagedServeEngine(arch, params, prefix_share=True, **pkw)
+    # the tracing-overhead engine: identical config to the megastep engine
+    # but with span tracing live on every admit/preflight/megastep.  The
+    # obs_overhead headline (untraced / traced decode tok/s) gates that
+    # permanent hot-path instrumentation stays within noise (run.py <= 1.05)
+    paged_megat = PagedServeEngine(arch, params, decode_steps=decode_steps,
+                                   obs=Obs(trace=True), **pkw)
     # pin the workload's common system prefix (same rng draw as _workload):
     # prefilled once here, never evicted, so even the *first* shared-cohort
     # request adopts it — the --pin-prompt serving pattern, benchmarked
@@ -160,7 +170,7 @@ def run(
     spec = (SpecServeEngine(arch, params, spec_k=spec_k, **pkw)
             if spec_ok else None)
     engines = [e for e in (contig, paged, paged_mega, paged_q8, paged_q8m,
-                           paged_int, paged_intc, paged_px, spec)
+                           paged_int, paged_intc, paged_px, paged_megat, spec)
                if e is not None]
     # Warmup pass covers every jit shape (the paged engine compiles one
     # prefill per distinct chunk length), so the timed pass measures
@@ -169,15 +179,12 @@ def run(
     for e in engines[1:]:
         _drive_paged(e, workload())
     for e in engines:
+        # one reset path: engine stats, obs (trace + metrics), and — on the
+        # paged engines — every cache counter, peak_blocks included
         e.reset_stats()
-        if isinstance(e, PagedServeEngine):
-            e.cache.peak_blocks = 0
-            e.cache.prefix_hits = e.cache.prefix_hit_tokens = e.cache.cow_copies = 0
-            e.cache.pool_rebuilds = 0
-            e.cache.bt_full_uploads = e.cache.bt_row_patches = 0
 
-    reqs_c, reqs_p, reqs_m, reqs_q, reqs_qm, reqs_i, reqs_ic, reqs_x = (
-        workload() for _ in range(8))
+    reqs_c, reqs_p, reqs_m, reqs_q, reqs_qm, reqs_i, reqs_ic, reqs_x, reqs_t = (
+        workload() for _ in range(9))
     _drive_contiguous(contig, reqs_c)
     _drive_paged(paged, reqs_p)
     _drive_paged(paged_mega, reqs_m)
@@ -186,6 +193,7 @@ def run(
     _drive_paged(paged_int, reqs_i)
     _drive_paged(paged_intc, reqs_ic)
     _drive_paged(paged_px, reqs_x)
+    _drive_paged(paged_megat, reqs_t)
     reqs_s = None
     if spec is not None:
         reqs_s = workload()
@@ -211,6 +219,10 @@ def run(
     # the chained engine must match the unchained int engine token-for-token
     assert [r.generated for r in reqs_ic] == [r.generated for r in reqs_i], \
         "int8-chained engine diverged from unchained int-forward decode"
+    # tracing is observation only: the traced engine's greedy tokens must be
+    # identical to the untraced megastep engine it mirrors
+    assert [r.generated for r in reqs_t] == [r.generated for r in reqs_m], \
+        "span tracing changed the traced engine's output"
     # int8 KV is lossy: hold it to the parity bound instead of bit equality
     ok, ties, detail = parity_up_to_ties(
         reqs_p, [r.generated for r in reqs_q], eps=0.05
@@ -320,6 +332,24 @@ def run(
         / out["paged_int_forward"]["decode_tok_s"]
         if out["paged_int_forward"]["decode_tok_s"] > 0 else float("inf")
     )
+    # observability headlines (run.py claims): the traced engine's decode
+    # throughput vs its untraced twin (obs_overhead <= 1.05: span tracing on
+    # the dispatch loop costs a clock read + tuple append per span), and the
+    # accumulator-headroom telemetry from the deployed integer engine — max
+    # static L1 utilization must stay < 1.0 (the A2Q guarantee, Eq. 11) with
+    # zero violations across static and observed samples
+    out["paged_megastep_traced"] = _stats_row(paged_megat, reqs_t)
+    out["obs_overhead"] = (
+        out["paged_megastep"]["decode_tok_s"]
+        / out["paged_megastep_traced"]["decode_tok_s"]
+        if out["paged_megastep_traced"]["decode_tok_s"] > 0 else float("inf")
+    )
+    out["obs_trace_events"] = len(paged_megat.obs.trace.events)
+    hr = engine_headroom(paged_int)
+    out["acc_headroom_util_max"] = hr["util_max"]
+    out["acc_headroom_observed_frac_max"] = hr["observed_frac_max"]
+    out["acc_headroom_violations"] = hr["violations"]
+    out["acc_headroom_layers"] = hr["layers"]
     # the prefix-share cliff gate: prefill-dominated latency (TTFT p50) of
     # the sharing engine vs plain paged on the identical workload.  The seed
     # regression was ~13x (a recompile per distinct shared-prefix length);
@@ -357,6 +387,11 @@ def run(
           f"folded {out['paged_int_forward_chained']['int_chain_folded']},"
           f"chained {out['paged_int_forward_chained']['int_chain_chained']},"
           f"decode_ratio_vs_unchained {out['int_chain_decode_ratio']:.2f}")
+    print(f"obs,overhead {out['obs_overhead']:.3f},trace_events "
+          f"{out['obs_trace_events']},headroom_util_max "
+          f"{out['acc_headroom_util_max']:.4f},observed_frac_max "
+          f"{out['acc_headroom_observed_frac_max']:.4f},violations "
+          f"{out['acc_headroom_violations']}")
     print(f"prefix_share,hits {out['prefix_hits']},shared_tokens "
           f"{out['prefix_hit_tokens']},cow_copies {out['prefix_cow_copies']},"
           f"pinned_tokens {out['prefix_pinned_tokens']},"

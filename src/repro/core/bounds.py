@@ -38,6 +38,7 @@ __all__ = [
     "l1_budget",
     "min_accumulator_bits_data_type",
     "min_accumulator_bits_weights",
+    "headroom_utilization",
 ]
 
 
@@ -135,6 +136,23 @@ def l1_budget(P: int, N: int, signed_input: bool):
     if P < 2:
         raise ValueError(f"accumulator width must be >= 2 bits, got P={P}")
     return float(2 ** (P - 1) - 1) * 2.0 ** (int(signed_input) - N)
+
+
+def headroom_utilization(l1_norm: Arrayish, N: int, signed_input: bool, P: int):
+    """Fraction of a P-bit signed accumulator's bound consumed in the worst
+    case by a channel with integer-weight l1 norm ``l1_norm`` and ``N``-bit
+    inputs: ``||w||_1 * 2**(N - 1_signed) / (2**(P-1) - 1)``.
+
+    This is the ratio form of Eq. 11 (the quantity ``verify_no_overflow``
+    compares against 1): utilization <= 1.0 iff overflow is provably
+    impossible in any accumulation order.  The obs layer exports it as the
+    per-layer ``acc_headroom_utilization`` gauge.
+    """
+    if P < 2:
+        raise ValueError(f"accumulator width must be >= 2 bits, got P={P}")
+    mod = jnp if _wants_jnp(l1_norm) else np
+    l1 = mod.asarray(l1_norm, dtype=mod.float64)
+    return l1 * 2.0 ** (N - int(signed_input)) / float(2 ** (P - 1) - 1)
 
 
 def verify_no_overflow(weights_int: np.ndarray, N: int, signed_input: bool, P: int) -> bool:

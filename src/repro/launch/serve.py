@@ -57,6 +57,8 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.models.lm import Runtime, init_lm
 from repro.nn.module import unbox
+from repro.obs import Obs
+from repro.obs.headroom import engine_headroom
 from repro.serve.engine import PagedServeEngine, ServeEngine, deploy_params, parity_up_to_ties
 from repro.serve.sampling import SampleConfig
 
@@ -154,6 +156,12 @@ def main(argv=None):
     ap.add_argument("--parity-eps", type=float, default=None,
                     help="greedy-margin tie tolerance for --parity-check with --kv-int8 "
                          "(default 0.05; lossless configs always compare exactly)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record request-span traces and write Chrome trace-event "
+                         "JSON here (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the unified metrics snapshot (engine + cache + "
+                         "chain + headroom) to this path")
     ap.add_argument("--json", default=None, help="write the stats report to this path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -232,6 +240,8 @@ def main(argv=None):
         args.eos_id = int(ptoks[len(ptoks) // 2])
         print(f"eos-auto: eos_id={args.eos_id} (request 0's token at step {len(ptoks) // 2})")
 
+    obs = Obs(trace=bool(args.trace))
+
     def paged_engine():
         kw = dict(
             batch=args.batch, max_seq=args.max_seq,
@@ -239,7 +249,7 @@ def main(argv=None):
             num_blocks=args.num_blocks, sample=sample, seed=args.seed,
             kv_quant=args.kv_int8, kv_bits=args.kv_bits,
             prefix_share=args.prefix_share,
-            eos_id=args.eos_id, decode_steps=args.decode_steps,
+            eos_id=args.eos_id, decode_steps=args.decode_steps, obs=obs,
             rt=Runtime(decode_kernel=decode_kernel, int_forward=args.int_forward,
                        int_chain=args.int_chain),
         )
@@ -328,6 +338,7 @@ def main(argv=None):
             print(f"parity OK: {len(outs_p)} requests token-identical across engines")
         assert report["paged_engine"]["decode_tok_s"] > 0, "no decode throughput measured"
         outs = outs_p
+        engine = pagede
     elif args.paged:
         engine = paged_engine()
         outs = engine.generate(prompts, max_new=args.max_new)
@@ -357,7 +368,7 @@ def main(argv=None):
         engine = ServeEngine(arch, params, batch=args.batch, max_seq=args.max_seq,
                              rt=Runtime(int_forward=args.int_forward,
                                         int_chain=args.int_chain),
-                             eos_id=args.eos_id)
+                             eos_id=args.eos_id, obs=obs)
         outs = engine.generate(prompts, max_new=args.max_new)
         report["contiguous"] = _report("contiguous", engine)
 
@@ -365,8 +376,26 @@ def main(argv=None):
         report["eos_terminated"] = sum(1 for o in outs if o and o[-1] == args.eos_id)
         print(f"eos: {report['eos_terminated']} of {len(outs)} requests "
               f"terminated on eos_id={args.eos_id}")
+    if args.int_forward:
+        # accumulator-headroom telemetry: static L1 utilization per deployed
+        # layer (the paper's Eq. 11 ratio) plus observed int accumulator
+        # magnitudes sampled through an eager probed forward
+        hr = engine_headroom(engine)
+        report["headroom"] = hr
+        print(f"acc headroom: {hr['layers']} deployed layers, "
+              f"max static utilization {hr['util_max']:.4f}, "
+              f"max observed |acc|/bound {hr['observed_frac_max']:.4f}, "
+              f"{hr['violations']} violations")
     for i, o in enumerate(outs):
         print(f"req {i}: {o}")
+    if args.trace:
+        engine.obs.trace.export(args.trace)
+        print(f"wrote trace ({len(engine.obs.trace.events)} events) to {args.trace}")
+    if args.metrics_json:
+        snap = engine.metrics_snapshot()
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+        print(f"wrote {len(snap)} metrics to {args.metrics_json}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)

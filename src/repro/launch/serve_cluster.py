@@ -130,6 +130,9 @@ def main(argv=None):
     ap.add_argument("--parity-check", action="store_true",
                     help="routed output must be token-identical to one engine")
     ap.add_argument("--parity-eps", type=float, default=0.05)
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the merged fleet metrics view (per-replica "
+                         "snapshots + cluster aggregate) to this path")
     ap.add_argument("--json", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -200,6 +203,7 @@ def main(argv=None):
 
     stats = router.collect_stats()
     agg = aggregate_capacity(stats)
+    fleet = router.fleet_metrics(stats)
     dispatched = {n: st.dispatched for n, st in router.states.items()}
     migrated = sum(s["migrated_blocks_in"] for s in stats.values())
     report = {
@@ -214,10 +218,22 @@ def main(argv=None):
         "served": {n: s["served"] for n, s in stats.items()},
         **agg,
     }
+    report["latency"] = {k: fleet[k] for k in
+                         ("p50_latency_s", "p99_latency_s", "p50_ttft_s", "p99_ttft_s")}
+    report["fleet_requests_completed"] = fleet["requests_completed"]
     print(f"fleet: {agg['total_tokens']} tokens, makespan {agg['makespan_s']:.2f}s "
           f"busiest-replica busy time -> {agg['agg_tok_s']:.1f} tok/s capacity")
     print(f"dispatched per replica: {dispatched} | requeues={router.requeues} "
           f"deaths={router.deaths} migrated_blocks={migrated}")
+    print(f"fleet latency: p50 {fleet['p50_latency_s']:.3f}s "
+          f"p99 {fleet['p99_latency_s']:.3f}s | ttft p50 {fleet['p50_ttft_s']:.3f}s "
+          f"p99 {fleet['p99_ttft_s']:.3f}s "
+          f"({fleet['requests_completed']} completions merged from "
+          f"{len(fleet['per_replica'])} replicas)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(fleet, f, indent=2, sort_keys=True)
+        print(f"wrote fleet metrics to {args.metrics_json}")
 
     if args.parity_check:
         from repro.models.lm import Runtime

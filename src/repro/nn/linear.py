@@ -84,6 +84,7 @@ __all__ = [
     "IntAct",
     "chain_out_aq",
     "chain_report_scope",
+    "acc_probe_scope",
 ]
 
 
@@ -155,6 +156,69 @@ def chain_report_scope(report: dict):
 def _record(kind: str, site: str):
     if _ACTIVE_REPORT:
         _ACTIVE_REPORT[-1][kind].append(site)
+
+
+# --- accumulator-headroom probe --------------------------------------------
+#
+# The A2Q guarantee is proved statically from the deployed weights' l1 norms;
+# this probe makes it *observable*: inside an acc_probe_scope, each eager
+# fused-path call samples the worst partial-sum magnitude its actual integer
+# operands could produce and records it against the layer's accumulator
+# bound.  The serve obs layer (obs/headroom.py) exports the samples as
+# acc_headroom gauges next to the static per-channel utilization report.
+
+_ACTIVE_ACC_PROBE: list = []
+
+
+@contextlib.contextmanager
+def acc_probe_scope(samples: list):
+    """Sample observed accumulator magnitudes from the fused W8A8 path.
+
+    Inside the scope, every *eager* ``_apply_linear_int8`` call appends one
+    record per call site::
+
+        {"site", "acc_max", "acc_bits", "bound", "spill_int16",
+         "in_bits", "in_signed"}
+
+    ``acc_max`` is ``max(|x_codes| @ |q8|)`` over output channels in int64 —
+    an upper bound on the magnitude of *any* partial sum, in any
+    accumulation order, for the actual integer operands (the runtime twin of
+    the paper's Eq. 11 check, which bounds the same quantity by
+    ``||w||_1 * 2**(N - 1_signed)`` over all possible inputs).  Jitted call
+    sites skip the probe (their operands are tracers); ``obs/headroom.py``
+    drives one eager forward to populate it.
+    """
+    samples.clear()
+    _ACTIVE_ACC_PROBE.append(samples)
+    try:
+        yield samples
+    finally:
+        _ACTIVE_ACC_PROBE.pop()
+
+
+def _probe_acc(site, codes, q8, *, in_bits, in_signed, acc_bits, spill_int16,
+               symmetrized=False):
+    if not _ACTIVE_ACC_PROBE:
+        return
+    if isinstance(codes, jax.core.Tracer) or isinstance(q8, jax.core.Tracer):
+        return  # abstract operands (jit/vmap/scan): nothing to sample
+    import numpy as np
+
+    xc = np.asarray(codes, dtype=np.int64)
+    if symmetrized:
+        xc = xc + 128  # stored codes are true - 128 (unsigned-8 ride-along)
+    xc = np.abs(xc).reshape(-1, xc.shape[-1])
+    wq = np.abs(np.asarray(q8, dtype=np.int64))
+    acc_max = int((xc @ wq).max()) if xc.size and wq.size else 0
+    _ACTIVE_ACC_PROBE[-1].append({
+        "site": site,
+        "acc_max": acc_max,
+        "acc_bits": int(acc_bits),
+        "bound": 2 ** (int(acc_bits) - 1) - 1,
+        "spill_int16": bool(spill_int16),
+        "in_bits": int(in_bits),
+        "in_signed": bool(in_signed),
+    })
 
 
 def _warn_fallback_once(site: str, reason: str):
@@ -343,6 +407,9 @@ def _apply_linear_int8(
         # chained handoff: the producer quantized into *this* layer's aq
         _record("folded", site)
         codes, x_scale = x.codes, x.scale
+        _probe_acc(site, codes, params["q8"], in_bits=x.bits, in_signed=x.signed,
+                   acc_bits=kw["acc_bits"], spill_int16=kw["spill_int16"],
+                   symmetrized=not x.signed and x.bits == 8)
         K = codes.shape[-1]
         lead = codes.shape[:-1]
         y = ops.int_matmul(
@@ -353,6 +420,15 @@ def _apply_linear_int8(
         # chain break: fold the act-quant into the kernel prologue
         _record("folded", site)
         x_scale = jnp.exp2(params["aq"]["log2_scale"].astype(jnp.float32))
+        if _ACTIVE_ACC_PROBE and not isinstance(x, jax.core.Tracer):
+            # replay the prologue's quantization so the probe sees the exact
+            # codes the kernel folds in-register
+            xq_p, _ = act_quant_int(
+                {"log2_scale": params["aq"]["log2_scale"]},
+                x.astype(jnp.float32), N, signed=input_signed,
+            )
+            _probe_acc(site, xq_p, params["q8"], in_bits=N, in_signed=input_signed,
+                       acc_bits=kw["acc_bits"], spill_int16=kw["spill_int16"])
         K = x.shape[-1]
         lead = x.shape[:-1]
         y = ops.int_matmul(
@@ -367,6 +443,8 @@ def _apply_linear_int8(
             {"log2_scale": params["aq"]["log2_scale"]},
             x.astype(jnp.float32), N, signed=input_signed,
         )
+        _probe_acc(site, xq, params["q8"], in_bits=N, in_signed=input_signed,
+                   acc_bits=kw["acc_bits"], spill_int16=kw["spill_int16"])
         if not input_signed and N == 8:
             xq = xq - 128.0  # symmetrize u8 codes into the int8 operand
         K = x.shape[-1]

@@ -1,0 +1,39 @@
+"""Unified observability layer for the serve stack.
+
+``Obs`` bundles the two collectors every engine carries:
+
+* ``obs.trace`` — request-span tracer (Chrome trace-event export).
+* ``obs.metrics`` — counter/gauge/histogram registry with one
+  ``snapshot()`` contract.
+
+Engines default to ``Obs(trace=False)``: metrics are always live (they
+back ``--metrics-json`` and the cluster fleet view), tracing is opt-in
+because only the span path touches the per-dispatch hot loop.
+"""
+
+from __future__ import annotations
+
+from repro.obs.metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, merge_snapshots, percentile,
+)
+from repro.obs.trace import NULL_SPAN, Span, Tracer
+
+__all__ = [
+    "Obs", "Tracer", "Span", "NULL_SPAN",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "merge_snapshots", "percentile",
+]
+
+
+class Obs:
+    """Tracer + metrics bundle threaded through the serve stack."""
+
+    def __init__(self, trace: bool = False):
+        self.trace = Tracer(enabled=trace)
+        self.metrics = MetricsRegistry()
+
+    def reset(self) -> None:
+        """Clear collected state (spans + metrics); the single reset path
+        behind every ``reset_stats``."""
+        self.trace.clear()
+        self.metrics.reset()

@@ -1,0 +1,211 @@
+"""Metrics registry: counters / gauges / histograms with labels, one
+``snapshot()`` contract, and associative snapshot merging for the cluster
+fleet view.
+
+The registry absorbs the stack's previously scattered runtime signals —
+engine ``stats``/``throughput()``, paged-cache counters, the int-chain
+report, jit compile counts — behind a single schema:
+
+* **Counter** — monotone accumulator (tokens, dispatches, cache events).
+* **Gauge** — last-written value (utilization, acceptance rate, compile
+  counts, peak block usage).
+* **Histogram** — raw observed values (request latency, TTFT) with
+  nearest-rank percentiles.
+
+Snapshot keys are Prometheus-flavoured: ``name`` or ``name{k=v,...}`` with
+label pairs sorted, so equal metric identities collide by construction.
+Snapshots are plain JSON dicts::
+
+    {"serve_decode_tokens": {"type": "counter", "value": 512.0},
+     "request_latency_s":   {"type": "histogram", "values": [...]},
+     "acc_headroom_utilization{site=blocks.0.attn.wq}":
+                            {"type": "gauge", "value": 0.41}}
+
+``merge_snapshots`` defines the fleet semantics: counters **add**, gauges
+take the **max** (the conservative choice for utilizations, peaks, and
+compile counts), histograms **concatenate** raw values.  All three are
+associative and commutative, so ``replica ⊕ replica == fleet`` regardless
+of arrival order — the property the cluster tests pin.
+
+``percentile`` is the one shared quantile implementation (nearest-rank:
+``rank = ceil(q/100 · n)``), replacing the duplicated ``np.percentile``
+calls in ``serve/cluster/replica.py`` and ``benchmarks/serve_bench.py``.
+Nearest-rank returns an *observed* sample even for tiny n — p99 of 5
+samples is the max, not an interpolated value that no request experienced.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, Iterable, Optional, Sequence
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "percentile", "merge_snapshots",
+]
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile: the smallest observed value with at least
+    ``q`` percent of samples at or below it.  Returns 0.0 on empty input
+    (callers report "no samples yet" as zero latency, matching the engine
+    stats convention)."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    rank = math.ceil(q / 100.0 * len(xs))
+    return float(xs[min(max(rank, 1), len(xs)) - 1])
+
+
+def _key(name: str, labels: Optional[dict]) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    """Monotone accumulator.  ``set`` exists for absorbing externally
+    maintained totals (engine stats dicts) at snapshot time."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+
+class Histogram:
+    """Raw-sample histogram.  The serve workloads observe at most a few
+    thousand requests per run, so storing raw values keeps percentiles
+    exact and merge trivial (concat); a bucketed representation can replace
+    the storage later without changing the snapshot contract."""
+
+    __slots__ = ("values",)
+
+    def __init__(self):
+        self.values: list = []
+
+    def observe(self, value: float) -> None:
+        self.values.append(float(value))
+
+    def percentile(self, q: float) -> float:
+        return percentile(self.values, q)
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+
+class MetricsRegistry:
+    """Get-or-create registry keyed by ``(name, sorted labels)``."""
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, cls, name: str, labels: Optional[dict]):
+        key = _key(name, labels)
+        m = self._metrics.get(key)
+        if m is None:
+            m = cls()
+            self._metrics[key] = m
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {key!r} already registered as {type(m).__name__}")
+        return m
+
+    def counter(self, name: str, labels: Optional[dict] = None) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, labels: Optional[dict] = None) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, labels: Optional[dict] = None) -> Histogram:
+        return self._get(Histogram, name, labels)
+
+    def reset(self) -> None:
+        self._metrics.clear()
+
+    # -- snapshot contract --------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """JSON-serializable view of every registered metric."""
+        out = {}
+        for key, m in sorted(self._metrics.items()):
+            if isinstance(m, Counter):
+                out[key] = {"type": "counter", "value": m.value}
+            elif isinstance(m, Gauge):
+                out[key] = {"type": "gauge", "value": m.value}
+            else:
+                out[key] = {"type": "histogram", "values": list(m.values)}
+        return out
+
+    def load(self, snap: dict) -> None:
+        """Restore metrics from a snapshot (used by the router to park a
+        merged fleet view in a registry for percentile queries)."""
+        for key, entry in snap.items():
+            name, labels = _parse_key(key)
+            if entry["type"] == "counter":
+                self.counter(name, labels).set(entry["value"])
+            elif entry["type"] == "gauge":
+                self.gauge(name, labels).set(entry["value"])
+            else:
+                self.histogram(name, labels).values.extend(entry["values"])
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=2, sort_keys=True)
+
+
+def _parse_key(key: str):
+    if "{" not in key:
+        return key, None
+    name, rest = key.split("{", 1)
+    labels = {}
+    for pair in rest.rstrip("}").split(","):
+        k, v = pair.split("=", 1)
+        labels[k] = v
+    return name, labels
+
+
+def merge_snapshots(*snaps: dict) -> dict:
+    """Fleet merge: counters add, gauges max, histograms concat.
+
+    Each rule is associative and commutative over its value domain, so any
+    grouping/order of replica snapshots yields the same fleet view."""
+    out: dict = {}
+    for snap in snaps:
+        for key, entry in snap.items():
+            cur = out.get(key)
+            if cur is None:
+                out[key] = {
+                    "type": entry["type"],
+                    **({"values": list(entry["values"])} if entry["type"] == "histogram"
+                       else {"value": entry["value"]}),
+                }
+                continue
+            if cur["type"] != entry["type"]:
+                raise TypeError(f"metric {key!r} merged across types "
+                                f"{cur['type']!r} vs {entry['type']!r}")
+            if entry["type"] == "counter":
+                cur["value"] += entry["value"]
+            elif entry["type"] == "gauge":
+                cur["value"] = max(cur["value"], entry["value"])
+            else:
+                cur["values"].extend(entry["values"])
+    return out

@@ -180,7 +180,6 @@ class Replica:
         self.engine = engine if engine is not None else build_engine(cfg)
         self._track: dict = {}  # rid -> (Request, tokens already reported)
         self._pending_prefills: deque = deque()
-        self._latencies: list = []
         self._prev = dict(self.engine.stats)
         self._ewma = {"prefill_tok_s": 0.0, "decode_tok_s": 0.0}
         self.served = 0
@@ -230,9 +229,12 @@ class Replica:
                 return
             self._track[req.uid] = (req, 0)
         elif op == "reset_stats":
+            # one reset path: engine stats + obs (spans, metrics, latency
+            # histograms) + paged-cache counters all clear through
+            # engine.reset_stats — the old per-field clearing here leaked
+            # cache counters across benchmark phases
             self.engine.reset_stats()
             self._prev = dict(self.engine.stats)
-            self._latencies.clear()
             self._ewma = {"prefill_tok_s": 0.0, "decode_tok_s": 0.0}
             self.served = 0
         elif op == "stats":
@@ -245,6 +247,9 @@ class Replica:
                 "migration_bytes_in": cache.migration_bytes_in,
                 "migration_bytes_out": cache.migration_bytes_out,
                 "prefix_hits": cache.prefix_hits,
+                # the full unified snapshot rides along: the router merges
+                # these into the fleet view (merge_snapshots)
+                "metrics": self.engine.metrics_snapshot(),
             })
         elif op == "shutdown":
             self.shutdown = True
@@ -294,7 +299,6 @@ class Replica:
                 self._track[rid] = (req, len(req.generated))
             if req.done:
                 done.append(rid)
-                self._latencies.append(req.latency)
                 self.served += 1
         for rid in done:
             del self._track[rid]
@@ -314,7 +318,11 @@ class Replica:
 
     def _heartbeat(self) -> dict:
         cache = self.engine.cache
-        lats = self._latencies
+        # completed-request latencies live in the engine's obs histogram
+        # (recorded at Scheduler.record_token); nearest-rank percentiles so
+        # p99 of a handful of requests is an observed sample, not an
+        # interpolated value no request experienced
+        lat = self.engine.obs.metrics.histogram("request_latency_s")
         return {
             "type": "heartbeat", "name": self.cfg.name,
             "queued": len(self.engine.sched.queue) + len(self._pending_prefills),
@@ -323,8 +331,8 @@ class Replica:
             "reclaimable_blocks": cache.reclaimable_blocks(),
             "ewma_prefill_tok_s": self._ewma["prefill_tok_s"],
             "ewma_decode_tok_s": self._ewma["decode_tok_s"],
-            "p99_s": float(np.percentile(lats, 99)) if lats else 0.0,
-            "p50_s": float(np.percentile(lats, 50)) if lats else 0.0,
+            "p99_s": lat.percentile(99),
+            "p50_s": lat.percentile(50),
             "served": self.served,
         }
 

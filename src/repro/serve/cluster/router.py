@@ -207,6 +207,43 @@ class Router:
                 raise RuntimeError(f"stats timeout: no reply from {missing}")
         return {st.name: st.stats for st in want}
 
+    def fleet_metrics(self, stats: Optional[dict] = None) -> dict:
+        """Fleet-wide observability view over the replicas' unified metric
+        snapshots (the ``metrics`` field each stats event now carries).
+
+        Snapshots merge with :func:`repro.obs.merge_snapshots` — counters
+        add, gauges max, histograms concat — which is associative and
+        commutative, so ``replica ⊕ replica == fleet`` no matter how the
+        sweep ordered the replies.  Aggregate latency percentiles are then
+        *exact* over the fleet's completed requests (raw-sample histograms),
+        not an average of per-replica percentiles.  Router-side counters
+        (requeues, deaths) ride along since no replica can see them.
+        """
+        from repro.obs import merge_snapshots, percentile
+
+        if stats is None:
+            stats = self.collect_stats()
+        per_replica = {name: ev.get("metrics", {}) for name, ev in stats.items()}
+        fleet = merge_snapshots(*per_replica.values())
+        lat = fleet.get("request_latency_s", {}).get("values", [])
+        ttft = fleet.get("request_ttft_s", {}).get("values", [])
+        return {
+            "replicas": sorted(stats),
+            "fleet": fleet,
+            "per_replica": per_replica,
+            "requests_completed": len(lat),
+            "p50_latency_s": percentile(lat, 50),
+            "p99_latency_s": percentile(lat, 99),
+            "p50_ttft_s": percentile(ttft, 50),
+            "p99_ttft_s": percentile(ttft, 99),
+            "busy_s": {
+                name: ev["throughput"]["prefill_s"] + ev["throughput"]["decode_s"]
+                for name, ev in stats.items()
+            },
+            "requeues": self.requeues,
+            "deaths": self.deaths,
+        }
+
     def kill(self, name: str) -> None:
         """Fault injection: silence a replica (the router discovers the
         death through its liveness/heartbeat machinery, not through this

@@ -48,6 +48,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, QuantConfig
 from repro.models.lm import Runtime, apply_lm, init_cache
 from repro.nn.linear import deploy_linear
+from repro.obs import Obs
 from repro.serve.paged_cache import PagedKVCache
 from repro.serve.sampling import SampleConfig, sample_tokens
 from repro.serve.scheduler import Scheduler, ServeRequest
@@ -186,8 +187,12 @@ def _fresh_stats() -> dict:
 class _StatsMixin:
     def reset_stats(self) -> None:
         """Zero the throughput counters (benchmarks call this after a warmup
-        pass so compile time stays out of steady-state numbers)."""
+        pass so compile time stays out of steady-state numbers).  This is the
+        *one* reset path: engine stats, collected spans, live metrics, and —
+        via the paged subclass — cache counters all clear together, so a
+        benchmark phase can never leak counters into the next one."""
         self.stats = _fresh_stats()
+        self.obs.reset()
 
     def throughput(self) -> dict:
         """Derived tok/s split — the one place the stats contract turns into
@@ -216,6 +221,44 @@ class _StatsMixin:
             out["int_chain_fallback"] = len(rep.get("fallback", ()))
         return out
 
+    # -- unified metrics contract -------------------------------------------
+
+    def _jit_sites(self) -> dict:
+        """Named jitted entry points whose compile counts the registry tracks
+        (the PR 6 TTFT cliff was an unobserved per-shape recompile — the
+        ``jit_cache_size{fn=...}`` gauges make that class of bug a metric)."""
+        return {}
+
+    def _sync_metrics(self) -> None:
+        """Fold the engine's scattered runtime state — stats dict, derived
+        throughput, chain report, jit compile counts — into the registry.
+        Called lazily at snapshot time: nothing on the dispatch hot path ever
+        touches a metric object (per-request histograms are recorded at
+        completion, everything else is state the engine already keeps)."""
+        m = self.obs.metrics
+        tp = self.throughput()
+        for k in ("prefill_tokens", "decode_tokens", "decode_dispatches",
+                  "prefill_s", "decode_s"):
+            m.counter(f"serve_{k}").set(tp[k])
+        for k in ("prefill_tok_s", "decode_tok_s", "tok_s", "dispatches_per_token"):
+            m.gauge(f"serve_{k}").set(tp[k])
+        for k in ("int_chain_requant_dispatches", "int_chain_folded",
+                  "int_chain_chained", "int_chain_fallback"):
+            if k in tp:
+                m.gauge(k).set(tp[k])
+        for name, fn in self._jit_sites().items():
+            try:
+                m.gauge("jit_cache_size", {"fn": name}).set(fn._cache_size())
+            except Exception:
+                pass  # private jax API: degrade to "no compile-count gauge"
+
+    def metrics_snapshot(self) -> dict:
+        """The one ``snapshot()`` contract: sync engine state into the
+        registry, return the JSON-able view.  Consumed by ``--metrics-json``,
+        serve_bench, run.py, and the cluster stats event."""
+        self._sync_metrics()
+        return self.obs.metrics.snapshot()
+
 
 class ServeEngine(_StatsMixin):
     """Contiguous-cache baseline: per-token prefill + host-side argmax."""
@@ -231,12 +274,14 @@ class ServeEngine(_StatsMixin):
         greedy: bool = True,
         bos_id: int = 0,
         eos_id: Optional[int] = None,
+        obs: Optional[Obs] = None,
     ):
         self.arch = arch
         self.params = params
         self.batch = batch
         self.max_seq = max_seq
         self.rt = rt or Runtime()
+        self.obs = obs or Obs()
         self.greedy = greedy
         self.bos_id = bos_id
         self.eos_id = eos_id  # default for requests that don't set their own
@@ -251,6 +296,9 @@ class ServeEngine(_StatsMixin):
         self.recurrent = any(s.kind in ("rwkv6", "hymba") for s in arch.stacks)
         self.stats = _fresh_stats()
         self._decode = jax.jit(self._decode_fn)
+
+    def _jit_sites(self) -> dict:
+        return {"decode": self._decode}
 
     # Prefill is implemented as sequential cached steps over the prompt so the
     # slot-granular cache stays consistent under continuous batching (a
@@ -270,10 +318,12 @@ class ServeEngine(_StatsMixin):
         req.prompt = _normalize_prompt(req.prompt, self.bos_id)
         if req.eos_id is None:
             req.eos_id = self.eos_id
+        self.obs.trace.instant("submit", {"uid": req.uid, "prompt": len(req.prompt)})
         for i, s in enumerate(self.slots):
             if s is None:
                 self.slots[i] = req
-                self._prefill_slot(i, req)
+                with self.obs.trace.span("admit", {"uid": req.uid, "slot": i}):
+                    self._prefill_slot(i, req)
                 return True
         return False
 
@@ -293,6 +343,13 @@ class ServeEngine(_StatsMixin):
             req.done = True
             req.finished_at = time.perf_counter()
             self.slots[slot] = None
+            m = self.obs.metrics
+            m.counter("requests_completed").inc()
+            if req.submitted_at is not None:
+                m.histogram("request_latency_s").observe(req.latency)
+                if req.first_token_at is not None:
+                    m.histogram("request_ttft_s").observe(req.ttft)
+            self.obs.trace.instant("emit", {"uid": req.uid, "tokens": len(req.generated)})
             return True
         return False
 
@@ -305,15 +362,16 @@ class ServeEngine(_StatsMixin):
         # engine deferred it to the first tick and booked it under decode,
         # skewing decode_tok_s comparisons ~14%).
         t0 = time.perf_counter()
-        self.pos[slot] = 0
-        for t in req.prompt:
-            tok = np.zeros((self.batch, 1), np.int32)
-            tok[slot, 0] = t
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy())
-            )
-            self.pos[slot] += 1
-        last = np.asarray(jax.device_get(logits[slot, 0]))
+        with self.obs.trace.span("prefill_slot", {"uid": req.uid, "tokens": len(req.prompt)}):
+            self.pos[slot] = 0
+            for t in req.prompt:
+                tok = np.zeros((self.batch, 1), np.int32)
+                tok[slot, 0] = t
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy())
+                )
+                self.pos[slot] += 1
+            last = np.asarray(jax.device_get(logits[slot, 0]))
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += len(req.prompt)
         self._emit_token(slot, req, last)
@@ -331,11 +389,12 @@ class ServeEngine(_StatsMixin):
         if not live:
             return 0
         t0 = time.perf_counter()
-        tok = np.zeros((self.batch, 1), np.int32)
-        for i in live:
-            tok[i, 0] = self.slots[i].last_token
-        logits, self.cache = self._decode(self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy()))
-        ln = np.asarray(jax.device_get(logits[:, 0]))
+        with self.obs.trace.span("decode_tick", {"live": len(live)}):
+            tok = np.zeros((self.batch, 1), np.int32)
+            for i in live:
+                tok[i, 0] = self.slots[i].last_token
+            logits, self.cache = self._decode(self.params, jnp.asarray(tok), self.cache, jnp.asarray(self.pos.copy()))
+            ln = np.asarray(jax.device_get(logits[:, 0]))
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_tokens"] += len(live)
         self.stats["decode_dispatches"] += 1
@@ -439,6 +498,7 @@ class PagedServeEngine(_StatsMixin):
         eos_id: Optional[int] = None,
         decode_steps: int = 1,
         seed: int = 0,
+        obs: Optional[Obs] = None,
     ):
         if decode_steps < 1:
             raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
@@ -447,6 +507,7 @@ class PagedServeEngine(_StatsMixin):
         self.batch = batch
         self.max_seq = max_seq
         self.rt = rt or Runtime()
+        self.obs = obs or Obs()
         self.sample_cfg = sample or SampleConfig()
         self.bos_id = bos_id
         self.eos_id = eos_id  # default for requests that don't set their own
@@ -461,6 +522,7 @@ class PagedServeEngine(_StatsMixin):
         self.sched = Scheduler(
             batch, prefill_chunk=prefill_chunk,
             lockstep=bool(lockstep) if lockstep is not None else False,
+            obs=self.obs,
         )
         self._key = jax.random.PRNGKey(seed)
         self.stats = _fresh_stats()
@@ -473,6 +535,28 @@ class PagedServeEngine(_StatsMixin):
 
     def params_struct(self, params):
         return params
+
+    def reset_stats(self) -> None:
+        super().reset_stats()
+        self.cache.reset_counters()
+
+    def _jit_sites(self) -> dict:
+        return {
+            "prefill": self._prefill,
+            "decode": self._decode,
+            "megadecode": self._megadecode,
+        }
+
+    def _sync_metrics(self) -> None:
+        super()._sync_metrics()
+        m = self.obs.metrics
+        cc = self.cache.counters()
+        # peak_blocks is a watermark (fleet merge takes the max); the rest
+        # are monotone event counts
+        m.gauge("kv_peak_blocks").set(cc.pop("peak_blocks"))
+        for k, v in cc.items():
+            m.counter(f"kv_{k}").set(v)
+        m.gauge("kv_free_blocks").set(self.cache.free_blocks)
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
@@ -621,23 +705,26 @@ class PagedServeEngine(_StatsMixin):
         try:
             t0 = time.perf_counter()
             tok = marg = None
-            for chunk, start in self.sched.prefill_plan(slot):
-                self.cache.ensure_writable(slot, start, start + len(chunk))
-                sub = self.cache.slice_slot(slot)
-                tok, marg, new_pools = self._prefill(
-                    self.params, jnp.asarray(chunk[None, :]), sub,
-                    self.cache.bt_row(slot), jnp.int32(start), self._next_key(),
-                )
-                self.cache.merge_slot(slot, new_pools)
-            self.cache.lens[slot] = len(req.prompt)
-            tok_h, marg_h = jax.device_get((tok, marg))
-            self.stats["prefill_s"] += time.perf_counter() - t0
-            self.stats["prefill_tokens"] += len(req.prompt)
-            payload = {
-                "kv": self.cache.export_blocks(slot),
-                "first_token": int(tok_h[0]),
-                "margin": float(marg_h[0]),
-            }
+            with self.obs.trace.span("prefill_handoff", {"uid": req.uid}):
+                for chunk, start in self.sched.prefill_plan(slot):
+                    with self.obs.trace.span("prefill_chunk", {"uid": req.uid, "start": start}):
+                        self.cache.ensure_writable(slot, start, start + len(chunk))
+                        sub = self.cache.slice_slot(slot)
+                        tok, marg, new_pools = self._prefill(
+                            self.params, jnp.asarray(chunk[None, :]), sub,
+                            self.cache.bt_row(slot), jnp.int32(start), self._next_key(),
+                        )
+                        self.cache.merge_slot(slot, new_pools)
+                self.cache.lens[slot] = len(req.prompt)
+                tok_h, marg_h = jax.device_get((tok, marg))
+                self.stats["prefill_s"] += time.perf_counter() - t0
+                self.stats["prefill_tokens"] += len(req.prompt)
+                with self.obs.trace.span("kv_export", {"uid": req.uid}):
+                    payload = {
+                        "kv": self.cache.export_blocks(slot),
+                        "first_token": int(tok_h[0]),
+                        "margin": float(marg_h[0]),
+                    }
         finally:
             self.sched.slots[slot] = None
             req.prefilled = 0  # a requeued copy must be able to re-prefill
@@ -689,8 +776,9 @@ class PagedServeEngine(_StatsMixin):
         the prefix-adoption accounting."""
         self.cache.reset_slot(slot)
         t0 = time.perf_counter()
-        self.cache.import_blocks(slot, payload["kv"])
-        self.cache.allocate(slot, self._slot_tokens(req))
+        with self.obs.trace.span("kv_import", {"uid": req.uid, "slot": slot}):
+            self.cache.import_blocks(slot, payload["kv"])
+            self.cache.allocate(slot, self._slot_tokens(req))
         req.prefilled = len(req.prompt)
         req.margins.append(float(payload["margin"]))
         if self.prefix_share:
@@ -746,36 +834,42 @@ class PagedServeEngine(_StatsMixin):
         payload = self._handoffs.pop(req.uid, None)
         if payload is not None:
             return self._admit_handoff(slot, req, payload)
-        self.cache.reset_slot(slot)
-        adopted = 0
-        if self.prefix_share:
-            shared, blocks = self.cache.lookup_prefix(req.prompt)
-            resume = (shared // self.sched.prefill_chunk) * self.sched.prefill_chunk
-            if resume > 0:
-                blocks = blocks[: self.cache.blocks_needed(resume)]
-                self.cache.adopt_prefix(slot, resume, blocks)
-                req.prefilled = adopted = resume
-        self.cache.allocate(slot, self._slot_tokens(req))
-        t0 = time.perf_counter()
-        tok = marg = None
-        for chunk, start in self.sched.prefill_plan(slot):
-            self.cache.ensure_writable(slot, start, start + len(chunk))
-            sub = self.cache.slice_slot(slot)
-            tok, marg, new_pools = self._prefill(
-                self.params, jnp.asarray(chunk[None, :]), sub,
-                self.cache.bt_row(slot), jnp.int32(start), self._next_key(),
-            )
-            self.cache.merge_slot(slot, new_pools)
-        self.cache.lens[slot] = len(req.prompt)
-        if self.prefix_share:
-            self.cache.register_prefix(slot, req.prompt)
-        tok_h, marg_h = jax.device_get((tok, marg))
-        first = int(tok_h[0])
-        req.margins.append(float(marg_h[0]))
-        self.stats["prefill_s"] += time.perf_counter() - t0
-        # adopted tokens were never recomputed — throughput counts real work
-        self.stats["prefill_tokens"] += len(req.prompt) - adopted
-        self._on_admitted(slot, req)
+        tr = self.obs.trace
+        with tr.span("admit", {"uid": req.uid, "slot": slot, "prompt": len(req.prompt)}):
+            self.cache.reset_slot(slot)
+            adopted = 0
+            if self.prefix_share:
+                with tr.span("radix_lookup", {"uid": req.uid}):
+                    shared, blocks = self.cache.lookup_prefix(req.prompt)
+                resume = (shared // self.sched.prefill_chunk) * self.sched.prefill_chunk
+                if resume > 0:
+                    blocks = blocks[: self.cache.blocks_needed(resume)]
+                    self.cache.adopt_prefix(slot, resume, blocks)
+                    req.prefilled = adopted = resume
+            with tr.span("block_alloc", {"uid": req.uid}):
+                self.cache.allocate(slot, self._slot_tokens(req))
+            t0 = time.perf_counter()
+            tok = marg = None
+            for chunk, start in self.sched.prefill_plan(slot):
+                with tr.span("prefill_chunk", {"uid": req.uid, "start": start}):
+                    with tr.span("cow_preflight", {"uid": req.uid}):
+                        self.cache.ensure_writable(slot, start, start + len(chunk))
+                    sub = self.cache.slice_slot(slot)
+                    tok, marg, new_pools = self._prefill(
+                        self.params, jnp.asarray(chunk[None, :]), sub,
+                        self.cache.bt_row(slot), jnp.int32(start), self._next_key(),
+                    )
+                    self.cache.merge_slot(slot, new_pools)
+            self.cache.lens[slot] = len(req.prompt)
+            if self.prefix_share:
+                self.cache.register_prefix(slot, req.prompt)
+            tok_h, marg_h = jax.device_get((tok, marg))
+            first = int(tok_h[0])
+            req.margins.append(float(marg_h[0]))
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            # adopted tokens were never recomputed — throughput counts real work
+            self.stats["prefill_tokens"] += len(req.prompt) - adopted
+            self._on_admitted(slot, req)
         if self.sched.record_token(slot, first):
             self._release_slot(slot)
 
@@ -792,14 +886,16 @@ class PagedServeEngine(_StatsMixin):
             req.prefilled = L
         t0 = time.perf_counter()
         tok = marg = None
-        for lo in range(0, L, self.sched.prefill_chunk):
-            hi = min(lo + self.sched.prefill_chunk, L)
-            tok, marg, pools = self._prefill(
-                self.params, jnp.asarray(toks[:, lo:hi]), self.cache.pools,
-                self.cache.bt(), jnp.int32(lo), self._next_key(),
-            )
-            self.cache.pools = pools
-        firsts, margs = (np.asarray(a) for a in jax.device_get((tok, marg)))
+        with self.obs.trace.span("admit_group", {"requests": len(group), "prompt": L}):
+            for lo in range(0, L, self.sched.prefill_chunk):
+                hi = min(lo + self.sched.prefill_chunk, L)
+                with self.obs.trace.span("prefill_chunk", {"start": lo}):
+                    tok, marg, pools = self._prefill(
+                        self.params, jnp.asarray(toks[:, lo:hi]), self.cache.pools,
+                        self.cache.bt(), jnp.int32(lo), self._next_key(),
+                    )
+                    self.cache.pools = pools
+            firsts, margs = (np.asarray(a) for a in jax.device_get((tok, marg)))
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += L * len(group)
         for slot, req in group:
@@ -847,20 +943,23 @@ class PagedServeEngine(_StatsMixin):
         live = self.sched.live
         if not live:
             return 0
+        tr = self.obs.trace
         tok_in = np.zeros((self.batch,), np.int32)
-        for i in live:
-            tok_in[i] = self.sched.slots[i].last_token
-            # a donor's decode write can land in a block a prefix-sharer
-            # adopted — copy-on-write it out of the shared run first
-            self.cache.ensure_writable(i, int(self.cache.lens[i]), int(self.cache.lens[i]) + 1)
+        with tr.span("cow_preflight", {"live": len(live)}):
+            for i in live:
+                tok_in[i] = self.sched.slots[i].last_token
+                # a donor's decode write can land in a block a prefix-sharer
+                # adopted — copy-on-write it out of the shared run first
+                self.cache.ensure_writable(i, int(self.cache.lens[i]), int(self.cache.lens[i]) + 1)
         t0 = time.perf_counter()
-        toks, margs, pools = self._decode(
-            self.params, jnp.asarray(tok_in[:, None]), self.cache.pools,
-            self.cache.bt(), jnp.asarray(self.cache.lens.copy()), self._next_key(),
-        )
-        self.cache.pools = pools
-        # one host round-trip for ids + margins (decode stays two tiny arrays)
-        out, marg = (np.asarray(a) for a in jax.device_get((toks, margs)))
+        with tr.span("decode_tick", {"live": len(live)}):
+            toks, margs, pools = self._decode(
+                self.params, jnp.asarray(tok_in[:, None]), self.cache.pools,
+                self.cache.bt(), jnp.asarray(self.cache.lens.copy()), self._next_key(),
+            )
+            self.cache.pools = pools
+            # one host round-trip for ids + margins (decode stays two tiny arrays)
+            out, marg = (np.asarray(a) for a in jax.device_get((toks, margs)))
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_tokens"] += len(live)
         self.stats["decode_dispatches"] += 1
@@ -894,28 +993,31 @@ class PagedServeEngine(_StatsMixin):
         live = self.sched.live
         if not live:
             return 0
+        tr = self.obs.trace
         N = self.decode_steps
         tok_in = np.zeros((self.batch,), np.int32)
         active = np.zeros((self.batch,), bool)
         rem = np.zeros((self.batch,), np.int32)
         eos = np.full((self.batch,), -1, np.int32)  # -1: token ids are >= 0
-        for i in live:
-            req = self.sched.slots[i]
-            tok_in[i] = req.last_token
-            active[i] = True
-            rem[i] = req.max_new - len(req.generated)
-            if req.eos_id is not None:
-                eos[i] = req.eos_id
-            lo = int(self.cache.lens[i])
-            self.cache.ensure_writable(i, lo, lo + min(N, int(rem[i])))
+        with tr.span("cow_preflight", {"live": len(live)}):
+            for i in live:
+                req = self.sched.slots[i]
+                tok_in[i] = req.last_token
+                active[i] = True
+                rem[i] = req.max_new - len(req.generated)
+                if req.eos_id is not None:
+                    eos[i] = req.eos_id
+                lo = int(self.cache.lens[i])
+                self.cache.ensure_writable(i, lo, lo + min(N, int(rem[i])))
         t0 = time.perf_counter()
-        toks, margs, emitted, pools = self._megadecode(
-            self.params, jnp.asarray(tok_in), self.cache.pools, self.cache.bt(),
-            jnp.asarray(self.cache.lens.copy()), jnp.asarray(active),
-            jnp.asarray(rem), jnp.asarray(eos), self._next_key(),
-        )
-        self.cache.pools = pools
-        out, marg, em = (np.asarray(a) for a in jax.device_get((toks, margs, emitted)))
+        with tr.span("decode_megastep", {"live": len(live), "steps": N}):
+            toks, margs, emitted, pools = self._megadecode(
+                self.params, jnp.asarray(tok_in), self.cache.pools, self.cache.bt(),
+                jnp.asarray(self.cache.lens.copy()), jnp.asarray(active),
+                jnp.asarray(rem), jnp.asarray(eos), self._next_key(),
+            )
+            self.cache.pools = pools
+            out, marg, em = (np.asarray(a) for a in jax.device_get((toks, margs, emitted)))
         dt = time.perf_counter() - t0
         total = 0
         for j in range(N):

@@ -312,6 +312,28 @@ class PagedKVCache:
         }
         self.fully_paged = names <= POOL_KEYS
 
+    # -- counters ------------------------------------------------------------
+
+    _COUNTER_FIELDS = (
+        "peak_blocks", "cow_copies", "pool_rebuilds", "prefix_hits",
+        "prefix_hit_tokens", "bt_full_uploads", "bt_row_patches",
+        "migrated_blocks_out", "migrated_blocks_in",
+        "migration_bytes_out", "migration_bytes_in",
+    )
+
+    def counters(self) -> dict:
+        """All cache event counters as one dict — the engine's metrics sync
+        and the cluster stats event both read this instead of cherry-picking
+        attributes (which is how counters leaked out of reset paths)."""
+        return {k: getattr(self, k) for k in self._COUNTER_FIELDS}
+
+    def reset_counters(self) -> None:
+        """Zero every event counter (part of the engine's unified
+        ``reset_stats`` path; benchmarks used to zero a hand-picked subset
+        and leak the rest across phases)."""
+        for k in self._COUNTER_FIELDS:
+            setattr(self, k, 0)
+
     # -- allocator ----------------------------------------------------------
 
     def blocks_needed(self, n_tokens: int) -> int:

@@ -84,12 +84,18 @@ class ServeRequest:
 
 
 class Scheduler:
-    def __init__(self, n_slots: int, *, prefill_chunk: int = 32, lockstep: bool = False):
+    def __init__(self, n_slots: int, *, prefill_chunk: int = 32, lockstep: bool = False,
+                 obs=None):
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         self.n_slots = n_slots
         self.prefill_chunk = prefill_chunk
         self.lockstep = lockstep
+        # observability bundle (repro.obs.Obs) shared with the owning engine:
+        # the scheduler is where requests enter and complete, so the
+        # per-request latency histograms and submit/emit trace instants are
+        # recorded here rather than in any engine.
+        self.obs = obs
         self.queue: deque[ServeRequest] = deque()
         self.slots: List[Optional[ServeRequest]] = [None] * n_slots
 
@@ -107,6 +113,8 @@ class Scheduler:
     def submit(self, req: ServeRequest) -> None:
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
+        if self.obs is not None:
+            self.obs.trace.instant("submit", {"uid": req.uid, "prompt": len(req.prompt)})
 
     def admissions(self, can_admit: Callable[[ServeRequest], bool]) -> List[Tuple[int, "ServeRequest"]]:
         """Assign queued requests to slots; returns the new (slot, request)
@@ -176,5 +184,15 @@ class Scheduler:
             req.done = True
             req.finished_at = time.perf_counter()
             self.slots[slot] = None
+            if self.obs is not None:
+                m = self.obs.metrics
+                m.counter("requests_completed").inc()
+                if req.submitted_at is not None:
+                    m.histogram("request_latency_s").observe(req.latency)
+                    if req.first_token_at is not None:
+                        m.histogram("request_ttft_s").observe(req.ttft)
+                self.obs.trace.instant(
+                    "emit", {"uid": req.uid, "tokens": len(req.generated)}
+                )
             return True
         return False

@@ -128,6 +128,13 @@ class SpecServeEngine(PagedServeEngine):
         """Accepted draft tokens / proposed draft tokens, engine lifetime."""
         return self.spec_stats["accepted"] / max(self.spec_stats["proposed"], 1)
 
+    def _sync_metrics(self) -> None:
+        super()._sync_metrics()
+        m = self.obs.metrics
+        for k, v in self.spec_stats.items():
+            m.counter(f"spec_{k}").set(v)
+        m.gauge("spec_acceptance_rate").set(self.acceptance_rate())
+
     def spec_active(self) -> bool:
         return self.spec_supported and self._accept_ema >= self.min_accept
 
@@ -172,25 +179,31 @@ class SpecServeEngine(PagedServeEngine):
         if not live:
             return 0
         k = self.spec_k
+        tr = self.obs.trace
         t0 = time.perf_counter()
-        lens0 = self.cache.lens.copy()
-        for i in live:
-            # the round writes [lens, lens + k + 1): draft inputs then the
-            # verify span; declare it once so shared blocks CoW up front and
-            # the watermark records how far garbage may extend on rejection
-            self.cache.allocate(i, int(lens0[i]) + k + 1)
-            self.cache.ensure_writable(i, int(lens0[i]), int(lens0[i]) + k + 1)
-        tok_in = np.zeros((self.batch,), np.int32)
-        for i in live:
-            tok_in[i] = self.sched.slots[i].last_token
-        proposals = self.drafter.propose(self, live, tok_in, k)  # (B, k)
-        tokens = np.concatenate([tok_in[:, None], proposals], axis=1)
-        am_d, mg_d, pools = self._verify(
-            self.params, jnp.asarray(tokens), self.cache.pools, self.cache.bt(),
-            jnp.asarray(lens0),
-        )
-        self.cache.pools = pools
-        am, mg = (np.asarray(a) for a in jax.device_get((am_d, mg_d)))
+        with tr.span("spec_round", {"live": len(live), "k": k, "probe": probe}):
+            lens0 = self.cache.lens.copy()
+            with tr.span("cow_preflight", {"live": len(live)}):
+                for i in live:
+                    # the round writes [lens, lens + k + 1): draft inputs then
+                    # the verify span; declare it once so shared blocks CoW up
+                    # front and the watermark records how far garbage may
+                    # extend on rejection
+                    self.cache.allocate(i, int(lens0[i]) + k + 1)
+                    self.cache.ensure_writable(i, int(lens0[i]), int(lens0[i]) + k + 1)
+            tok_in = np.zeros((self.batch,), np.int32)
+            for i in live:
+                tok_in[i] = self.sched.slots[i].last_token
+            with tr.span("spec_draft", {"live": len(live), "k": k}):
+                proposals = self.drafter.propose(self, live, tok_in, k)  # (B, k)
+            tokens = np.concatenate([tok_in[:, None], proposals], axis=1)
+            with tr.span("spec_verify", {"live": len(live)}):
+                am_d, mg_d, pools = self._verify(
+                    self.params, jnp.asarray(tokens), self.cache.pools, self.cache.bt(),
+                    jnp.asarray(lens0),
+                )
+                self.cache.pools = pools
+                am, mg = (np.asarray(a) for a in jax.device_get((am_d, mg_d)))
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_dispatches"] += 2  # draft scan + batched verify
 
